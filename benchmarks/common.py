@@ -1,0 +1,63 @@
+"""Shared benchmark context: one world/service per encoder, cached engines.
+
+Sizes follow the paper where feasible on CPU: k=10, tau=0.2, H_max=5000,
+fuzzy 16/2048 buckets (the paper's 64/8192 scope ratio), 100k-passage
+synthetic corpus extrapolated to the 49.2M target by the calibrated latency
+model (serving/latency.py).  BENCH_FAST=1 shrinks everything ~4x for CI.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+from repro.core.has import HasConfig
+from repro.data.synthetic import DATASETS, ENCODERS, SyntheticWorld, WorldConfig
+from repro.serving.engine import RetrievalService
+from repro.serving.latency import LatencyModel
+
+FAST = bool(int(os.environ.get("BENCH_FAST", "0")))
+
+N_ENTITIES = 4000 if FAST else 20000
+N_QUERIES = 1200 if FAST else 5000
+K = 10
+TAU = 0.2
+H_MAX = 1200 if FAST else 5000
+N_BUCKETS = 512 if FAST else 2048
+NPROBE = 4 if FAST else 16          # == the paper's 64/8192 scope ratio
+
+
+@functools.lru_cache(maxsize=3)
+def get_service(encoder: str = "contriever") -> RetrievalService:
+    world = SyntheticWorld(WorldConfig(n_entities=N_ENTITIES, seed=0,
+                                       **ENCODERS[encoder]))
+    return RetrievalService(world, LatencyModel(), k=K,
+                            chunk=min(32768, world.cfg.n_docs))
+
+
+@functools.lru_cache(maxsize=16)
+def get_queries(dataset: str = "granola", n: int = N_QUERIES,
+                encoder: str = "contriever", seed: int = 1):
+    ds = DATASETS[dataset]
+    svc = get_service(encoder)
+    return tuple(svc.world.sample_queries(
+        n, pattern=ds["pattern"], zipf_a=ds["zipf_a"],
+        p_uncovered=ds["p_uncovered"], seed=seed))
+
+
+def has_config(**kw) -> HasConfig:
+    base = dict(k=K, tau=TAU, h_max=H_MAX, nprobe=NPROBE,
+                n_buckets=N_BUCKETS, d=64)
+    base.update(kw)
+    return HasConfig(**base)
+
+
+def row(name: str, latency_s: float, derived) -> dict:
+    """One CSV row: name, us_per_call, derived metric."""
+    return {"name": name, "us_per_call": latency_s * 1e6, "derived": derived}
+
+
+def fmt_rows(rows) -> str:
+    out = ["name,us_per_call,derived"]
+    for r in rows:
+        out.append(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    return "\n".join(out)

@@ -1,0 +1,28 @@
+"""Fig 11: U-shaped influence of k (draft size) on accuracy/validation."""
+from __future__ import annotations
+
+from repro.core.has import HasConfig
+from repro.serving.engine import HasEngine
+
+from benchmarks.common import (H_MAX, N_BUCKETS, NPROBE, get_queries,
+                               get_service, row)
+
+
+def run():
+    rows = []
+    svc = get_service()
+    qs = list(get_queries("granola"))
+    for k in (3, 5, 10, 20, 40):
+        svc_k = svc if k == svc.k else None
+        # the service is k-specific (full search returns k docs)
+        from repro.serving.engine import RetrievalService
+        if svc_k is None:
+            svc_k = RetrievalService(svc.world, svc.latency, k=k,
+                                     chunk=svc.chunk)
+        cfg = HasConfig(k=k, tau=0.2, h_max=H_MAX, nprobe=NPROBE,
+                        n_buckets=N_BUCKETS, d=64)
+        s = HasEngine(svc_k, cfg).serve(qs, dataset="granola").summary()
+        rows.append(row(f"fig11/k={k}", s["avg_latency_s"],
+                        f"ra={s['ra_qwen3-8b']:.4f};car={s['car']:.4f};"
+                        f"dar={s['dar']:.4f}"))
+    return rows

@@ -1,0 +1,28 @@
+"""Fig 13: HaS plugged into the Auto-RAG 2-hop agentic pipeline."""
+from __future__ import annotations
+
+from benchmarks.common import FAST, get_service, has_config, row
+from repro.serving.agentic import AutoRagPipeline, TwoHopDataset
+from repro.serving.engine import HasEngine
+
+
+def run():
+    rows = []
+    svc = get_service()
+    ds = TwoHopDataset(svc.world, seed=0)
+    n = 300 if FAST else 1200
+    complex_qs = ds.sample(n, seed=2)
+
+    base = AutoRagPipeline(ds, None, svc).run(complex_qs)
+    rows.append(row("fig13/auto-rag/full", base["retrieval_latency"],
+                    f"acc={base['accuracy']:.4f};"
+                    f"e2e={base['e2e_latency']:.3f}s"))
+
+    has = HasEngine(svc, has_config())
+    plug = AutoRagPipeline(ds, has, svc).run(complex_qs)
+    dlat = (plug["retrieval_latency"] - base["retrieval_latency"]) \
+        / base["retrieval_latency"]
+    rows.append(row("fig13/auto-rag/HaS", plug["retrieval_latency"],
+                    f"acc={plug['accuracy']:.4f};dar={plug['dar']:.4f};"
+                    f"dLat={dlat:+.2%};e2e={plug['e2e_latency']:.3f}s"))
+    return rows

@@ -1,0 +1,103 @@
+"""Automatic paper-vs-reproduction check over results/benchmarks.json.
+
+Each entry pins a number from the paper (table, metric) against the
+benchmark row that reproduces it, with a tolerance band and a direction
+('sign' entries only check the direction of the effect — the synthetic
+world reproduces mechanisms, not third-digit point estimates).
+
+  PYTHONPATH=src python -m benchmarks.paper_compare
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+# (row name, field-in-derived|None=us_per_call, paper value, mode, tolerance)
+# mode: 'abs' |value-paper|<=tol ; 'rel' within tol fraction; 'sign' same sign
+CHECKS = [
+    # Table III / IV — the headline numbers
+    ("t3/granola/full", None, 1.3845e6, "rel", 0.05),
+    ("t3/granola/HaS", "dLat", -0.2374, "sign", None),
+    ("t3/popqa/HaS", "dLat", -0.3699, "sign", None),
+    ("t4/granola/HaS", "car", 0.8877, "abs", 0.06),
+    ("t4/granola/HaS", "l@da", 0.0555, "abs", 0.03),
+    ("t4/granola/HaS", "l@dr", 1.4896, "abs", 0.15),
+    ("t4/granola/crag", "dar", 0.422, "abs", 0.10),
+    ("t3/granola/crag", "dLat", +0.0976, "sign", None),
+    ("t3/popqa/crag", "dLat", +0.3133, "sign", None),
+    ("t4/granola/crag", "l@da", 0.7006, "abs", 0.08),
+    ("t4/granola/crag", "l@dr", 2.1168, "abs", 0.10),
+    # reuse methods: modest negative deltas (sign + loose band)
+    ("t3/granola/proximity", "dLat", -0.0476, "abs", 0.06),
+    ("t3/granola/saferadius", "dLat", -0.0705, "abs", 0.06),
+    ("t3/granola/mincache", "dLat", -0.0578, "abs", 0.12),
+    # Table II: HaS on top of cloud ANNS keeps improving latency
+    ("t2/granola/HaS+ivf_cloud", "dLat", -0.1524, "sign", None),
+    ("t2/popqa/HaS+ivf_cloud", "dLat", -0.2873, "sign", None),
+    ("t2/granola/HaS+scann_cloud", "dLat", -0.0755, "sign", None),
+    # Table VII: compression collapse at tau=0.2 and recovery at tau=0.6
+    ("t7/frac=0.01/tau=0.2", "dar", 0.6738, "sign-high", 0.5),
+    ("t7/frac=0.01/tau=0.6", "dar", 0.2571, "sign-low", 0.5),
+    # Fig 13: agentic latency cut
+    ("fig13/auto-rag/HaS", "dLat", -0.694, "sign", None),
+]
+
+
+def _field(row, field):
+    if field is None:
+        return row["us_per_call"]
+    d = str(row["derived"])
+    m = re.search(rf"{re.escape(field)}=([+-]?[0-9.]+)%?", d)
+    if not m:
+        return None
+    v = float(m.group(1))
+    if f"{field}=" in d and "%" in d.split(f"{field}=")[1][:12]:
+        v /= 100.0
+    return v
+
+
+def compare(rows) -> list[dict]:
+    by_name = {}
+    for r in rows:
+        by_name[r["name"]] = r
+    out = []
+    for name, field, paper, mode, tol in CHECKS:
+        row = by_name.get(name)
+        rec = {"check": f"{name}:{field or 'latency'}", "paper": paper,
+               "ours": None, "status": "MISSING"}
+        if row is not None:
+            v = _field(row, field)
+            rec["ours"] = v
+            if v is None:
+                rec["status"] = "NOFIELD"
+            elif mode == "abs":
+                rec["status"] = "OK" if abs(v - paper) <= tol else "DELTA"
+            elif mode == "rel":
+                rec["status"] = "OK" if abs(v - paper) <= tol * abs(paper) \
+                    else "DELTA"
+            elif mode == "sign":
+                rec["status"] = "OK" if (v < 0) == (paper < 0) else "FLIP"
+            elif mode == "sign-high":   # reproduces 'degenerately high'
+                rec["status"] = "OK" if v >= paper - tol else "DELTA"
+            elif mode == "sign-low":    # reproduces 'restored low'
+                rec["status"] = "OK" if v <= paper + tol else "DELTA"
+        out.append(rec)
+    return out
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/benchmarks.json"
+    rows = json.load(open(path))
+    results = compare(rows)
+    n_ok = sum(r["status"] == "OK" for r in results)
+    print(f"{'check':42s} {'paper':>10s} {'ours':>10s}  status")
+    for r in results:
+        ours = f"{r['ours']:.4f}" if isinstance(r["ours"], float) else "-"
+        print(f"{r['check']:42s} {r['paper']:10.4f} {ours:>10s}  "
+              f"{r['status']}")
+    print(f"\n{n_ok}/{len(results)} paper checks OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Fig 1 analogue + kernel accounting: retrieval cost vs generation TTFT.
+
+Measures the real (CPU) wall time of the jitted retrieval substrate at
+several corpus scales, derives the paper-scale latency via the calibrated
+bandwidth model, and reports HLO flops/bytes of the retrieval step (the
+per-kernel roofline terms used in EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import FAST, get_service, row
+from repro.retrieval.flat import chunked_flat_search
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    rows = []
+    svc = get_service()
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 64)), jnp.float32)
+
+    for n in (10_000, 50_000, svc.world.cfg.n_docs):
+        corpus = svc.corpus[:n]
+        fn = jax.jit(lambda c, qq: chunked_flat_search(c, qq, 10, 8192))
+        t = _time(fn, corpus, q)
+        lowered = fn.lower(corpus, q)
+        cost = lowered.compile().cost_analysis()
+        rows.append(row(
+            f"roofline/flat_scan/n={n}", t,
+            f"flops={cost.get('flops', 0):.3e};"
+            f"bytes={cost.get('bytes accessed', 0):.3e};"
+            f"GB/s={n * 64 * 4 / t / 1e9:.2f}"))
+
+    # paper-scale extrapolation (Fig 1's point: retrieval >> bare-LLM TTFT)
+    full_t = svc.latency.full_scan_time()
+    rows.append(row("roofline/full_db_49.2M_extrapolated", full_t,
+                    f"vs_bare_llm_ttft~0.1s_x{full_t / 0.1:.1f}"))
+
+    # HaS fast path budget: cache scan + validation at paper scale
+    from repro.core.has import HasConfig, init_has_state, speculate
+    from repro.retrieval.ivf import build_ivf
+    cfg = HasConfig(k=10, tau=0.2, h_max=5000, nprobe=16, n_buckets=512,
+                    d=64)
+    state = init_has_state(cfg)
+    index = build_ivf(svc.corpus[:50_000], 512, seed=0)
+    qv = q[0]
+    speculate(cfg, state, index, qv)  # compile
+    t0 = time.perf_counter()
+    for _ in range(10):
+        out = speculate(cfg, state, index, qv)
+    jax.block_until_ready(out)
+    t_spec = (time.perf_counter() - t0) / 10
+    rows.append(row("roofline/has_fast_path", t_spec,
+                    f"doc_store={cfg.doc_cap};H={cfg.h_max}"))
+    return rows

@@ -1,0 +1,60 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one row per table entry) and writes
+results/benchmarks.json.  BENCH_FAST=1 shrinks the world ~4x.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig11_k_sweep, fig13_agentic, retrieval_roofline,
+                            table2_anns, table3_reuse, table5_scattered,
+                            table6_fuzzy_ablation, table7_compression,
+                            table8_tau_encoders, table9_cache_size)
+    from benchmarks.common import fmt_rows
+
+    modules = [
+        ("table3_reuse (Tables III+IV)", table3_reuse),
+        ("table2_anns (Table II)", table2_anns),
+        ("table5_scattered (Table V)", table5_scattered),
+        ("table6_fuzzy_ablation (Table VI)", table6_fuzzy_ablation),
+        ("table7_compression (Table VII)", table7_compression),
+        ("table8_tau_encoders (Table VIII)", table8_tau_encoders),
+        ("table9_cache_size (Table IX)", table9_cache_size),
+        ("fig11_k_sweep (Fig 11)", fig11_k_sweep),
+        ("fig13_agentic (Fig 13)", fig13_agentic),
+        ("retrieval_roofline (Fig 1)", retrieval_roofline),
+    ]
+    all_rows = []
+    for name, mod in modules:
+        t0 = time.time()
+        rows = mod.run()
+        all_rows.extend(rows)
+        print(f"# {name}: {len(rows)} rows in {time.time() - t0:.1f}s",
+              flush=True)
+        print(fmt_rows(rows), flush=True)
+        print()
+
+    os.makedirs("results", exist_ok=True)
+    with open("results/benchmarks.json", "w") as f:
+        json.dump(all_rows, f, indent=1)
+    print(f"# total rows: {len(all_rows)} -> results/benchmarks.json")
+
+    # automatic paper-vs-repro validation table
+    from benchmarks.paper_compare import compare
+    print("\n# paper-claim checks")
+    results = compare(all_rows)
+    for r in results:
+        ours = f"{r['ours']:.4f}" if isinstance(r["ours"], float) else "-"
+        print(f"{r['check']:42s} paper={r['paper']:10.4f} ours={ours:>10s} "
+              f"{r['status']}")
+    n_ok = sum(r["status"] == "OK" for r in results)
+    print(f"# {n_ok}/{len(results)} paper checks OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Table II: HaS vs ANNS methods at edge (♠) and cloud (♦) scopes."""
+from __future__ import annotations
+
+from benchmarks.common import (N_BUCKETS, get_queries, get_service,
+                               has_config, row)
+from repro.serving.engine import ANNSEngine, FullRetrievalEngine, HasEngine
+
+
+def run():
+    rows = []
+    for dataset in ("granola", "popqa"):
+        svc = get_service()
+        qs = list(get_queries(dataset))
+
+        # ♠: tiny-scope ANNS on the edge, replacing HaS (no validation)
+        for method in ("ivf", "scann"):
+            eng = ANNSEngine(svc, method, n_buckets=N_BUCKETS,
+                             nprobe=max(2, N_BUCKETS // 16), on_edge=True)
+            s = eng.serve(qs, dataset=dataset).summary()
+            rows.append(row(f"t2/{dataset}/{method}_edge",
+                            s["avg_latency_s"], round(s["ra_qwen3-8b"], 4)))
+
+        has = HasEngine(svc, has_config())
+        s_has = has.serve(qs, dataset=dataset).summary()
+        rows.append(row(f"t2/{dataset}/HaS", s_has["avg_latency_s"],
+                        round(s_has["ra_qwen3-8b"], 4)))
+
+        # ♦: optimized-scope ANNS replacing the cloud full retrieval,
+        # alone and as HaS's fallback
+        for method in ("ivf", "scann"):
+            nprobe_c = max(8, N_BUCKETS // 3)
+            cloud = ANNSEngine(svc, method, n_buckets=N_BUCKETS,
+                               nprobe=nprobe_c, on_edge=False)
+            s = cloud.serve(qs, dataset=dataset).summary()
+            rows.append(row(f"t2/{dataset}/{method}_cloud",
+                            s["avg_latency_s"], round(s["ra_qwen3-8b"], 4)))
+            combo = HasEngine(svc, has_config(), fallback=ANNSEngine(
+                svc, method, n_buckets=N_BUCKETS,
+                nprobe=nprobe_c, on_edge=False))
+            sc = combo.serve(qs, dataset=dataset).summary()
+            delta = (sc["avg_latency_s"] - s["avg_latency_s"]) \
+                / s["avg_latency_s"]
+            rows.append(row(f"t2/{dataset}/HaS+{method}_cloud",
+                            sc["avg_latency_s"],
+                            f"ra={sc['ra_qwen3-8b']:.4f};dLat={delta:+.2%}"))
+    return rows

@@ -1,0 +1,43 @@
+"""Tables III + IV: HaS vs reuse-based methods + CRAG; DAR/L@DA/L@DR."""
+from __future__ import annotations
+
+from benchmarks.common import get_queries, get_service, has_config, row
+from repro.serving.engine import (CRAGEngine, FullRetrievalEngine, HasEngine,
+                                  ReuseEngine)
+
+RESULTS = {}
+
+
+def run():
+    rows = []
+    for dataset in ("granola", "popqa"):
+        svc = get_service()
+        qs = list(get_queries(dataset))
+        base = FullRetrievalEngine(svc).serve(qs, dataset=dataset).summary()
+        rows.append(row(f"t3/{dataset}/full", base["avg_latency_s"],
+                        round(base["ra_qwen3-8b"], 4)))
+
+        engines = {
+            "proximity": ReuseEngine(svc, "proximity", theta=0.65),
+            "mincache": ReuseEngine(svc, "mincache", t_lex=0.95, t_sem=0.645),
+            "saferadius": ReuseEngine(svc, "saferadius", alpha=4.0),
+            "crag": CRAGEngine(svc, has_config()),
+            "HaS": HasEngine(svc, has_config()),
+        }
+        for name, eng in engines.items():
+            s = eng.serve(qs, dataset=dataset).summary()
+            RESULTS[(dataset, name)] = s
+            dlat = (s["avg_latency_s"] - base["avg_latency_s"]) \
+                / base["avg_latency_s"]
+            rows.append(row(
+                f"t3/{dataset}/{name}", s["avg_latency_s"],
+                f"ra={s['ra_qwen3-8b']:.4f};hit={s['doc_hit_rate']:.4f};"
+                f"dLat={dlat:+.2%}"))
+        # Table IV extras
+        for name in ("crag", "HaS"):
+            s = RESULTS[(dataset, name)]
+            rows.append(row(
+                f"t4/{dataset}/{name}", s["avg_latency_s"],
+                f"dar={s['dar']:.4f};l@da={s['l_at_da']:.4f};"
+                f"l@dr={s['l_at_dr']:.4f};car={s['car']:.4f}"))
+    return rows

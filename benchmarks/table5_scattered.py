@@ -1,0 +1,28 @@
+"""Table V: scattered-query datasets (TriviaQA/SQuAD-like)."""
+from __future__ import annotations
+
+from benchmarks.common import get_queries, get_service, has_config, row
+from repro.serving.engine import FullRetrievalEngine, HasEngine, ReuseEngine
+
+
+def run():
+    rows = []
+    for dataset in ("triviaqa", "squad"):
+        svc = get_service()
+        qs = list(get_queries(dataset))
+        base = FullRetrievalEngine(svc).serve(qs, dataset=dataset).summary()
+        rows.append(row(f"t5/{dataset}/full", base["avg_latency_s"],
+                        round(base["ra_qwen3-8b"], 4)))
+        engines = {
+            "proximity": ReuseEngine(svc, "proximity", theta=0.65),
+            "mincache": ReuseEngine(svc, "mincache", t_lex=0.95, t_sem=0.645),
+            "saferadius": ReuseEngine(svc, "saferadius", alpha=4.0),
+            "HaS": HasEngine(svc, has_config()),
+        }
+        for name, eng in engines.items():
+            s = eng.serve(qs, dataset=dataset).summary()
+            dlat = (s["avg_latency_s"] - base["avg_latency_s"]) \
+                / base["avg_latency_s"]
+            rows.append(row(f"t5/{dataset}/{name}", s["avg_latency_s"],
+                            f"ra={s['ra_qwen3-8b']:.4f};dLat={dlat:+.2%}"))
+    return rows

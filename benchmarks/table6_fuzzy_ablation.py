@@ -1,0 +1,37 @@
+"""Table VI: fuzzy channel ablation — validation (V) and enhancement (E)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import get_queries, get_service, has_config, row
+from repro.core.has import cache_update, init_has_state
+from repro.serving.engine import HasEngine
+
+
+def _prefill_cache(engine, svc, n=200, seed=99):
+    """Paper footnote 7: pre-fill the cache with random queries so the
+    no-fuzzy-validation setting doesn't trivially fail on cold start."""
+    import jax.numpy as jnp
+    qs = svc.world.sample_queries(n, pattern="zipf", seed=seed)
+    for q in qs:
+        ids, vecs, _ = svc.full_search(q["emb"])
+        engine.state = cache_update(
+            engine.cfg, engine.state, jnp.asarray(q["emb"]),
+            jnp.asarray(ids.astype(np.int32)), jnp.asarray(vecs))
+
+
+def run():
+    rows = []
+    svc = get_service()
+    qs = list(get_queries("granola"))
+    for v, e in ((False, False), (False, True), (True, False), (True, True)):
+        eng = HasEngine(svc, has_config(use_fuzzy_validation=v,
+                                        use_fuzzy_enhancement=e))
+        if not v:
+            _prefill_cache(eng, svc)
+        s = eng.serve(qs, dataset="granola").summary()
+        rows.append(row(
+            f"t6/V={int(v)}E={int(e)}", s["avg_latency_s"],
+            f"ra={s['ra_qwen3-8b']:.4f};dar={s['dar']:.4f};"
+            f"car={s['car']:.4f};ra@da={s['ra_at_da']:.4f}"))
+    return rows

@@ -1,0 +1,21 @@
+"""Table VIII: tau sweep x encoder robustness."""
+from __future__ import annotations
+
+from benchmarks.common import get_queries, get_service, has_config, row
+from repro.serving.engine import FullRetrievalEngine, HasEngine
+
+
+def run():
+    rows = []
+    for encoder in ("contriever", "bge-large", "e5-base"):
+        svc = get_service(encoder)
+        qs = list(get_queries("granola", encoder=encoder))
+        base = FullRetrievalEngine(svc).serve(qs[:1000]).summary()
+        rows.append(row(f"t8/{encoder}/full", base["avg_latency_s"],
+                        round(base["ra_qwen3-8b"], 4)))
+        for tau in (0.1, 0.2, 0.3):
+            eng = HasEngine(svc, has_config(tau=tau))
+            s = eng.serve(qs, dataset="granola").summary()
+            rows.append(row(f"t8/{encoder}/tau={tau}", s["avg_latency_s"],
+                            round(s["ra_qwen3-8b"], 4)))
+    return rows

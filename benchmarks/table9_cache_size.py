@@ -1,0 +1,22 @@
+"""Table IX: cache size H_max vs efficiency (+ memory footprint)."""
+from __future__ import annotations
+
+from benchmarks.common import FAST, get_queries, get_service, has_config, row
+from repro.core.has import cache_memory_bytes
+from repro.serving.engine import HasEngine
+
+
+def run():
+    rows = []
+    svc = get_service()
+    qs = list(get_queries("granola"))
+    sizes = (400, 600, 800, 1200) if FAST else (2000, 3000, 4000, 5000)
+    for h in sizes:
+        cfg = has_config(h_max=h)
+        s = HasEngine(svc, cfg).serve(qs, dataset="granola").summary()
+        rows.append(row(
+            f"t9/H={h}", s["avg_latency_s"],
+            f"dar={s['dar']:.4f};l@da={s['l_at_da']:.4f};"
+            f"l@dr={s['l_at_dr']:.4f};"
+            f"mem={cache_memory_bytes(cfg) / 1e6:.1f}MB"))
+    return rows

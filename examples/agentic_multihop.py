@@ -1,0 +1,46 @@
+"""HaS inside an Auto-RAG-style agentic pipeline (paper §IV-E II, Fig 13/14).
+
+    PYTHONPATH=src python examples/agentic_multihop.py [n_complex_queries]
+
+Complex 2-hop queries are decomposed into sub-queries; every sub-query is
+intercepted by HaS with zero pipeline modification.  Decomposed sub-queries
+concentrate on hub entities, so the draft acceptance rate — and the latency
+cut — exceed the single-hop setting (the paper reports -69.4%).
+"""
+import sys
+
+from repro.core.has import HasConfig
+from repro.data.synthetic import SyntheticWorld, WorldConfig
+from repro.serving.agentic import AutoRagPipeline, TwoHopDataset
+from repro.serving.engine import HasEngine, RetrievalService
+from repro.serving.latency import LatencyModel
+
+
+def main():
+    n = int(sys.argv[1]) if len(sys.argv) > 1 else 600
+    world = SyntheticWorld(WorldConfig(n_entities=8000, seed=0))
+    service = RetrievalService(world, LatencyModel(), k=10)
+    ds = TwoHopDataset(world, seed=0)
+    complex_qs = ds.sample(n, seed=2)
+
+    print("== Auto-RAG with full-database retrieval ==")
+    base = AutoRagPipeline(ds, None, service).run(complex_qs)
+    for k, v in base.items():
+        print(f"  {k:20s} {v:.4f}")
+
+    print("== Auto-RAG + HaS (plug-in, no pipeline changes) ==")
+    engine = HasEngine(service, HasConfig(k=10, tau=0.2, h_max=5000,
+                                          nprobe=8, n_buckets=1024, d=64))
+    plug = AutoRagPipeline(ds, engine, service).run(complex_qs)
+    for k, v in plug.items():
+        print(f"  {k:20s} {v:.4f}")
+
+    cut = (plug["retrieval_latency"] - base["retrieval_latency"]) \
+        / base["retrieval_latency"]
+    dacc = plug["accuracy"] - base["accuracy"]
+    print(f"\nretrieval latency: {cut:+.1%} (paper: -69.4%), "
+          f"accuracy delta: {dacc:+.4f} (paper: -3.72%)")
+
+
+if __name__ == "__main__":
+    main()

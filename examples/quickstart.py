@@ -1,0 +1,45 @@
+"""Quickstart: HaS speculative retrieval vs full-database retrieval.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a synthetic entity-attribute world (the paper's Granola-EQ* analogue),
+serves a Zipf query stream through HaS and through plain full-database
+retrieval, and prints the paper's headline metrics side by side.
+"""
+import sys
+
+from repro.core.has import HasConfig
+from repro.data.synthetic import DATASETS, SyntheticWorld, WorldConfig
+from repro.serving.engine import FullRetrievalEngine, HasEngine, RetrievalService
+from repro.serving.latency import LatencyModel
+
+
+def main():
+    n_queries = int(sys.argv[1]) if len(sys.argv) > 1 else 1500
+    print("== building world (8k entities, 40k passages) ==")
+    world = SyntheticWorld(WorldConfig(n_entities=8000, seed=0))
+    service = RetrievalService(world, LatencyModel(), k=10)
+    ds = DATASETS["granola"]
+    queries = world.sample_queries(n_queries, pattern=ds["pattern"],
+                                   zipf_a=ds["zipf_a"],
+                                   p_uncovered=ds["p_uncovered"], seed=1)
+
+    print("== full-database retrieval (cloud ENNS, 49.2M-passage scale) ==")
+    full = FullRetrievalEngine(service).serve(queries[:400]).summary()
+    for k in ("avg_latency_s", "doc_hit_rate", "ra_qwen3-8b"):
+        print(f"  {k:16s} {full[k]:.4f}")
+
+    print("== HaS (two-channel speculation + homology validation) ==")
+    has = HasEngine(service, HasConfig(k=10, tau=0.2, h_max=5000,
+                                       nprobe=8, n_buckets=1024, d=64))
+    s = has.serve(queries).summary()
+    for k in ("avg_latency_s", "dar", "car", "l_at_da", "l_at_dr",
+              "doc_hit_rate", "ra_qwen3-8b"):
+        print(f"  {k:16s} {s[k]:.4f}")
+    cut = (s["avg_latency_s"] - full["avg_latency_s"]) / full["avg_latency_s"]
+    print(f"\n  retrieval latency change vs full DB: {cut:+.2%} "
+          f"(paper: -23.74% Granola / -36.99% PopQA)")
+
+
+if __name__ == "__main__":
+    main()

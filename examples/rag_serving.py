@@ -1,0 +1,102 @@
+"""End-to-end RAG serving driver: HaS retrieval + a real LM decoding answers.
+
+    PYTHONPATH=src python examples/rag_serving.py [n_requests]
+
+The full request path of the paper's Fig 1, with every stage real:
+  1. the query hits HaS (two-channel speculation + homology validation);
+  2. retrieved doc ids become context tokens for a transformer generator
+     (our LM substrate with a KV cache — the same decode_step that the
+     dry-run lowers at 32k/500k context on the production mesh);
+  3. the response streams out token by token (TTFT + decode throughput
+     are measured per request, batched).
+"""
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.has import HasConfig
+from repro.data.synthetic import DATASETS, SyntheticWorld, WorldConfig
+from repro.models import transformer as tf
+from repro.serving.engine import HasEngine, RetrievalService
+from repro.serving.latency import LatencyModel
+
+
+def main():
+    n_requests = int(sys.argv[1]) if len(sys.argv) > 1 else 200
+    batch = 8
+    gen_cfg = tf.TransformerConfig(
+        name="rag-lm", n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+        d_ff=1024, vocab_size=4096, d_head=32, remat=False)
+    print(f"generator: {gen_cfg.param_count() / 1e6:.1f}M params")
+    params = tf.init_params(gen_cfg, jax.random.key(0))
+
+    world = SyntheticWorld(WorldConfig(n_entities=5000, seed=0))
+    service = RetrievalService(world, LatencyModel(), k=10)
+    engine = HasEngine(service, HasConfig(k=10, tau=0.2, h_max=4000,
+                                          nprobe=8, n_buckets=512, d=64))
+    ds = DATASETS["granola"]
+    queries = world.sample_queries(n_requests, pattern=ds["pattern"],
+                                   zipf_a=ds["zipf_a"],
+                                   p_uncovered=ds["p_uncovered"], seed=1)
+
+    prompt_len, gen_len = 64, 16
+    prefill = jax.jit(lambda p, t: tf.prefill(p, t, gen_cfg, None))
+    decode = jax.jit(lambda p, c, t, i: tf.decode_step(p, c, t, i, gen_cfg,
+                                                       None))
+    # warmup
+    toks = jnp.zeros((batch, prompt_len), jnp.int32)
+    prefill(params, toks).block_until_ready()
+    cache = tf.init_kv_cache(gen_cfg, batch, prompt_len + gen_len)
+    decode(params, cache, jnp.zeros((batch,), jnp.int32), jnp.int32(0))
+
+    stats = {"retrieval": [], "ttft": [], "decode_tps": [], "accept": []}
+    for start in range(0, n_requests, batch):
+        group = queries[start:start + batch]
+        if len(group) < batch:
+            break
+        # 1) retrieval through HaS (sequential; cache mutates per query)
+        doc_ids = []
+        for q in group:
+            ids, accept, lat, _ = engine.step(q["emb"])
+            stats["retrieval"].append(lat)
+            stats["accept"].append(accept)
+            doc_ids.append(ids[:10])
+        # 2) build prompts: [doc tokens..., query tokens...]
+        prompt = np.zeros((batch, prompt_len), np.int64)
+        for i, (q, ids) in enumerate(zip(group, doc_ids)):
+            ctx = (np.abs(ids) % 4000).repeat(5)[:prompt_len - 8]
+            prompt[i, :len(ctx)] = ctx
+            prompt[i, -8:] = (q["tokens"] % 4000)[:8].repeat(2)[:8]
+        prompt = jnp.asarray(prompt, jnp.int32)
+        # 3) prefill (TTFT) + decode loop
+        t0 = time.perf_counter()
+        logits = prefill(params, prompt)
+        logits.block_until_ready()
+        ttft = time.perf_counter() - t0
+        cache = tf.init_kv_cache(gen_cfg, batch, prompt_len + gen_len)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        t0 = time.perf_counter()
+        for j in range(gen_len):
+            lg, cache = decode(params, cache, tok, jnp.int32(prompt_len + j))
+            tok = jnp.argmax(lg, -1).astype(jnp.int32)
+        tok.block_until_ready()
+        dt = time.perf_counter() - t0
+        stats["ttft"].append(ttft)
+        stats["decode_tps"].append(batch * gen_len / dt)
+
+    print(f"requests served        {len(stats['retrieval'])}")
+    print(f"retrieval avg latency  {np.mean(stats['retrieval']):.4f} s "
+          f"(draft acceptance {np.mean(stats['accept']):.1%})")
+    print(f"prefill TTFT (batch)   {np.mean(stats['ttft']) * 1e3:.1f} ms")
+    print(f"decode throughput      {np.mean(stats['decode_tps']):.1f} tok/s")
+    print("\nFig-1 takeaway: full-DB retrieval would add "
+          f"{service.latency.full_scan_time():.2f} s/query on top of a "
+          f"{np.mean(stats['ttft']) * 1e3:.0f} ms TTFT; HaS cuts the "
+          "retrieval term for every accepted draft.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Sharding-aware checkpointing: atomic, async, elastic-reshardable."""
+from repro.checkpoint.manager import CheckpointManager, reshard_tree

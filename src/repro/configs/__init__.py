@@ -1,0 +1,13 @@
+"""Architecture registry: importing this package registers all configs.
+
+Assigned pool (10 archs x their shape sets = 40 dry-run cells) plus the
+paper's own ``has-rag`` pod-scale retrieval step.
+"""
+from repro.configs.base import (REGISTRY, ArchSpec, LoweringBundle,
+                                ShapeSpec, all_archs, get_arch)
+
+# registration side effects
+import repro.configs.lm_archs       # noqa: F401,E402
+import repro.configs.dimenet        # noqa: F401,E402
+import repro.configs.recsys_archs   # noqa: F401,E402
+import repro.configs.has_rag        # noqa: F401,E402

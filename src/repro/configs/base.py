@@ -1,0 +1,68 @@
+"""Config registry: ArchSpec + shape specs + lowering bundles.
+
+Every assigned architecture registers an :class:`ArchSpec` mapping each of
+its input shapes to a :class:`LoweringBundle` — the (fn, abstract args,
+logical shardings) triple that launch/dryrun.py jits on the production mesh
+and tests smoke-run (reduced) on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import jax
+
+REGISTRY: dict[str, "ArchSpec"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str               # train | prefill | decode | serve | retrieval
+    dims: Mapping[str, int]
+    note: str = ""
+
+
+@dataclasses.dataclass
+class LoweringBundle:
+    """Everything dryrun needs: jit(fn, in_shardings=resolve(arg_logical))
+    .lower(*abstract_args)."""
+    fn: Callable
+    abstract_args: tuple
+    arg_logical: tuple
+    donate_argnums: tuple = ()
+    static_argnums: tuple = ()
+
+
+@dataclasses.dataclass
+class ArchSpec:
+    name: str
+    family: str             # lm | gnn | recsys
+    source: str             # citation tag from the assignment
+    shapes: dict[str, ShapeSpec]
+    # full-scale lowering bundle (abstract, no allocation)
+    make_bundle: Callable[[str, Any], LoweringBundle]   # (shape_name, rules)
+    # reduced config smoke helpers: () -> (cfg, fn(batch)->outputs, batch)
+    make_smoke: Callable[[], tuple]
+    config: Any = None
+
+    def register(self):
+        REGISTRY[self.name] = self
+        return self
+
+
+def get_arch(name: str) -> ArchSpec:
+    if name not in REGISTRY:
+        # import side-effect registration
+        import repro.configs  # noqa
+    return REGISTRY[name]
+
+
+def all_archs() -> list[str]:
+    import repro.configs  # noqa
+    return sorted(REGISTRY)
+
+
+def abstract_init(fn, *args):
+    """eval_shape wrapper: parameters as ShapeDtypeStructs, no allocation."""
+    return jax.eval_shape(fn, *args)

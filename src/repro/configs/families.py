@@ -1,0 +1,262 @@
+"""Family glue: build LoweringBundles for LM / GNN / RecSys architectures."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as SDS
+
+from repro.configs.base import LoweringBundle, ShapeSpec
+from repro.models import dimenet as dn
+from repro.models import recsys as rs
+from repro.models import transformer as tf
+from repro.training.optimizer import OptConfig, opt_init, opt_state_logical
+from repro.training.train import make_train_step
+
+I32, F32, BF16, BOOL = jnp.int32, jnp.float32, jnp.bfloat16, jnp.bool_
+
+
+def _batch_ax(b: int, mesh) -> str | None:
+    """Shard the batch dim only when it divides the DP shard count."""
+    if mesh is None:
+        return "batch"
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            dp *= mesh.shape[a]
+    return "batch" if b % dp == 0 and b >= dp else None
+
+
+# ---------------------------------------------------------------------------
+# LM transformers
+# ---------------------------------------------------------------------------
+
+def lm_opt_config(cfg: tf.TransformerConfig) -> OptConfig:
+    # giant MoE: factored states (AdamW's 8 B/param would exceed pod HBM)
+    return OptConfig(name="adafactor" if cfg.is_moe else "adamw")
+
+
+def lm_bundle(cfg: tf.TransformerConfig, shape: ShapeSpec | str, rules,
+              mesh=None, n_layers: int | None = None,
+              unroll: bool = False, moe_dp_groups: int | None = None,
+              remat_policy: str | None = None) -> LoweringBundle:
+    if isinstance(shape, str):
+        shape = lm_shapes()[shape]
+    import dataclasses
+    if n_layers is not None or unroll:
+        nl = n_layers or cfg.n_layers
+        cfg = dataclasses.replace(cfg, n_layers=nl,
+                                  scan_unroll=nl if unroll else 1)
+    if moe_dp_groups is None and cfg.is_moe and mesh is not None:
+        # production default (§Perf): hierarchical dispatch over the DP axes
+        dp = 1
+        for a in ("pod", "data"):
+            dp *= mesh.shape.get(a, 1)
+        moe_dp_groups = dp
+    if moe_dp_groups is not None:
+        cfg = dataclasses.replace(cfg, moe_dp_groups=moe_dp_groups)
+    if remat_policy is not None:
+        cfg = dataclasses.replace(cfg, remat_policy=remat_policy)
+    key = jax.random.key(0)
+    aparams = jax.eval_shape(functools.partial(tf.init_params, cfg), key)
+    plog = tf.params_logical(cfg)
+    d = shape.dims
+
+    if shape.kind == "train":
+        b, s = d["global_batch"], d["seq_len"]
+        bax = _batch_ax(b, mesh)
+        batch_abs = {"tokens": SDS((b, s), I32), "labels": SDS((b, s), I32)}
+        batch_log = {"tokens": (bax, None), "labels": (bax, None)}
+        opt_cfg = lm_opt_config(cfg)
+        aopt = jax.eval_shape(functools.partial(opt_init, opt_cfg), aparams)
+        olog = opt_state_logical(opt_cfg, plog)
+        lossf = functools.partial(tf.loss_fn, cfg=cfg, rules=rules)
+        step = make_train_step(lossf, opt_cfg)
+        return LoweringBundle(step, (aparams, aopt, batch_abs),
+                              (plog, olog, batch_log), donate_argnums=(0, 1))
+
+    if shape.kind == "prefill":
+        b, s = d["global_batch"], d["seq_len"]
+        bax = _batch_ax(b, mesh)
+        fn = functools.partial(tf.prefill, cfg=cfg, rules=rules)
+        return LoweringBundle(fn, (aparams, SDS((b, s), I32)),
+                              (plog, (bax, None)))
+
+    if shape.kind == "decode":
+        b, s = d["global_batch"], d["seq_len"]
+        bax = _batch_ax(b, mesh)
+        if bax is None and rules is not None:
+            # tiny-batch decode (long_500k B=1): free the DP axes so the
+            # 500k KV-seq dim can take (data x model) without double-mapping
+            rules = {**rules, "batch": None}
+        acache = jax.eval_shape(
+            functools.partial(tf.init_kv_cache, cfg, b, s), )
+        clog = tf.kv_cache_logical(s)
+        if bax is None:
+            clog = jax.tree.map(
+                lambda lg: (lg[0], None) + lg[2:], clog,
+                is_leaf=lambda x: isinstance(x, tuple) and not isinstance(x, dict))
+        fn = functools.partial(tf.decode_step, cfg=cfg, rules=rules)
+        return LoweringBundle(
+            fn, (aparams, acache, SDS((b,), I32), SDS((), I32)),
+            (plog, clog, (bax,), ()), donate_argnums=(1,))
+
+    raise ValueError(shape.kind)
+
+
+def lm_shapes(skip_decode: bool = False) -> dict[str, ShapeSpec]:
+    """The assigned LM shape set (same for all five LM archs)."""
+    shapes = {
+        "train_4k": ShapeSpec("train_4k", "train",
+                              dict(seq_len=4096, global_batch=256)),
+        "prefill_32k": ShapeSpec("prefill_32k", "prefill",
+                                 dict(seq_len=32768, global_batch=32)),
+        "decode_32k": ShapeSpec("decode_32k", "decode",
+                                dict(seq_len=32768, global_batch=128)),
+        "long_500k": ShapeSpec(
+            "long_500k", "decode", dict(seq_len=524288, global_batch=1),
+            note="decode against a 512k KV cache is O(L)/step; runs for all "
+                 "five full-attention archs (see DESIGN.md §5)"),
+    }
+    if skip_decode:
+        shapes.pop("decode_32k")
+        shapes.pop("long_500k")
+    return shapes
+
+
+def lm_smoke(cfg_full: tf.TransformerConfig):
+    """Reduced same-family config + one CPU train step."""
+    cfg = tf.TransformerConfig(
+        name=cfg_full.name + "-smoke", n_layers=2,
+        d_model=64, n_heads=4,
+        n_kv_heads=max(1, 4 * cfg_full.n_kv_heads // cfg_full.n_heads),
+        d_ff=128, vocab_size=512, d_head=16,
+        rope_fraction=cfg_full.rope_fraction,
+        gated_mlp=cfg_full.gated_mlp,
+        moe_experts=min(cfg_full.moe_experts, 4),
+        moe_top_k=min(cfg_full.moe_top_k, 2),
+        moe_dense_residual=cfg_full.moe_dense_residual,
+        remat=False)
+    params = tf.init_params(cfg, jax.random.key(0))
+    opt_cfg = lm_opt_config(cfg)
+    opt_state = opt_init(opt_cfg, params)
+    lossf = functools.partial(tf.loss_fn, cfg=cfg, rules=None,
+                              compute_dtype=jnp.float32)
+    step = make_train_step(lossf, opt_cfg)
+    import numpy as np
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, 512, (2, 16)), I32),
+             "labels": jnp.asarray(rng.integers(0, 512, (2, 16)), I32)}
+    return cfg, params, opt_state, step, batch
+
+
+# ---------------------------------------------------------------------------
+# GNN (DimeNet)
+# ---------------------------------------------------------------------------
+
+def gnn_abstract_batch(n: int, e: int, t: int, d_feat: int,
+                       task: str, n_graphs: int = 1):
+    batch = {"x": SDS((n, d_feat), F32), "pos": SDS((n, 3), F32),
+             "edge_src": SDS((e,), I32), "edge_dst": SDS((e,), I32),
+             "edge_mask": SDS((e,), BOOL),
+             "tri_edge_in": SDS((t,), I32), "tri_edge_out": SDS((t,), I32),
+             "tri_mask": SDS((t,), BOOL), "node_mask": SDS((n,), BOOL)}
+    log = {"x": ("nodes", None), "pos": ("nodes", None),
+           "edge_src": ("edges",), "edge_dst": ("edges",),
+           "edge_mask": ("edges",),
+           "tri_edge_in": ("edges",), "tri_edge_out": ("edges",),
+           "tri_mask": ("edges",), "node_mask": ("nodes",)}
+    if task == "classification":
+        batch["labels"] = SDS((n,), I32)
+        log["labels"] = ("nodes",)
+    else:
+        batch["graph_ids"] = SDS((n,), I32)
+        batch["targets"] = SDS((n_graphs,), F32)
+        log["graph_ids"] = ("nodes",)
+        log["targets"] = (None,)
+    return batch, log
+
+
+def gnn_bundle(cfg: dn.DimeNetConfig, shape: ShapeSpec, rules,
+               mesh=None) -> LoweringBundle:
+    d = shape.dims
+    aparams = jax.eval_shape(
+        functools.partial(dn.init_params, cfg), jax.random.key(0))
+    plog = dn.params_logical(cfg)
+    batch_abs, batch_log = gnn_abstract_batch(
+        d["n_nodes"], d["n_edges"], d["n_triplets"], d["d_feat"],
+        cfg.task, d.get("n_graphs", 1))
+    opt_cfg = OptConfig(name="adamw")
+    aopt = jax.eval_shape(functools.partial(opt_init, opt_cfg), aparams)
+    olog = opt_state_logical(opt_cfg, plog)
+    lossf = functools.partial(dn.loss_fn, cfg=cfg, rules=rules)
+    step = make_train_step(lossf, opt_cfg, compute_dtype=F32)
+    return LoweringBundle(step, (aparams, aopt, batch_abs),
+                          (plog, olog, batch_log), donate_argnums=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# RecSys
+# ---------------------------------------------------------------------------
+
+def recsys_abstract_batch(cfg: rs.RecsysConfig, b: int, mesh=None):
+    bax = _batch_ax(b, mesh)
+    if cfg.kind == "bert4rec":
+        s = cfg.seq_len
+        return ({"items": SDS((b, s), I32), "labels": SDS((b, s), I32),
+                 "label_mask": SDS((b, s), BOOL), "mask": SDS((b, s), BOOL)},
+                {"items": (bax, None), "labels": (bax, None),
+                 "label_mask": (bax, None), "mask": (bax, None)})
+    batch = {"sparse_ids": SDS((b, cfg.n_sparse), I32),
+             "labels": SDS((b,), I32)}
+    log = {"sparse_ids": (bax, None), "labels": (bax,)}
+    if cfg.n_dense:
+        batch["dense"] = SDS((b, cfg.n_dense), F32)
+        log["dense"] = (bax, None)
+    return batch, log
+
+
+def recsys_bundle(cfg: rs.RecsysConfig, shape: ShapeSpec | str, rules,
+                  mesh=None, **_variant) -> LoweringBundle:
+    if isinstance(shape, str):
+        shape = recsys_shapes()[shape]
+    d = shape.dims
+    aparams = jax.eval_shape(
+        functools.partial(rs.init_params, cfg), jax.random.key(0))
+    plog = rs.params_logical(cfg)
+
+    if shape.kind == "retrieval":
+        b, c = d["batch"], d["n_candidates"]
+        dim = cfg.embed_dim
+        fn = functools.partial(rs.retrieval_score, cfg=cfg, rules=rules)
+        return LoweringBundle(
+            fn, (aparams, {"query": SDS((b, dim), F32),
+                           "candidates": SDS((c, dim), F32)}),
+            (plog, {"query": (None, None), "candidates": ("corpus", None)}))
+
+    batch_abs, batch_log = recsys_abstract_batch(cfg, d["batch"], mesh)
+    if shape.kind == "train":
+        opt_cfg = OptConfig(name="adamw")
+        aopt = jax.eval_shape(functools.partial(opt_init, opt_cfg), aparams)
+        olog = opt_state_logical(opt_cfg, plog)
+        lossf = functools.partial(rs.loss_fn, cfg=cfg, rules=rules)
+        step = make_train_step(lossf, opt_cfg, compute_dtype=F32)
+        return LoweringBundle(step, (aparams, aopt, batch_abs),
+                              (plog, olog, batch_log), donate_argnums=(0, 1))
+    # serve: forward scoring
+    fn = functools.partial(rs.forward, cfg=cfg, rules=rules)
+    return LoweringBundle(fn, (aparams, batch_abs), (plog, batch_log))
+
+
+def recsys_shapes() -> dict[str, ShapeSpec]:
+    return {
+        "train_batch": ShapeSpec("train_batch", "train", dict(batch=65536)),
+        "serve_p99": ShapeSpec("serve_p99", "serve", dict(batch=512)),
+        "serve_bulk": ShapeSpec("serve_bulk", "serve", dict(batch=262144)),
+        "retrieval_cand": ShapeSpec(
+            "retrieval_cand", "retrieval",
+            dict(batch=1, n_candidates=1_000_448, real_candidates=1_000_000),
+            note="1M candidates padded to 256-divisible shards"),
+    }

@@ -1,0 +1,85 @@
+"""The four assigned RecSys architectures (exact public configs).
+
+  dlrm-rm2  [arXiv:1906.00091]  Criteo embedding tables, dot interaction
+  bert4rec  [arXiv:1904.06690]  bidirectional sequential recommender
+  autoint   [arXiv:1810.11921]  field self-attention interaction
+  deepfm    [arXiv:1703.04247]  FM + deep branch
+
+Embedding tables are one concatenated [sum(vocab), dim] matrix, row-sharded
+over the ``model`` mesh axis (classic DLRM model parallelism).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.configs.families import recsys_bundle, recsys_shapes
+from repro.models.recsys import CRITEO_VOCABS, RecsysConfig
+
+# 39-field vocabularies for autoint/deepfm: Criteo's 26 + 13 Avazu-scale
+_VOCABS_39 = CRITEO_VOCABS + (100_000,) * 13
+
+RECSYS_CONFIGS = {
+    "dlrm-rm2": RecsysConfig(
+        name="dlrm-rm2", kind="dlrm", vocab_sizes=CRITEO_VOCABS,
+        embed_dim=64, n_dense=13, bot_mlp=(512, 256, 64),
+        top_mlp=(512, 512, 256, 1)),
+    "bert4rec": RecsysConfig(
+        name="bert4rec", kind="bert4rec", vocab_sizes=(26744,),
+        embed_dim=64, n_blocks=2, n_heads=2, seq_len=200),
+    "autoint": RecsysConfig(
+        name="autoint", kind="autoint", vocab_sizes=_VOCABS_39,
+        embed_dim=16, n_attn_layers=3, n_heads=2, d_attn=32),
+    "deepfm": RecsysConfig(
+        name="deepfm", kind="deepfm", vocab_sizes=_VOCABS_39,
+        embed_dim=10, mlp=(400, 400, 400)),
+}
+
+
+def _smoke_factory(full_cfg: RecsysConfig):
+    def _smoke():
+        from repro.data.recsys import ClickLog, SessionLog
+        from repro.models import recsys as rs
+        from repro.training.optimizer import OptConfig, opt_init
+        from repro.training.train import make_train_step
+
+        kw = dict(vocab_sizes=(64,) * min(len(full_cfg.vocab_sizes), 6),
+                  embed_dim=8)
+        if full_cfg.kind == "dlrm":
+            cfg = RecsysConfig(name="smoke", kind="dlrm", n_dense=13,
+                               bot_mlp=(32, 16, 8), top_mlp=(32, 1), **kw)
+        elif full_cfg.kind == "deepfm":
+            cfg = RecsysConfig(name="smoke", kind="deepfm", mlp=(32, 32), **kw)
+        elif full_cfg.kind == "autoint":
+            cfg = RecsysConfig(name="smoke", kind="autoint", n_attn_layers=2,
+                               n_heads=2, d_attn=8, **kw)
+        else:
+            cfg = RecsysConfig(name="smoke", kind="bert4rec",
+                               vocab_sizes=(256,), embed_dim=16, n_blocks=2,
+                               n_heads=2, seq_len=16)
+        params = rs.init_params(cfg, jax.random.key(0))
+        opt_cfg = OptConfig(name="adamw")
+        opt_state = opt_init(opt_cfg, params)
+        lossf = functools.partial(rs.loss_fn, cfg=cfg, rules=None)
+        step = make_train_step(lossf, opt_cfg, compute_dtype=jnp.float32)
+        if cfg.kind == "bert4rec":
+            batch_np = SessionLog(256, seed=0).sample(4, 16)
+        else:
+            batch_np = ClickLog(cfg.vocab_sizes,
+                                n_dense=cfg.n_dense, seed=0).sample(8)
+        batch = jax.tree.map(jnp.asarray, batch_np)
+        return cfg, params, opt_state, step, batch
+    return _smoke
+
+
+for _name, _cfg in RECSYS_CONFIGS.items():
+    ArchSpec(
+        name=_name, family="recsys", source="assigned recsys pool",
+        shapes=recsys_shapes(),
+        make_bundle=functools.partial(recsys_bundle, _cfg),
+        make_smoke=_smoke_factory(_cfg),
+        config=_cfg,
+    ).register()

@@ -1,0 +1,9 @@
+"""HaS core: homology-aware speculative retrieval (the paper's contribution).
+
+Layout:
+  homology.py   homology score + threshold re-identification (§III-C)
+  has.py        HasState (FIFO cache, doc store), two-channel speculation (§II-B)
+  baselines.py  Proximity / SafeRadius / MinCache / CRAG-evaluator / ScaNN-sub
+"""
+from repro.core.homology import (homology_scores, homology_scores_batched,
+                                 reidentify, pairwise_homology)

@@ -1,0 +1,161 @@
+"""Baseline retrieval-acceleration methods the paper compares against (§IV-A).
+
+Reuse-based:
+  Proximity  [Bergman+ '25]  — reuse the cached result whose query embedding
+      has cosine similarity > theta with the incoming query.
+  SafeRadius [Frieder+ '24]  — reuse iff the incoming query lies inside the
+      cached query's 'safe' hyperball; we instantiate the criterion on the
+      unit sphere: reuse iff  ||q - q_h|| < alpha * margin(q_h)  where
+      margin(q_h) = s_1(q_h) - s_k(q_h), the cached query's top-1/top-k score
+      gap (the radius within which its top-k set provably cannot change by
+      more than the margin).
+  MinCache   [Haqiq+ '25]    — hierarchical: lexical resemblance via MinHash
+      Jaccard over query token sets (threshold t_lex), then embedding cosine
+      (threshold t_sem); reuse when either tier matches.
+
+Validation-based:
+  CRAGEvaluator [Yan+ '24]   — an LLM judges each draft document's relevance;
+      simulated with the oracle golden-document labels + a configurable
+      error rate and a per-call latency (0.7 s in the paper's measurement).
+
+ANNS substitutes:
+  IVF (retrieval/ivf.py) with scope presets, and a ScaNN-substitute =
+  int8-quantized scoring + exact re-rank (retrieval/flat.quantized_search).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Shared reuse-cache state (query embedding -> cached result set)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ReuseState:
+    query_emb: jax.Array      # [H, d]
+    doc_ids: jax.Array        # [H, k]
+    doc_vecs: jax.Array       # [H, k, d]
+    margins: jax.Array        # [H] top1-topk score gap (SafeRadius)
+    minhash: jax.Array        # [H, n_hash] int32 (MinCache)
+    valid: jax.Array          # [H]
+    ptr: jax.Array            # scalar
+
+    def tree_flatten(self):
+        return ((self.query_emb, self.doc_ids, self.doc_vecs, self.margins,
+                 self.minhash, self.valid, self.ptr), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_reuse_state(h_max: int, k: int, d: int, n_hash: int = 64) -> ReuseState:
+    return ReuseState(
+        query_emb=jnp.zeros((h_max, d), jnp.float32),
+        doc_ids=jnp.full((h_max, k), -1, jnp.int32),
+        doc_vecs=jnp.zeros((h_max, k, d), jnp.float32),
+        margins=jnp.zeros((h_max,), jnp.float32),
+        minhash=jnp.full((h_max, n_hash), 2**31 - 1, jnp.int32),
+        valid=jnp.zeros((h_max,), bool),
+        ptr=jnp.zeros((), jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, donate_argnames=("state",))
+def reuse_insert(state: ReuseState, q_emb, doc_ids, doc_vecs, scores,
+                 mh) -> ReuseState:
+    slot = state.ptr % state.valid.shape[0]
+    return ReuseState(
+        query_emb=state.query_emb.at[slot].set(q_emb),
+        doc_ids=state.doc_ids.at[slot].set(doc_ids),
+        doc_vecs=state.doc_vecs.at[slot].set(doc_vecs),
+        margins=state.margins.at[slot].set(scores[0] - scores[-1]),
+        minhash=state.minhash.at[slot].set(mh),
+        valid=state.valid.at[slot].set(True),
+        ptr=state.ptr + 1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Matching rules
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def proximity_match(state: ReuseState, q_emb, theta):
+    """Cosine-similarity reuse (embeddings are unit-norm)."""
+    sims = state.query_emb @ q_emb
+    sims = jnp.where(state.valid, sims, -jnp.inf)
+    h = jnp.argmax(sims)
+    return sims[h] > theta, h.astype(jnp.int32), sims[h]
+
+
+@jax.jit
+def saferadius_match(state: ReuseState, q_emb, alpha):
+    """Safe-hyperball reuse: ||q - q_h|| < alpha * margin(q_h)."""
+    dist = jnp.linalg.norm(state.query_emb - q_emb[None, :], axis=-1)
+    ok = (dist < alpha * state.margins) & state.valid
+    score = jnp.where(ok, -dist, -jnp.inf)
+    h = jnp.argmax(score)
+    return ok[h], h.astype(jnp.int32), -score[h]
+
+
+def minhash_signature(tokens: np.ndarray, n_hash: int = 64,
+                      seed: int = 0) -> np.ndarray:
+    """MinHash over a token-id set (host-side, lexical tier of MinCache)."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(1, 2**31 - 1, n_hash, dtype=np.int64)
+    b = rng.integers(0, 2**31 - 1, n_hash, dtype=np.int64)
+    p = np.int64(2**31 - 1)
+    t = tokens.astype(np.int64)[:, None]
+    hashes = (a[None, :] * t + b[None, :]) % p                # [T, n_hash]
+    return hashes.min(axis=0).astype(np.int32)
+
+
+@jax.jit
+def mincache_match(state: ReuseState, q_emb, mh, t_lex, t_sem):
+    """Hierarchical: MinHash-Jaccard tier OR embedding-cosine tier."""
+    jac = jnp.mean((state.minhash == mh[None, :]).astype(jnp.float32), axis=1)
+    sims = state.query_emb @ q_emb
+    lex_ok = (jac > t_lex) & state.valid
+    sem_ok = (sims > t_sem) & state.valid
+    ok = lex_ok | sem_ok
+    score = jnp.where(ok, jnp.maximum(jac, sims), -jnp.inf)
+    h = jnp.argmax(score)
+    return ok[h], h.astype(jnp.int32), score[h]
+
+
+# ---------------------------------------------------------------------------
+# CRAG-style LLM evaluator (simulated)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CRAGEvaluator:
+    """LLM relevance judge for draft documents.
+
+    The judgement is simulated per document from the synthetic world's
+    oracle with asymmetric error rates — LLM judges are conservative
+    (high false-negative on relevant docs, near-zero false-positive), and
+    markedly weaker on out-of-distribution data (the paper's PopQA
+    observation).  The cost model charges the paper's measured ~0.7 s
+    inference latency per query.
+    """
+    fn_rate: float = 0.5           # misses a truly relevant doc
+    fp_rate: float = 0.01          # accepts an irrelevant doc
+    ood_fn_rate: float = 0.8       # weaker confidence on OOD data (PopQA)
+    latency_s: float = 0.7
+
+    def evaluate(self, rng: np.random.Generator, golden_mask: np.ndarray,
+                 ood: bool = False) -> bool:
+        """Accept the draft iff >=1 doc is judged relevant."""
+        fn = self.ood_fn_rate if ood else self.fn_rate
+        u = rng.random(golden_mask.shape)
+        judged = np.where(golden_mask, u > fn, u < self.fp_rate)
+        return bool(judged.any())

@@ -1,0 +1,168 @@
+"""HaS pipeline state + two-channel speculation (paper §II-B, Algorithm 1).
+
+All state lives in fixed-shape JAX arrays so every step jits:
+  * query cache P = (query_emb [H,d], query_doc_ids [H,k], valid [H]) — a FIFO
+    ring (the paper's FIFO replacement policy) with pointer ``q_ptr``.
+  * cache channel C_c = FIFO ring of *deduplicated* documents previously
+    retrieved from the full database (doc_emb [Dc,d], doc_ids [Dc]).
+  * fuzzy channel C_f = an aggressively configured IVFIndex (see
+    retrieval/ivf.py), optionally subset-compressed (Table VII).
+
+``speculate`` performs: two-channel top-k -> rerank/merge -> draft ->
+homology validation (reidentify).  ``cache_update`` inserts the fallback
+full-retrieval result.  The host-side serving loop (serving/engine.py)
+sequences these per query exactly as Algorithm 1; the batched variant
+processes micro-batches against a cache snapshot.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.homology import homology_scores, reidentify
+from repro.retrieval.ivf import IVFIndex, ivf_search
+
+
+@dataclasses.dataclass(frozen=True)
+class HasConfig:
+    k: int = 10                    # documents per retrieval (draft size)
+    tau: float = 0.2               # homology threshold
+    h_max: int = 5000              # query-cache capacity (paper default)
+    doc_capacity: int = 0          # doc-store slots; 0 -> h_max * k
+    nprobe: int = 64               # fuzzy channel buckets probed
+    n_buckets: int = 8192          # fuzzy channel total buckets
+    use_fuzzy_validation: bool = True    # Table VI 'V'
+    use_fuzzy_enhancement: bool = True   # Table VI 'E'
+    d: int = 64                    # embedding dim
+
+    @property
+    def doc_cap(self) -> int:
+        return self.doc_capacity or self.h_max * self.k
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class HasState:
+    query_emb: jax.Array      # [H, d]
+    query_doc_ids: jax.Array  # [H, k] int32
+    query_valid: jax.Array    # [H] bool
+    q_ptr: jax.Array          # scalar int32
+    doc_emb: jax.Array        # [Dc, d]
+    doc_ids: jax.Array        # [Dc] int32 (-1 = empty)
+    d_ptr: jax.Array          # scalar int32
+
+    def tree_flatten(self):
+        return ((self.query_emb, self.query_doc_ids, self.query_valid,
+                 self.q_ptr, self.doc_emb, self.doc_ids, self.d_ptr), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_has_state(cfg: HasConfig, dtype=jnp.float32) -> HasState:
+    return HasState(
+        query_emb=jnp.zeros((cfg.h_max, cfg.d), dtype),
+        query_doc_ids=jnp.full((cfg.h_max, cfg.k), -1, jnp.int32),
+        query_valid=jnp.zeros((cfg.h_max,), bool),
+        q_ptr=jnp.zeros((), jnp.int32),
+        doc_emb=jnp.zeros((cfg.doc_cap, cfg.d), dtype),
+        doc_ids=jnp.full((cfg.doc_cap,), -1, jnp.int32),
+        d_ptr=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Two-channel fast retrieval + homology validation
+# ---------------------------------------------------------------------------
+
+def _dedup_merge(s_a, i_a, s_b, i_b, k):
+    """Merge two candidate lists, dropping b-entries duplicated in a."""
+    dup = jnp.any(i_b[:, None] == i_a[None, :], axis=1) & (i_b >= 0)
+    s_b = jnp.where(dup, -jnp.inf, s_b)
+    s = jnp.concatenate([s_a, s_b])
+    i = jnp.concatenate([i_a, i_b])
+    ts, t = jax.lax.top_k(s, k)
+    return ts, i[t]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def speculate(cfg: HasConfig, state: HasState, index: IVFIndex,
+              q_emb: jax.Array):
+    """One speculative retrieval (Algorithm 1 lines 1–14) for query q [d].
+
+    Returns dict with draft ids/scores, accept flag, best homology score and
+    matched cache slot.
+    """
+    q = q_emb[None, :]                                       # [1, d]
+
+    # cache channel: flat exact top-k over the doc store
+    sc = (q @ state.doc_emb.T)[0]                            # [Dc]
+    sc = jnp.where(state.doc_ids >= 0, sc, -jnp.inf)
+    s_c, slots = jax.lax.top_k(sc, cfg.k)
+    i_c = jnp.where(jnp.isfinite(s_c), state.doc_ids[slots], -1)
+
+    # fuzzy channel: aggressive IVF
+    s_f, i_f = ivf_search(index, q, nprobe=cfg.nprobe, k=cfg.k)
+    s_f, i_f = s_f[0], i_f[0]
+
+    # draft used for validation (V flag) and for output (E flag)
+    s_val, i_val = _dedup_merge(s_c, i_c, s_f, i_f, cfg.k) \
+        if cfg.use_fuzzy_validation else (s_c, i_c)
+    s_out, i_out = _dedup_merge(s_c, i_c, s_f, i_f, cfg.k) \
+        if cfg.use_fuzzy_enhancement else (s_c, i_c)
+
+    accept, best, slot = reidentify(
+        i_val, state.query_doc_ids, state.query_valid,
+        jnp.float32(cfg.tau))
+
+    return {"draft_ids": i_out, "draft_scores": s_out,
+            "val_ids": i_val, "accept": accept,
+            "homology": best, "matched_slot": slot}
+
+
+speculate_batched = jax.jit(
+    jax.vmap(speculate, in_axes=(None, None, None, 0)),
+    static_argnames=("cfg",))
+
+
+# ---------------------------------------------------------------------------
+# Cache update on rejection (Algorithm 1 line 16)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnames=("state",))
+def cache_update(cfg: HasConfig, state: HasState, q_emb: jax.Array,
+                 full_ids: jax.Array, full_vecs: jax.Array) -> HasState:
+    """Insert (q, D_full) into P and the new docs into C_c (FIFO, dedup)."""
+    h = cfg.h_max
+    slot = state.q_ptr % h
+    query_emb = state.query_emb.at[slot].set(q_emb)
+    query_doc_ids = state.query_doc_ids.at[slot].set(full_ids)
+    query_valid = state.query_valid.at[slot].set(True)
+
+    # doc dedup: only insert ids not already present
+    present = jnp.any(full_ids[:, None] == state.doc_ids[None, :], axis=1)
+    new = (~present) & (full_ids >= 0)
+    # ring positions for the new docs
+    offs = jnp.cumsum(new.astype(jnp.int32)) - 1
+    pos = (state.d_ptr + offs) % state.doc_ids.shape[0]
+    pos = jnp.where(new, pos, state.doc_ids.shape[0])        # drop non-new
+    doc_ids = state.doc_ids.at[pos].set(full_ids, mode="drop")
+    doc_emb = state.doc_emb.at[pos].set(full_vecs, mode="drop")
+    d_ptr = state.d_ptr + jnp.sum(new.astype(jnp.int32))
+
+    return HasState(query_emb=query_emb, query_doc_ids=query_doc_ids,
+                    query_valid=query_valid, q_ptr=state.q_ptr + 1,
+                    doc_emb=doc_emb, doc_ids=doc_ids, d_ptr=d_ptr)
+
+
+def cache_memory_bytes(cfg: HasConfig) -> int:
+    """Memory footprint of the cache (Table IX 'Mem' column)."""
+    d = cfg.d
+    per_query = d * 4 + cfg.k * 4 + 1
+    per_doc = d * 4 + 4
+    return cfg.h_max * per_query + cfg.doc_cap * per_doc

@@ -1,0 +1,1 @@
+"""Data pipelines: synthetic RAG world, LM tokens, recsys logs, graphs."""

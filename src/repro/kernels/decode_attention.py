@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: flash-decoding GQA attention (one token vs long KV).
+
+The serving hot-spot of decode_32k / long_500k: one query token attends over
+an S-long KV cache.  The kernel streams KV blocks through VMEM with an
+online-softmax accumulator (running max / sum / weighted value), so the
+[H, S] score row never materializes in HBM — the kernel is purely
+memory-bound on the KV read, which is the roofline floor for decode.
+
+Grid = (batch, kv blocks); the accumulator lives in the revisited output
+blocks (m, l, acc) and is finalized on the last block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
+                   *, block_s: int, n_blocks: int):
+    bi = pl.program_id(1)
+
+    @pl.when(bi == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, -jnp.inf, jnp.float32)
+        l_ref[...] = jnp.zeros(l_ref.shape, jnp.float32)
+        o_ref[...] = jnp.zeros(o_ref.shape, jnp.float32)
+
+    q = q_ref[...][0].astype(jnp.float32)              # [H, D]
+    k = k_ref[...][0].astype(jnp.float32)              # [S_blk, H, D]
+    v = v_ref[...][0].astype(jnp.float32)
+    d = q.shape[-1]
+    scores = jnp.einsum("hd,shd->hs", q, k) * (d ** -0.5)   # [H, S_blk]
+    # mask positions beyond the current cache length
+    pos = bi * block_s + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    valid = pos <= len_ref[0, 0]
+    scores = jnp.where(valid, scores, -jnp.inf)
+
+    m_prev = m_ref[...][0]                             # [H]
+    l_prev = l_ref[...][0]
+    acc_prev = o_ref[...][0]                           # [H, D]
+    m_cur = jnp.maximum(m_prev, jnp.max(scores, axis=1))
+    # guard fully-masked blocks (exp(-inf - -inf))
+    safe_m = jnp.where(jnp.isfinite(m_cur), m_cur, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0)
+    p = jnp.exp(jnp.where(valid, scores - safe_m[:, None], -jnp.inf))
+    p = jnp.where(valid, p, 0.0)
+    l_cur = l_prev * alpha + jnp.sum(p, axis=1)
+    acc = acc_prev * alpha[:, None] + jnp.einsum("hs,shd->hd", p, v)
+
+    m_ref[...] = m_cur[None]
+    l_ref[...] = l_cur[None]
+    o_ref[...] = acc[None]
+
+    @pl.when(bi == n_blocks - 1)
+    def _finalize():
+        o_ref[...] = (acc / jnp.maximum(l_cur, 1e-30)[:, None])[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, block_s: int = 512,
+                     interpret: bool = False):
+    """q [B, H, D]; k/v_cache [B, S, H, D] (KV already head-repeated);
+    cache_len scalar int32 (attend to positions <= cache_len).
+    Returns out [B, H, D] (f32)."""
+    b, h, d = q.shape
+    s = k_cache.shape[1]
+    n_blocks = pl.cdiv(s, block_s)
+    pad = n_blocks * block_s - s
+    if pad:
+        zk = jnp.zeros((b, pad, h, d), k_cache.dtype)
+        k_cache = jnp.concatenate([k_cache, zk], axis=1)
+        v_cache = jnp.concatenate([v_cache, zk], axis=1)
+    lens = jnp.broadcast_to(cache_len.astype(jnp.int32), (b, 1))
+
+    out, m, l = pl.pallas_call(
+        functools.partial(_decode_kernel, block_s=block_s,
+                          n_blocks=n_blocks),
+        grid=(b, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda bi, si: (bi, 0, 0)),
+            pl.BlockSpec((1, block_s, h, d), lambda bi, si: (bi, si, 0, 0)),
+            pl.BlockSpec((1, block_s, h, d), lambda bi, si: (bi, si, 0, 0)),
+            pl.BlockSpec((1, 1), lambda bi, si: (bi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, d), lambda bi, si: (bi, 0, 0)),
+            pl.BlockSpec((1, h), lambda bi, si: (bi, 0)),
+            pl.BlockSpec((1, h), lambda bi, si: (bi, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+                   jax.ShapeDtypeStruct((b, h), jnp.float32),
+                   jax.ShapeDtypeStruct((b, h), jnp.float32)],
+        interpret=interpret,
+    )(q, k_cache, v_cache, lens)
+    return out
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len):
+    """Oracle: plain masked softmax attention over the cache."""
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        k_cache.astype(jnp.float32))
+    scores = scores * (q.shape[-1] ** -0.5)
+    pos = jnp.arange(k_cache.shape[1])
+    scores = jnp.where(pos[None, None, :] <= cache_len, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", probs, v_cache.astype(jnp.float32))

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: fixed-arity EmbeddingBag (the recsys lookup hot path).
+
+JAX has no nn.EmbeddingBag; the jnp substrate is take+segment_sum.  This
+kernel is the fused TPU form: row ids are scalar-prefetched so the BlockSpec
+index_map DMAs exactly the needed table rows from HBM — one [1, d] row per
+(bag, slot) grid step, accumulated in the bag's revisited output block.
+No [B, n, d] gather intermediate ever materializes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(ids_ref, table_ref, w_ref, out_ref, *, mean: bool, n: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    b = pl.program_id(0)
+    row = table_ref[...].astype(jnp.float32)               # [1, d]
+    w = w_ref[0, 0] if w_ref is not None else 1.0
+    scale = (1.0 / n) if mean else 1.0
+    out_ref[...] += (row * w * scale).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def embedding_bag(table: jax.Array, ids: jax.Array,
+                  weights: jax.Array | None = None, mode: str = "sum",
+                  interpret: bool = False):
+    """table [V,d], ids [B,n] int32, weights [B,n]|None -> [B,d]."""
+    v, d = table.shape
+    b, n = ids.shape
+    if weights is None:
+        weights = jnp.ones((b, n), table.dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, n),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda bi, ji, ids: (ids[bi, ji], 0)),
+            pl.BlockSpec((1, 1), lambda bi, ji, ids: (bi, ji)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda bi, ji, ids: (bi, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_bag_kernel, mean=(mode == "mean"), n=n),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        interpret=interpret,
+    )(ids, table, weights)

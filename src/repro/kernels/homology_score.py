@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: homology-score overlap counting (paper §III-C).
+
+The TPU-native inverted index: draft doc-ids [B, k] are compared against the
+cached doc-id table [H, k] with a tiled compare-reduce — O(H·k²) int
+compares on the vector units, streamed over H tiles.  Replaces the paper's
+CPU hash-map index J (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _homology_kernel(draft_ref, cache_ref, valid_ref, out_ref, *, k: int):
+    draft = draft_ref[...]                                 # [B, k]
+    cache = cache_ref[...]                                 # [TILE_H, k]
+    valid = valid_ref[...]                                 # [TILE_H]
+    # [B, TILE_H, k_draft, k_cache] compare; any over cache slots; sum draft
+    eq = (draft[:, None, :, None] == cache[None, :, None, :])
+    eq &= (draft[:, None, :, None] >= 0)
+    overlap = jnp.sum(jnp.any(eq, axis=3).astype(jnp.float32), axis=2)
+    s = overlap / k
+    out_ref[...] = jnp.where(valid[None, :], s, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_h", "interpret"))
+def homology_score(draft_ids: jax.Array, cache_doc_ids: jax.Array,
+                   cache_valid: jax.Array, tile_h: int = 512,
+                   interpret: bool = False):
+    """draft [B,k] int32, cache [H,k] int32, valid [H] -> scores [B,H] f32."""
+    b, k = draft_ids.shape
+    h = cache_doc_ids.shape[0]
+    n_tiles = pl.cdiv(h, tile_h)
+    pad = n_tiles * tile_h - h
+    if pad:
+        cache_doc_ids = jnp.concatenate(
+            [cache_doc_ids, jnp.full((pad, k), -2, jnp.int32)], axis=0)
+        cache_valid = jnp.concatenate(
+            [cache_valid, jnp.zeros((pad,), bool)], axis=0)
+
+    out = pl.pallas_call(
+        functools.partial(_homology_kernel, k=k),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((b, k), lambda i: (0, 0)),
+            pl.BlockSpec((tile_h, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_h,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((b, tile_h), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n_tiles * tile_h), jnp.float32),
+        interpret=interpret,
+    )(draft_ids, cache_doc_ids, cache_valid)
+    return out[:, :h]

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: IVF bucket gather-and-score (the fuzzy channel).
+
+TPU mapping of Faiss's inverted-list probe: the probed bucket indices are
+*scalar-prefetched* (PrefetchScalarGridSpec) so the BlockSpec index_map can
+select which bucket block to DMA from HBM — a data-dependent gather with no
+host round-trip.  Each grid step (query b, probe p) scores one bucket on
+the MXU and folds it into the query's running top-k (revisited VMEM block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ivf_kernel(probe_ref, q_ref, vecs_ref, ids_ref, vals_ref, oidx_ref,
+                *, k: int):
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        vals_ref[...] = jnp.full(vals_ref.shape, -jnp.inf, jnp.float32)
+        oidx_ref[...] = jnp.full(oidx_ref.shape, -1, jnp.int32)
+
+    q = q_ref[...].astype(jnp.float32)                     # [1, d]
+    vecs = vecs_ref[...][0].astype(jnp.float32)            # [cap, d]
+    gids = ids_ref[...][0]                                 # [cap]
+    scores = jax.lax.dot_general(
+        q, vecs, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)[0]             # [cap]
+    scores = jnp.where(gids >= 0, scores, -jnp.inf)
+    kcol = jax.lax.iota(jnp.int32, k)
+    cap_col = jax.lax.iota(jnp.int32, scores.shape[0])
+
+    def merge(i, carry):
+        scores, vals, idx = carry                          # [cap], [1,k], [1,k]
+        cur = jnp.max(scores)
+        arg = jnp.argmax(scores).astype(jnp.int32)
+        rmin = jnp.min(vals)
+        rarg = jnp.argmin(vals).astype(jnp.int32)
+        better = cur > rmin
+        hit = (kcol == rarg) & better
+        vals = jnp.where(hit[None, :], cur, vals)
+        idx = jnp.where(hit[None, :], gids[arg], idx)
+        scores = jnp.where(cap_col == arg, -jnp.inf, scores)
+        return scores, vals, idx
+
+    _, vals, idx = jax.lax.fori_loop(
+        0, k, merge, (scores, vals_ref[...], oidx_ref[...]))
+    vals_ref[...] = vals
+    oidx_ref[...] = idx
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def ivf_scan(queries: jax.Array, probe: jax.Array, bucket_vecs: jax.Array,
+             bucket_ids: jax.Array, k: int, interpret: bool = False):
+    """queries [B,d], probe [B,P] int32, bucket_vecs [C,cap,d],
+    bucket_ids [C,cap] -> (vals [B,k] desc, global ids [B,k])."""
+    b, d = queries.shape
+    nprobe = probe.shape[1]
+    cap = bucket_vecs.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, nprobe),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda bi, pi, probe: (bi, 0)),
+            pl.BlockSpec((1, cap, d),
+                         lambda bi, pi, probe: (probe[bi, pi], 0, 0)),
+            pl.BlockSpec((1, cap),
+                         lambda bi, pi, probe: (probe[bi, pi], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda bi, pi, probe: (bi, 0)),
+            pl.BlockSpec((1, k), lambda bi, pi, probe: (bi, 0)),
+        ],
+    )
+    vals, idx = pl.pallas_call(
+        functools.partial(_ivf_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, k), jnp.float32),
+                   jax.ShapeDtypeStruct((b, k), jnp.int32)],
+        interpret=interpret,
+    )(probe, queries, bucket_vecs, bucket_ids)
+    order = jnp.argsort(-vals, axis=1)
+    return jnp.take_along_axis(vals, order, axis=1), \
+        jnp.take_along_axis(idx, order, axis=1)

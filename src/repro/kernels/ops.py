@@ -1,0 +1,57 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python per grid step, numerically identical to the TPU path.
+On TPU backends they compile through Mosaic.  ``auto_interpret()`` picks per
+platform; every wrapper also takes an explicit override.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention import decode_attention as _decode_attention
+from repro.kernels.embedding_bag import embedding_bag as _embedding_bag
+from repro.kernels.homology_score import homology_score as _homology_score
+from repro.kernels.ivf_scan import ivf_scan as _ivf_scan
+from repro.kernels.topk_search import topk_search as _topk_search
+
+
+def auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def topk_search(queries, corpus, k, tile_c: int = 1024, interpret=None):
+    if interpret is None:
+        interpret = auto_interpret()
+    return _topk_search(queries, corpus, k, tile_c=tile_c,
+                        interpret=interpret)
+
+
+def homology_score(draft_ids, cache_doc_ids, cache_valid, tile_h: int = 512,
+                   interpret=None):
+    if interpret is None:
+        interpret = auto_interpret()
+    return _homology_score(draft_ids, cache_doc_ids, cache_valid,
+                           tile_h=tile_h, interpret=interpret)
+
+
+def ivf_scan(queries, probe, bucket_vecs, bucket_ids, k, interpret=None):
+    if interpret is None:
+        interpret = auto_interpret()
+    return _ivf_scan(queries, probe, bucket_vecs, bucket_ids, k,
+                     interpret=interpret)
+
+
+def embedding_bag(table, ids, weights=None, mode="sum", interpret=None):
+    if interpret is None:
+        interpret = auto_interpret()
+    return _embedding_bag(table, ids, weights=weights, mode=mode,
+                          interpret=interpret)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, block_s: int = 512,
+                     interpret=None):
+    if interpret is None:
+        interpret = auto_interpret()
+    return _decode_attention(q, k_cache, v_cache, cache_len,
+                             block_s=block_s, interpret=interpret)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_search_ref(queries: jax.Array, corpus: jax.Array, k: int):
+    """Exact top-k by inner product. queries [B,d], corpus [N,d] ->
+    (vals [B,k], idx [B,k])."""
+    scores = (queries.astype(jnp.float32) @ corpus.astype(jnp.float32).T)
+    return jax.lax.top_k(scores, k)
+
+
+def homology_score_ref(draft_ids: jax.Array, cache_doc_ids: jax.Array,
+                       cache_valid: jax.Array):
+    """Overlap-ratio homology scores. draft [B,k], cache [H,k] -> [B,H]."""
+    k = draft_ids.shape[1]
+    eq = (draft_ids[:, None, :, None] == cache_doc_ids[None, :, None, :])
+    eq &= (draft_ids[:, None, :, None] >= 0)
+    overlap = jnp.sum(jnp.any(eq, axis=3), axis=2)       # [B, H]
+    s = overlap.astype(jnp.float32) / k
+    return jnp.where(cache_valid[None, :], s, 0.0)
+
+
+def ivf_scan_ref(queries: jax.Array, probe: jax.Array, bucket_vecs: jax.Array,
+                 bucket_ids: jax.Array, k: int):
+    """Gather probed buckets + exact local top-k.
+
+    queries [B,d], probe [B,P] bucket indices, bucket_vecs [C,cap,d],
+    bucket_ids [C,cap] -> (vals [B,k], global ids [B,k]).
+    """
+    vecs = bucket_vecs[probe]                             # [B,P,cap,d]
+    ids = bucket_ids[probe]                               # [B,P,cap]
+    s = jnp.einsum("bd,bpcd->bpc", queries.astype(jnp.float32),
+                   vecs.astype(jnp.float32))
+    s = jnp.where(ids >= 0, s, -jnp.inf)
+    b = queries.shape[0]
+    vals, pos = jax.lax.top_k(s.reshape(b, -1), k)
+    return vals, jnp.take_along_axis(ids.reshape(b, -1), pos, axis=1)
+
+
+def embedding_bag_ref(table: jax.Array, ids: jax.Array,
+                      weights: jax.Array | None = None, mode: str = "sum"):
+    """Fixed-arity EmbeddingBag. table [V,d], ids [B,n] -> [B,d]."""
+    vecs = table[ids]                                     # [B,n,d]
+    if weights is not None:
+        vecs = vecs * weights[..., None]
+    out = jnp.sum(vecs, axis=1)
+    if mode == "mean":
+        out = out / ids.shape[1]
+    return out

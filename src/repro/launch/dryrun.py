@@ -1,0 +1,214 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we build the production mesh (16x16 single-pod / 2x16x16
+multi-pod), resolve the logical shardings, and run
+``jax.jit(step).lower(*abstract_args).compile()`` over ShapeDtypeStructs —
+no real allocation.  Success proves the distribution config is coherent
+(shardings consistent, collectives supported, memory fits); the compiled
+artifact yields the roofline terms (§Roofline in EXPERIMENTS.md):
+
+  memory_analysis()  -> per-device HBM (args/temps/outputs)
+  cost_analysis()    -> HLO FLOPs + bytes accessed (per device)
+  as_text()          -> collective ops; we sum their per-device bytes
+
+Usage:
+  python -m repro.launch.dryrun --arch chatglm3-6b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import all_archs, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.utils import PRODUCTION_RULES, tree_specs
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+                "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|"
+                       r"f64|c64|c128)\[([0-9,]*)\]")
+
+
+def rules_for_mesh(mesh) -> dict:
+    """Drop mesh axes the current mesh doesn't have (e.g. 'pod')."""
+    have = set(mesh.shape.keys())
+
+    def fix(v):
+        if v is None:
+            return None
+        if isinstance(v, str):
+            return v if v in have else None
+        kept = tuple(a for a in v if a in have)
+        return kept if kept else None
+
+    return {k: fix(v) for k, v in PRODUCTION_RULES.items()}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device payload bytes of every collective op in the HLO."""
+    out = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        for coll in _COLLECTIVES:
+            # match `<result-shape> <coll>(` — op use, not a metadata mention
+            m = re.search(r"=\s+(\(?[a-z0-9\[\],{}\s/#_.-]+?\)?)\s+"
+                          + coll + r"(-start|-done)?\(", stripped)
+            if not m:
+                continue
+            if m.group(2) == "-done":   # avoid double counting start/done
+                continue
+            result = m.group(1)
+            nbytes = 0
+            for dm in _SHAPE_RE.finditer(result):
+                dims = dm.group(2)
+                n = int(np.prod([int(x) for x in dims.split(",") if x])) \
+                    if dims else 1
+                nbytes += n * _DTYPE_BYTES[dm.group(1)]
+            out[coll] += nbytes
+            counts[coll] += 1
+            break
+    out_counts = {f"n_{k}": v for k, v in counts.items()}
+    return {**out, **out_counts, "total": sum(out[c] for c in _COLLECTIVES)}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool = False,
+             keep_hlo: bool = False, **variant) -> dict:
+    spec = get_arch(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for_mesh(mesh)
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "x".join(str(s) for s in mesh.devices.shape),
+           "n_devices": int(np.prod(mesh.devices.shape)), "ok": False}
+    if variant:
+        rec["variant"] = dict(variant)
+    try:
+        bundle = spec.make_bundle(shape, rules, mesh, **variant)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        in_specs = tuple(
+            jax.tree.map(lambda s: NamedSharding(mesh, s),
+                         tree_specs(lg, rules),
+                         is_leaf=lambda x: isinstance(x, P))
+            for lg in bundle.arg_logical)
+        with mesh:
+            jitted = jax.jit(bundle.fn, in_shardings=in_specs,
+                             donate_argnums=bundle.donate_argnums)
+            t0 = time.perf_counter()
+            lowered = jitted.lower(*bundle.abstract_args)
+            rec["lower_s"] = round(time.perf_counter() - t0, 2)
+            t0 = time.perf_counter()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.perf_counter() - t0, 2)
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes"):
+                try:
+                    rec[field] = int(getattr(mem, field))
+                except (AttributeError, TypeError):
+                    pass
+        cost = compiled.cost_analysis()
+        if cost:
+            rec["flops_per_device"] = float(cost.get("flops", -1))
+            rec["bytes_per_device"] = float(cost.get("bytes accessed", -1))
+        txt = compiled.as_text()
+        rec["collectives"] = collective_bytes(txt)
+        rec["hlo_ops"] = {c: txt.count(c + "(") for c in _COLLECTIVES}
+        if keep_hlo:
+            rec["hlo"] = txt
+        rec["ok"] = True
+        print(f"[dryrun] OK  {arch:18s} {shape:14s} mesh={rec['mesh']} "
+              f"lower={rec.get('lower_s')}s compile={rec.get('compile_s')}s "
+              f"flops/dev={rec.get('flops_per_device', 0):.3e} "
+              f"coll={rec['collectives']['total']:.3e}B", flush=True)
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[dryrun] FAIL {arch} {shape} multi_pod={multi_pod}: "
+              f"{rec['error']}", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--probe", action="store_true",
+                    help="also lower unrolled 1/2-layer variants (single-pod) "
+                         "for exact per-layer roofline terms")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip cells already OK in --out")
+    args = ap.parse_args()
+
+    cells = []
+    meshes = [True, False] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        for arch in all_archs():
+            for shape in get_arch(arch).shapes:
+                for mp in meshes:
+                    cells.append((arch, shape, mp, {}))
+    else:
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp, {}))
+
+    if args.probe:
+        for arch, shape, mp, _ in list(cells):
+            if get_arch(arch).family in ("lm", "gnn") and not mp:
+                cells.append((arch, shape, False,
+                              dict(n_layers=1, unroll=True)))
+                cells.append((arch, shape, False,
+                              dict(n_layers=2, unroll=True)))
+
+    results = []
+    done = set()
+
+    def cell_key(r):
+        v = r.get("variant") or {}
+        return (r["arch"], r["shape"], r["n_devices"],
+                v.get("n_layers"), bool(v.get("unroll")))
+
+    if args.out and os.path.exists(args.out):
+        results = json.load(open(args.out))
+        if args.skip_done:
+            done = {cell_key(r) for r in results if r.get("ok")}
+
+    for arch, shape, mp, variant in cells:
+        nd = 512 if mp else 256
+        key = (arch, shape, nd, variant.get("n_layers"),
+               bool(variant.get("unroll")))
+        if key in done:
+            continue
+        rec = run_cell(arch, shape, multi_pod=mp, **variant)
+        results = [r for r in results if cell_key(r) != cell_key(rec)]
+        results.append(rec)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+
+    n_ok = sum(r["ok"] for r in results)
+    print(f"[dryrun] {n_ok}/{len(results)} cells OK")
+
+
+if __name__ == "__main__":
+    main()

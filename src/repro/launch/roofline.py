@@ -1,0 +1,189 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms per (arch x shape) on the single-pod 16x16 mesh (v5e constants):
+
+  compute    = HLO_FLOPs_per_chip / 197e12            [s]
+  memory     = HLO_bytes_per_chip / 819e9             [s]
+  collective = collective_bytes_per_chip / 50e9       [s]
+
+XLA's cost analysis counts a while (lax.scan) body ONCE, so scanned models
+(LM layers, DimeNet blocks) are corrected exactly from the fully-unrolled
+1- and 2-layer probe lowerings:  per_layer = u2 - u1;
+total = u1 + (L-1) * per_layer.  MODEL_FLOPS uses the standard analytic
+counts (6·N_active·tokens for training, forward-only for serving, plus the
+attention S² term), giving the useful-compute ratio that catches
+remat/dispatch/padding waste.
+
+  python -m repro.launch.roofline --dryrun results/dryrun.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+
+PEAK_FLOPS = 197e12     # bf16 / chip (v5e)
+HBM_BW = 819e9          # B/s / chip
+ICI_BW = 50e9           # B/s / link
+
+CHIPS = 256             # single-pod roofline
+
+
+def _model_flops(arch: str, shape: str, cfg) -> float:
+    """Analytic useful FLOPs for the whole step (all chips)."""
+    from repro.configs import get_arch
+    spec = get_arch(arch)
+    if spec.family == "lm":
+        c = spec.config
+        dims = spec.shapes[shape].dims
+        b, s = dims["global_batch"], dims["seq_len"]
+        n_act = c.active_param_count()
+        attn_fwd = 4 * b * c.n_layers * c.n_heads * c.d_head * (s ** 2) / 2
+        if shape == "train_4k":
+            return 6 * n_act * b * s + 3 * attn_fwd
+        if shape == "prefill_32k":
+            return 2 * n_act * b * s + attn_fwd
+        # decode: one token against an s-long cache
+        return 2 * n_act * b + 4 * b * c.n_layers * c.n_heads * c.d_head * s
+    if spec.family == "gnn":
+        d = spec.shapes[shape].dims
+        c = spec.config
+        dh, nb, blocks = c.d_hidden, c.n_bilinear, c.n_blocks
+        t, e = d["n_triplets"], d["n_edges"]
+        per_block = 2 * t * nb * dh * dh + 2 * t * nb * dh \
+            + 4 * e * dh * dh * 2
+        fwd = blocks * per_block + 2 * d["n_nodes"] * d["d_feat"] * dh
+        return 3 * fwd                                   # train
+    if spec.family == "recsys":
+        c = spec.config
+        d = spec.shapes[shape].dims
+        b = d.get("batch", 1)
+        lookup = b * c.n_sparse * c.embed_dim * 2
+        if c.kind == "dlrm":
+            mlps = sum(a * bb for a, bb in zip(
+                (c.n_dense,) + c.bot_mlp[:-1], c.bot_mlp))
+            n_inter = (c.n_sparse + 1) * c.n_sparse // 2
+            mlps += sum(a * bb for a, bb in zip(
+                (n_inter + c.bot_mlp[-1],) + c.top_mlp[:-1], c.top_mlp))
+            fwd = b * mlps * 2 + b * (c.n_sparse + 1) ** 2 * c.embed_dim
+        elif c.kind == "deepfm":
+            mlps = sum(a * bb for a, bb in zip(
+                (c.n_sparse * c.embed_dim,) + c.mlp, c.mlp + (1,)))
+            fwd = b * mlps * 2 + b * c.n_sparse * c.embed_dim * 4
+        elif c.kind == "autoint":
+            per = c.n_sparse * (3 * c.embed_dim * c.d_attn * c.n_heads * 2
+                                + 2 * c.n_sparse * c.d_attn * c.n_heads * 2)
+            fwd = b * c.n_attn_layers * per
+        else:  # bert4rec
+            dd = c.embed_dim
+            s = c.seq_len
+            per = s * (12 * dd * dd) + 4 * s * s * dd
+            fwd = b * (c.n_blocks * per + 2 * s * dd * c.total_vocab)
+        if shape == "retrieval_cand":
+            return 2 * d["n_candidates"] * c.embed_dim
+        fwd += lookup
+        return 3 * fwd if shape == "train_batch" else fwd
+    if spec.family == "rag":
+        c = spec.config
+        # full f32 scan + int8 fuzzy scan + cache channel, per query batch
+        return 2 * c.corpus_size * c.d * 2 * c.query_batch
+    return 0.0
+
+
+def analyze(records: list[dict]) -> list[dict]:
+    from repro.configs import get_arch
+    base = {}
+    probes = defaultdict(dict)
+    for r in records:
+        if not r.get("ok"):
+            continue
+        v = r.get("variant") or {}
+        key = (r["arch"], r["shape"])
+        if v.get("unroll"):
+            probes[key][v["n_layers"]] = r
+        elif r["n_devices"] == CHIPS:
+            base[key] = r
+
+    out = []
+    for (arch, shape), rec in sorted(base.items()):
+        spec = get_arch(arch)
+        layers = None
+        if spec.family == "lm":
+            layers = spec.config.n_layers
+        elif spec.family == "gnn":
+            layers = spec.config.n_blocks
+
+        def corrected(field):
+            raw = rec.get(field, 0.0) or 0.0
+            p = probes.get((arch, shape), {})
+            if layers and 1 in p and 2 in p:
+                u1 = p[1].get(field, 0.0) or 0.0
+                u2 = p[2].get(field, 0.0) or 0.0
+                return u1 + (layers - 1) * (u2 - u1)
+            return raw
+
+        flops = corrected("flops_per_device")
+        mem = corrected("bytes_per_device")
+        p = probes.get((arch, shape), {})
+        if layers and 1 in p and 2 in p:
+            c1 = p[1]["collectives"]["total"]
+            c2 = p[2]["collectives"]["total"]
+            coll = c1 + (layers - 1) * (c2 - c1)
+        else:
+            coll = rec["collectives"]["total"]
+
+        t_comp = flops / PEAK_FLOPS
+        t_mem = mem / HBM_BW
+        t_coll = coll / ICI_BW
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        step_time = max(terms.values())
+        mflops = _model_flops(arch, shape, spec.config)
+        ratio = mflops / (flops * CHIPS) if flops else 0.0
+        mfu = (mflops / CHIPS / step_time) / PEAK_FLOPS if step_time else 0.0
+        out.append({
+            "arch": arch, "shape": shape,
+            "flops_per_chip": flops, "bytes_per_chip": mem,
+            "coll_bytes_per_chip": coll,
+            "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll,
+            "dominant": dominant,
+            "model_flops_total": mflops,
+            "useful_ratio": ratio,
+            "roofline_frac": mfu if mflops else None,
+            "corrected": bool(layers and 1 in p and 2 in p),
+        })
+    return out
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | useful FLOP ratio | roofline frac |")
+    sep = "|" + "---|" * 8
+    lines = [hdr, sep]
+    for r in rows:
+        rf = f"{r['roofline_frac']:.3f}" if r["roofline_frac"] else "-"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} "
+            f"| {r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.3f} | {rf} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun.json")
+    ap.add_argument("--out", default="results/roofline")
+    args = ap.parse_args()
+    records = json.load(open(args.dryrun))
+    rows = analyze(records)
+    with open(args.out + ".json", "w") as f:
+        json.dump(rows, f, indent=1)
+    md = to_markdown(rows)
+    with open(args.out + ".md", "w") as f:
+        f.write(md + "\n")
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Serving driver: HaS speculative retrieval over a synthetic query stream.
+
+  python -m repro.launch.serve --queries 2000 --dataset granola --tau 0.2
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", type=int, default=2000)
+    ap.add_argument("--dataset", default="granola",
+                    choices=["granola", "popqa", "triviaqa", "squad"])
+    ap.add_argument("--engine", default="has",
+                    choices=["has", "full", "proximity", "saferadius",
+                             "mincache", "crag", "ivf", "scann"])
+    ap.add_argument("--tau", type=float, default=0.2)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--h-max", type=int, default=5000)
+    ap.add_argument("--entities", type=int, default=20000)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.core.has import HasConfig
+    from repro.data.synthetic import DATASETS, SyntheticWorld, WorldConfig
+    from repro.serving.engine import (ANNSEngine, CRAGEngine,
+                                      FullRetrievalEngine, HasEngine,
+                                      ReuseEngine, RetrievalService)
+    from repro.serving.latency import LatencyModel
+
+    world = SyntheticWorld(WorldConfig(n_entities=args.entities,
+                                       seed=args.seed))
+    svc = RetrievalService(world, LatencyModel(), k=args.k)
+    ds = DATASETS[args.dataset]
+    queries = world.sample_queries(
+        args.queries, pattern=ds["pattern"], zipf_a=ds["zipf_a"],
+        p_uncovered=ds["p_uncovered"], seed=args.seed + 1)
+
+    if args.engine == "has":
+        engine = HasEngine(svc, HasConfig(
+            k=args.k, tau=args.tau, h_max=args.h_max,
+            nprobe=16, n_buckets=2048, d=world.cfg.d))
+    elif args.engine == "full":
+        engine = FullRetrievalEngine(svc)
+    elif args.engine in ("proximity", "saferadius", "mincache"):
+        engine = ReuseEngine(svc, args.engine, h_max=args.h_max)
+    elif args.engine == "crag":
+        engine = CRAGEngine(svc, HasConfig(
+            k=args.k, tau=args.tau, h_max=args.h_max,
+            nprobe=16, n_buckets=2048, d=world.cfg.d))
+    else:
+        engine = ANNSEngine(svc, method=args.engine)
+
+    result = engine.serve(queries, dataset=args.dataset, seed=args.seed)
+    print(f"[serve] engine={args.engine} dataset={args.dataset}")
+    for k, v in result.summary().items():
+        print(f"  {k:20s} {v:.4f}")
+
+
+if __name__ == "__main__":
+    main()

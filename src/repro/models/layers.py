@@ -1,0 +1,386 @@
+"""Shared neural-net layers: norms, RoPE, GQA attention, SwiGLU MLP, MoE.
+
+All layers are pure functions over explicit parameter pytrees.  Each
+``init_*`` has a matching ``*_logical`` returning the same-structure pytree of
+logical-axis tuples used for sharding (see utils.logical_to_spec).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import constrain
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_logical():
+    return {"scale": ("d_model",)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_table(positions: jax.Array, dim: int, theta: float = 10000.0):
+    """[.., dim/2] cos/sin tables for the given positions."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # [..., dim/2]
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+               fraction: float = 1.0) -> jax.Array:
+    """Apply rotary embedding to the first ``fraction`` of head dims.
+
+    x: [B, S, H, D]; positions: [B, S].  ``fraction=0.5`` reproduces
+    ChatGLM's 2D-RoPE convention (rotate half the dims, pass the rest).
+    """
+    d = x.shape[-1]
+    rot_d = int(d * fraction)
+    if rot_d == 0:
+        return x
+    rot_d -= rot_d % 2
+    x_rot, x_pass = x[..., :rot_d], x[..., rot_d:]
+    cos, sin = rope_table(positions, rot_d, theta)          # [B, S, rot_d/2]
+    cos = cos[:, :, None, :]                                # [B, S, 1, rot_d/2]
+    sin = sin[:, :, None, :]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    y = jnp.stack([y1, y2], axis=-1).reshape(x_rot.shape)
+    out = jnp.concatenate([y, x_pass], axis=-1) if x_pass.shape[-1] else y
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal / bidirectional, TP policies)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   d_head: int, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    return {
+        "wq": jax.random.normal(k1, (d_model, n_heads, d_head), dtype) * s,
+        "wk": jax.random.normal(k2, (d_model, n_kv_heads, d_head), dtype) * s,
+        "wv": jax.random.normal(k3, (d_model, n_kv_heads, d_head), dtype) * s,
+        "wo": jax.random.normal(k4, (n_heads, d_head, d_model), dtype)
+              * ((n_heads * d_head) ** -0.5),
+    }
+
+
+def attention_logical(head_tp: bool):
+    """Logical axes for attention params.
+
+    head_tp=True  -> classic Megatron head-sharded QKV/O.
+    head_tp=False -> heads replicated; activations are sequence-sharded instead
+                     (used when n_heads % tp_size != 0).
+    """
+    h = "heads" if head_tp else None
+    return {
+        "wq": ("fsdp", h, None),
+        "wk": ("fsdp", "kv_heads", None),
+        "wv": ("fsdp", "kv_heads", None),
+        "wo": (h, None, "fsdp"),
+    }
+
+
+def _repeat_kv(k, n_heads):
+    """GQA: repeat KV heads to match query heads (avoids sharded reshapes)."""
+    group = n_heads // k.shape[2]
+    return jnp.repeat(k, group, axis=2) if group > 1 else k
+
+
+def _attend_block(q_blk, k, v, scale, q_pos, causal, mask, dtype):
+    """q_blk [B,bq,H,D], k/v [B,T,H,D], q_pos [bq] -> out [B,bq,H,D]."""
+    scores = jnp.einsum("bshd,bthd->bhst", q_blk, k) * scale
+    t = k.shape[1]
+    if causal:
+        j = jnp.arange(t)[None, :]
+        scores = jnp.where(j <= q_pos[:, None], scores, -1e30)
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def attention(params, x, positions, *, causal: bool, rope_theta: float,
+              rope_fraction: float = 1.0, rules=None, head_tp: bool = True,
+              kv_cache=None, cache_index=None, mask=None, block_q: int = 0,
+              head_pad_to: int = 0):
+    """Multi-head GQA attention (head-sharded tensor parallel).
+
+    Sharding scheme (production mesh): the residual stream is
+    sequence-sharded over 'model' (Megatron sequence parallelism); QKV
+    activations are head-sharded ('heads' -> model; GSPMD pads uneven head
+    counts such as arctic's 56/16).  KV heads are replicated (GQA KVs are
+    small) and repeated to match Q heads so no sharded dim is reshaped.
+
+    block_q > 0 scans the query dim in blocks of that size, bounding the
+    transient score matrix to [B, H, block_q, T] — required for 32k prefill.
+
+    With kv_cache (decode): x is [B,1,Dm]; the cache's KV-seq dim shards over
+    'model' ('data'+'model' at 500k), turning softmax normalization into a
+    flash-decoding-style cross-shard reduction under GSPMD.
+    Returns (out, new_cache).
+    """
+    b, s, _ = x.shape
+    n_heads = params["wq"].shape[1]
+    d_head = params["wq"].shape[-1]
+    scale = d_head ** -0.5
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, positions, rope_theta, rope_fraction)
+    k = apply_rope(k, positions, rope_theta, rope_fraction)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        # decode: write the new K/V at cache_index, attend over the cache.
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            ck, k.astype(ck.dtype), cache_index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cv, v.astype(cv.dtype), cache_index, axis=1)
+        kv_seq_ax = "kv_seq_long" if ck.shape[1] >= 2 ** 18 else "kv_seq"
+        ck = constrain(ck, ("batch", kv_seq_ax, "kv_heads", None), rules)
+        cv = constrain(cv, ("batch", kv_seq_ax, "kv_heads", None), rules)
+        kf = _repeat_kv(ck, n_heads)
+        vf = _repeat_kv(cv, n_heads)
+        scores = jnp.einsum("bshd,bthd->bhst", q.astype(kf.dtype), kf) * scale
+        t_idx = jnp.arange(ck.shape[1])
+        valid = t_idx[None, None, None, :] <= cache_index
+        scores = jnp.where(valid, scores, -1e30)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhst,bthd->bshd", probs, vf.astype(x.dtype))
+        new_cache = (ck, cv)
+    else:
+        # zero-pad heads up to a TP-divisible count (e.g. arctic 56 -> 64):
+        # padded q rows give uniform softmax but are sliced away before wo,
+        # so the math is exact while the hot compute head-shards cleanly.
+        h_eff = max(head_pad_to, n_heads) if (head_tp or head_pad_to) \
+            else n_heads
+        head_ax = "heads" if (head_tp or head_pad_to) else None
+        kf = _repeat_kv(k, n_heads)
+        vf = _repeat_kv(v, n_heads)
+        if h_eff > n_heads:
+            pad = [(0, 0), (0, 0), (0, h_eff - n_heads), (0, 0)]
+            q = jnp.pad(q, pad)
+            kf = jnp.pad(kf, pad)
+            vf = jnp.pad(vf, pad)
+        q = constrain(q, ("batch", None, head_ax, None), rules)
+        kf = constrain(kf, ("batch", None, head_ax, None), rules)
+        vf = constrain(vf, ("batch", None, head_ax, None), rules)
+        if block_q and s % block_q == 0 and s > block_q:
+            nb = s // block_q
+            q_blocks = q.reshape(b, nb, block_q, h_eff, d_head)
+            pos = jnp.arange(s).reshape(nb, block_q)
+
+            def body(_, inp):
+                qb, pb = inp
+                ob = _attend_block(qb, kf, vf, scale, pb, causal, mask, x.dtype)
+                return None, ob
+
+            _, out = jax.lax.scan(
+                body, None, (q_blocks.swapaxes(0, 1), pos))
+            out = out.swapaxes(0, 1).reshape(b, s, h_eff, d_head)
+        else:
+            out = _attend_block(q, kf, vf, scale, jnp.arange(s), causal,
+                                mask, x.dtype)
+        out = constrain(out, ("batch", None, head_ax, None), rules)
+        if h_eff > n_heads:
+            out = out[:, :, :n_heads, :]
+        new_cache = None
+
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    out = constrain(out, ("batch", "seq", "d_model"), rules)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool = True, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    s_in, s_out = d_model ** -0.5, d_ff ** -0.5
+    p = {"w_in": jax.random.normal(ks[0], (d_model, d_ff), dtype) * s_in,
+         "w_out": jax.random.normal(ks[1], (d_ff, d_model), dtype) * s_out}
+    if gated:
+        p["w_gate"] = jax.random.normal(ks[2], (d_model, d_ff), dtype) * s_in
+    return p
+
+
+def mlp_logical(gated: bool = True):
+    p = {"w_in": ("fsdp", "d_ff"), "w_out": ("d_ff", "fsdp")}
+    if gated:
+        p["w_gate"] = ("fsdp", "d_ff")
+    return p
+
+
+def mlp(params, x, rules=None):
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"])
+    if "w_gate" in params:
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, ("batch", None, "d_ff"), rules)
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_out"])
+    return constrain(out, ("batch", "seq", "d_model"), rules)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (top-k routing, sort-based capacity dispatch)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    s_in, s_out = d_model ** -0.5, d_ff ** -0.5
+    return {
+        "router": jax.random.normal(ks[0], (d_model, n_experts), jnp.float32) * s_in,
+        "w_in": jax.random.normal(ks[1], (n_experts, d_model, d_ff), dtype) * s_in,
+        "w_gate": jax.random.normal(ks[2], (n_experts, d_model, d_ff), dtype) * s_in,
+        "w_out": jax.random.normal(ks[3], (n_experts, d_ff, d_model), dtype) * s_out,
+    }
+
+
+def moe_logical():
+    # experts own the 'model' axis (EP); the FSDP ('data') axis shards the
+    # d_model dim — a second use of 'model' (e.g. on d_ff) would double-map.
+    return {
+        "router": ("fsdp", None),
+        "w_in": ("experts", "fsdp", None),
+        "w_gate": ("experts", "fsdp", None),
+        "w_out": ("experts", None, "fsdp"),
+    }
+
+
+def _moe_dispatch(xt, router, top_k, capacity, e):
+    """Sort-based capacity dispatch for one token group.
+
+    xt [T, Dm] -> (buf [E, cap, Dm], combine info).  Tokens beyond an
+    expert's capacity are dropped (standard capacity-bounded MoE).
+    """
+    t, dm = xt.shape
+    logits = (xt.astype(jnp.float32) @ router)                    # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, top_k)                # [T, k]
+    gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)
+
+    # aux load-balancing loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], e), axis=0)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux_loss = jnp.sum(density * density_proxy) * e
+
+    flat_e = gate_idx.reshape(-1)                                  # [T*k]
+    flat_t = jnp.repeat(jnp.arange(t), top_k)
+    flat_w = gate_w.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    seg_start = jnp.searchsorted(se, jnp.arange(e))                # [E]
+    pos = jnp.arange(t * top_k) - seg_start[se]
+    keep = pos < capacity
+    slot = se * capacity + jnp.where(keep, pos, 0)
+
+    buf = jnp.zeros((e * capacity, dm), xt.dtype)
+    src = jnp.where(keep, st, t)  # t == out-of-range sentinel
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, dm), xt.dtype)], axis=0)
+    buf = buf.at[slot].set(jnp.where(keep[:, None], xt_pad[src], 0.0),
+                           mode="drop")
+    return buf.reshape(e, capacity, dm), (slot, src, sw, keep), aux_loss
+
+
+def _moe_combine(out_buf, info, t, dm, dtype):
+    slot, src, sw, keep = info
+    flat = out_buf.reshape(-1, dm)
+    gathered = (flat[slot] * (sw * keep)[:, None]).astype(dtype)
+    out = jnp.zeros((t + 1, dm), dtype).at[src].add(gathered, mode="drop")
+    return out[:t]
+
+
+def _moe_experts(params, buf, rules):
+    h_in = jnp.einsum("ecd,edf->ecf", buf, params["w_in"])
+    h_gate = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    h = jax.nn.silu(h_gate) * h_in
+    h = constrain(h, ("experts", None, None), rules)
+    return jnp.einsum("ecf,efd->ecd", h, params["w_out"])
+
+
+def moe(params, x, *, top_k: int, capacity_factor: float = 1.25, rules=None,
+        dp_groups: int = 1):
+    """Top-k MoE with sort-based, fixed-capacity dispatch (drops overflow).
+
+    x: [B, S, Dm].  Expert weights are [E, ...] sharded over 'experts'
+    (model axis).
+
+    dp_groups=1: flat dispatch — a single global scatter into the expert
+    buffer.  Correct, but under GSPMD the token->expert scatter crosses the
+    (batch -> experts) sharding boundary and materializes the buffer by
+    all-reduce (measured ~338 GB/device/layer on dbrx train_4k).
+
+    dp_groups=DP: hierarchical dispatch (the §Perf hillclimb): tokens are
+    dispatched *within* each data-parallel group into per-group expert
+    buffers [G, E, cap/G, Dm]; the single [G, E] -> [E, G] transpose is the
+    classic MoE all-to-all, moving only the routed tokens (the theoretical
+    minimum payload).  Per-group capacity = global capacity / G, the
+    standard local-capacity semantics of production MoE systems.
+    Returns (out, aux_loss).
+    """
+    b, s, dm = x.shape
+    e = params["router"].shape[-1]
+    t = b * s
+
+    if dp_groups <= 1:
+        xt = x.reshape(t, dm)
+        capacity = int(capacity_factor * t * top_k / e) + 1
+        buf, info, aux = _moe_dispatch(xt, params["router"], top_k,
+                                       capacity, e)
+        buf = constrain(buf, ("experts", None, "d_model"), rules)
+        out_buf = _moe_experts(params, buf, rules)
+        out = _moe_combine(out_buf, info, t, dm, x.dtype)
+        out = out.reshape(b, s, dm)
+        return constrain(out, ("batch", "seq", "d_model"), rules), aux
+
+    g = dp_groups
+    t_g = t // g
+    cap_g = int(capacity_factor * t_g * top_k / e) + 1
+    xg = x.reshape(g, t_g, dm)
+    xg = constrain(xg, ("batch", None, "d_model"), rules)
+
+    bufs, infos, auxs = jax.vmap(
+        lambda xt: _moe_dispatch(xt, params["router"], top_k, cap_g, e)
+    )(xg)                                             # [G, E, cap_g, Dm]
+    # 2-D parallel expert compute: groups stay data-sharded, experts take
+    # the model axis — each device computes its (expert-slice x group-slice)
+    # block; no buffer ever crosses the data axis.
+    buf = bufs.transpose(1, 0, 2, 3)                  # [E, G, cap_g, Dm]
+    buf = constrain(buf, ("experts", "batch", None, None), rules)
+    h_in = jnp.einsum("egcd,edf->egcf", buf, params["w_in"])
+    h_gate = jnp.einsum("egcd,edf->egcf", buf, params["w_gate"])
+    h = jax.nn.silu(h_gate) * h_in
+    h = constrain(h, ("experts", "batch", None, None), rules)
+    out_buf = jnp.einsum("egcf,efd->egcd", h, params["w_out"])
+    out_g = out_buf.transpose(1, 0, 2, 3)             # [G, E, cap_g, Dm]
+    out_g = constrain(out_g, ("batch", None, None, None), rules)
+    out = jax.vmap(lambda ob, info: _moe_combine(ob, info, t_g, dm,
+                                                 x.dtype))(out_g, infos)
+    out = out.reshape(b, s, dm)
+    return constrain(out, ("batch", "seq", "d_model"), rules), jnp.mean(auxs)

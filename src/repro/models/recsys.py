@@ -1,0 +1,348 @@
+"""RecSys model family: DLRM-RM2, DeepFM, AutoInt, BERT4Rec.
+
+The shared substrate is :func:`embedding_bag` — JAX has no nn.EmbeddingBag, so
+lookups are built from ``jnp.take`` + ``jax.ops.segment_sum`` (multi-hot) over
+one *concatenated* embedding table whose row dim shards over the ``model``
+mesh axis (classic DLRM model parallelism).  Dense MLPs are data-parallel.
+
+Shapes (per the assignment):
+  train_batch    batch=65536          training (logloss)
+  serve_p99      batch=512            online inference
+  serve_bulk     batch=262144         offline scoring
+  retrieval_cand batch=1, 1M cands    two-tower scoring via the ENNS path
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import constrain
+
+# Criteo Kaggle per-field vocabulary sizes (26 categorical fields), the
+# standard DLRM benchmark tables [arXiv:1906.00091].
+CRITEO_VOCABS = (1460, 583, 10131227, 2202608, 305, 24, 12517, 633, 3, 93145,
+                 5683, 8351593, 3194, 27, 14992, 5461306, 10, 5652, 2173, 4,
+                 7046547, 18, 15, 286181, 105, 142572)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    kind: str                      # dlrm | deepfm | autoint | bert4rec
+    vocab_sizes: tuple[int, ...]   # per sparse field
+    embed_dim: int
+    n_dense: int = 0
+    bot_mlp: tuple[int, ...] = ()
+    top_mlp: tuple[int, ...] = ()
+    mlp: tuple[int, ...] = ()
+    # autoint
+    n_attn_layers: int = 0
+    n_heads: int = 0
+    d_attn: int = 0
+    # bert4rec
+    n_blocks: int = 0
+    seq_len: int = 0
+    param_dtype: Any = jnp.float32
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def total_vocab(self) -> int:
+        return int(sum(self.vocab_sizes))
+
+    def field_offsets(self) -> jnp.ndarray:
+        import numpy as np
+        return jnp.asarray(np.concatenate([[0], np.cumsum(self.vocab_sizes)[:-1]]),
+                           jnp.int32)
+
+    def param_count(self) -> int:
+        n = self.total_vocab * self.embed_dim
+        dims_chain = []
+        if self.kind == "dlrm":
+            dims_chain += [(self.n_dense,) + self.bot_mlp]
+            n_inter = (self.n_sparse + 1) * self.n_sparse // 2
+            dims_chain += [(n_inter + self.bot_mlp[-1],) + self.top_mlp]
+        elif self.kind == "deepfm":
+            dims_chain += [(self.n_sparse * self.embed_dim,) + self.mlp + (1,)]
+            n += self.total_vocab  # first-order weights
+        elif self.kind == "autoint":
+            per = self.embed_dim * self.d_attn * self.n_heads * 3 \
+                + self.d_attn * self.n_heads * self.embed_dim
+            n += self.n_attn_layers * per
+            n += self.n_sparse * self.embed_dim  # final logit proj
+        elif self.kind == "bert4rec":
+            d = self.embed_dim
+            per = 4 * d * d + 8 * d * d // 1  # attn + mlp(4x)
+            n += self.n_blocks * per + self.seq_len * d
+        for dims in dims_chain:
+            for i in range(len(dims) - 1):
+                n += dims[i] * dims[i + 1] + dims[i + 1]
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Embedding bag substrate
+# ---------------------------------------------------------------------------
+
+def padded_vocab(cfg: RecsysConfig) -> int:
+    """Table rows rounded up so the vocab dim shards evenly (pad rows are
+    never indexed: field offsets cover only the real vocabulary)."""
+    return (cfg.total_vocab + 255) // 256 * 256
+
+
+def init_embedding_table(cfg: RecsysConfig, key):
+    return jax.random.normal(
+        key, (padded_vocab(cfg), cfg.embed_dim), cfg.param_dtype) * 0.05
+
+
+def embedding_lookup(table, ids, offsets):
+    """Single-valued categorical lookup.
+
+    table [V_total, D] (vocab-sharded); ids [B, F] per-field local ids;
+    offsets [F] row offsets of each field in the concatenated table.
+    -> [B, F, D]
+    """
+    flat = ids + offsets[None, :]
+    return jnp.take(table, flat, axis=0)
+
+
+def embedding_bag(table, ids, segment_ids, n_bags, mode="sum", weights=None):
+    """Multi-hot EmbeddingBag: gather + segment-reduce.
+
+    ids [L] global row ids, segment_ids [L] bag assignment (sorted),
+    -> [n_bags, D].
+    """
+    vecs = jnp.take(table, ids, axis=0)
+    if weights is not None:
+        vecs = vecs * weights[:, None]
+    out = jax.ops.segment_sum(vecs, segment_ids, num_segments=n_bags)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(ids, jnp.float32),
+                                  segment_ids, num_segments=n_bags)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def _init_mlp_chain(key, dims: Sequence[int], dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": jax.random.normal(ks[i], (dims[i], dims[i + 1]), dtype)
+                  * dims[i] ** -0.5,
+             "b": jnp.zeros((dims[i + 1],), dtype)}
+            for i in range(len(dims) - 1)]
+
+
+def _mlp_chain(layers, x, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _mlp_chain_logical(layers):
+    # CTR MLPs are KB-to-MB scale: replicate (sharding a 13x512 layer over a
+    # 16-way axis is impossible and pointless; the tables carry the memory)
+    return [{"w": (None, None), "b": (None,)} for _ in layers]
+
+
+# ---------------------------------------------------------------------------
+# DLRM
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: RecsysConfig, key) -> dict:
+    ke, k1, k2, k3 = jax.random.split(key, 4)
+    p: dict = {"table": init_embedding_table(cfg, ke)}
+    if cfg.kind == "dlrm":
+        p["bot"] = _init_mlp_chain(k1, (cfg.n_dense,) + cfg.bot_mlp,
+                                   cfg.param_dtype)
+        n_inter = (cfg.n_sparse + 1) * cfg.n_sparse // 2
+        p["top"] = _init_mlp_chain(k2, (n_inter + cfg.bot_mlp[-1],)
+                                   + cfg.top_mlp, cfg.param_dtype)
+    elif cfg.kind == "deepfm":
+        p["w1"] = jax.random.normal(k1, (padded_vocab(cfg),), cfg.param_dtype) * 0.01
+        p["deep"] = _init_mlp_chain(
+            k2, (cfg.n_sparse * cfg.embed_dim,) + cfg.mlp + (1,),
+            cfg.param_dtype)
+    elif cfg.kind == "autoint":
+        d, da, h = cfg.embed_dim, cfg.d_attn, cfg.n_heads
+        ks = jax.random.split(k1, cfg.n_attn_layers)
+        p["attn"] = [
+            {"wq": jax.random.normal(jax.random.fold_in(ks[i], 0),
+                                     (d if i == 0 else da * h, h, da),
+                                     cfg.param_dtype) * 0.05,
+             "wk": jax.random.normal(jax.random.fold_in(ks[i], 1),
+                                     (d if i == 0 else da * h, h, da),
+                                     cfg.param_dtype) * 0.05,
+             "wv": jax.random.normal(jax.random.fold_in(ks[i], 2),
+                                     (d if i == 0 else da * h, h, da),
+                                     cfg.param_dtype) * 0.05,
+             "wres": jax.random.normal(jax.random.fold_in(ks[i], 3),
+                                       (d if i == 0 else da * h, h * da),
+                                       cfg.param_dtype) * 0.05}
+            for i in range(cfg.n_attn_layers)]
+        p["out"] = jax.random.normal(
+            k2, (cfg.n_sparse * cfg.d_attn * cfg.n_heads,), cfg.param_dtype) * 0.01
+    elif cfg.kind == "bert4rec":
+        from repro.models import layers as L
+        d = cfg.embed_dim
+        ks = jax.random.split(k1, cfg.n_blocks)
+        p["pos_embed"] = jax.random.normal(
+            k2, (cfg.seq_len, d), cfg.param_dtype) * 0.02
+        p["blocks"] = [
+            {"attn_norm": L.init_rmsnorm(d, cfg.param_dtype),
+             "mlp_norm": L.init_rmsnorm(d, cfg.param_dtype),
+             "attn": L.init_attention(jax.random.fold_in(ks[i], 0), d,
+                                      cfg.n_heads, cfg.n_heads,
+                                      d // cfg.n_heads, cfg.param_dtype),
+             "mlp": L.init_mlp(jax.random.fold_in(ks[i], 1), d, 4 * d,
+                               False, cfg.param_dtype)}
+            for i in range(cfg.n_blocks)]
+    return p
+
+
+def params_logical(cfg: RecsysConfig) -> dict:
+    from repro.models import layers as L
+    p: dict = {"table": ("emb_vocab", None)}
+    if cfg.kind == "dlrm":
+        p["bot"] = _mlp_chain_logical(range(len(cfg.bot_mlp)))
+        p["top"] = _mlp_chain_logical(range(len(cfg.top_mlp)))
+    elif cfg.kind == "deepfm":
+        p["w1"] = ("emb_vocab",)
+        p["deep"] = _mlp_chain_logical(range(len(cfg.mlp) + 1))
+    elif cfg.kind == "autoint":
+        p["attn"] = [{"wq": (None, None, None), "wk": (None, None, None),
+                      "wv": (None, None, None), "wres": (None, None)}
+                     for _ in range(cfg.n_attn_layers)]
+        p["out"] = (None,)
+    elif cfg.kind == "bert4rec":
+        p["pos_embed"] = (None, None)
+        p["blocks"] = [
+            {"attn_norm": L.rmsnorm_logical(),
+             "mlp_norm": L.rmsnorm_logical(),
+             "attn": L.attention_logical(False),
+             "mlp": L.mlp_logical(False)}
+            for _ in range(cfg.n_blocks)]
+    return p
+
+
+def _dot_interaction(vecs):
+    """DLRM dot interaction: [B, F, D] -> strictly-upper-tri dots [B, F(F-1)/2]."""
+    b, f, d = vecs.shape
+    z = jnp.einsum("bfd,bgd->bfg", vecs, vecs)
+    iu, ju = jnp.triu_indices(f, k=1)
+    return z[:, iu, ju]
+
+
+def forward(params, batch, cfg: RecsysConfig, rules=None,
+            compute_dtype=jnp.float32):
+    """CTR kinds -> logits [B]; bert4rec -> logits [B, S, V_items]."""
+    table = params["table"].astype(compute_dtype)
+    offsets = cfg.field_offsets()
+
+    if cfg.kind == "bert4rec":
+        items = batch["items"]                       # [B, S] local item ids
+        x = jnp.take(table, items, axis=0) + params["pos_embed"].astype(
+            compute_dtype)[None, :items.shape[1]]
+        x = constrain(x, ("batch", "seq", None), rules)
+        from repro.models import layers as L
+        pos = jnp.broadcast_to(jnp.arange(items.shape[1])[None], items.shape)
+        for blk in params["blocks"]:
+            blk = jax.tree.map(lambda a: a.astype(compute_dtype), blk)
+            h, _ = L.attention(blk["attn"],
+                               L.rmsnorm(blk["attn_norm"], x), pos,
+                               causal=False, rope_theta=10000.0,
+                               rope_fraction=0.0, rules=rules, head_tp=False,
+                               mask=batch.get("mask"))
+            x = x + h
+            x = x + L.mlp(blk["mlp"], L.rmsnorm(blk["mlp_norm"], x), rules)
+        logits = jnp.einsum("bsd,vd->bsv", x, table)
+        logits = constrain(logits, ("batch", None, "emb_vocab"), rules)
+        if table.shape[0] > cfg.total_vocab:   # drop pad-row logits
+            logits = logits[..., :cfg.total_vocab]
+        return logits
+
+    ids = batch["sparse_ids"]                        # [B, F]
+    vecs = embedding_lookup(table, ids, offsets)     # [B, F, D]
+    vecs = constrain(vecs, ("batch", None, None), rules)
+
+    if cfg.kind == "dlrm":
+        dense = batch["dense"].astype(compute_dtype)         # [B, 13]
+        bot = _mlp_chain([jax.tree.map(lambda a: a.astype(compute_dtype), l)
+                          for l in params["bot"]], dense, final_act=True)
+        allv = jnp.concatenate([bot[:, None, :], vecs], axis=1)
+        inter = _dot_interaction(allv)
+        feat = jnp.concatenate([inter, bot], axis=-1)
+        logit = _mlp_chain([jax.tree.map(lambda a: a.astype(compute_dtype), l)
+                            for l in params["top"]], feat)[:, 0]
+    elif cfg.kind == "deepfm":
+        flat_ids = ids + offsets[None, :]
+        first = jnp.sum(jnp.take(params["w1"].astype(compute_dtype),
+                                 flat_ids, axis=0), axis=-1)
+        sum_v = jnp.sum(vecs, axis=1)
+        fm = 0.5 * jnp.sum(sum_v ** 2 - jnp.sum(vecs ** 2, axis=1), axis=-1)
+        deep = _mlp_chain([jax.tree.map(lambda a: a.astype(compute_dtype), l)
+                           for l in params["deep"]],
+                          vecs.reshape(vecs.shape[0], -1))[:, 0]
+        logit = first + fm + deep
+    elif cfg.kind == "autoint":
+        x = vecs                                      # [B, F, D]
+        for lp in params["attn"]:
+            lp = jax.tree.map(lambda a: a.astype(compute_dtype), lp)
+            q = jnp.einsum("bfd,dhk->bfhk", x, lp["wq"])
+            k = jnp.einsum("bfd,dhk->bfhk", x, lp["wk"])
+            v = jnp.einsum("bfd,dhk->bfhk", x, lp["wv"])
+            scores = jnp.einsum("bfhk,bghk->bhfg", q, k) / jnp.sqrt(
+                jnp.asarray(q.shape[-1], compute_dtype))
+            probs = jax.nn.softmax(scores, axis=-1)
+            o = jnp.einsum("bhfg,bghk->bfhk", probs, v)
+            o = o.reshape(*o.shape[:2], -1)            # [B, F, H*Da]
+            res = jnp.einsum("bfd,dk->bfk", x, lp["wres"])
+            x = jax.nn.relu(o + res)
+        logit = x.reshape(x.shape[0], -1) @ params["out"].astype(compute_dtype)
+    else:
+        raise ValueError(cfg.kind)
+    return constrain(logit, ("batch",), rules)
+
+
+def loss_fn(params, batch, cfg: RecsysConfig, rules=None,
+            compute_dtype=jnp.float32):
+    out = forward(params, batch, cfg, rules, compute_dtype)
+    if cfg.kind == "bert4rec":
+        logits = out.astype(jnp.float32)
+        labels, lmask = batch["labels"], batch["label_mask"].astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        loss = jnp.sum((logz - gold) * lmask) / jnp.maximum(jnp.sum(lmask), 1)
+    else:
+        logit = out.astype(jnp.float32)
+        y = batch["labels"].astype(jnp.float32)
+        loss = jnp.mean(jnp.maximum(logit, 0) - logit * y
+                        + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# Retrieval scoring (retrieval_cand shape): two-tower over 1M candidates
+# ---------------------------------------------------------------------------
+
+def retrieval_score(params, batch, cfg: RecsysConfig, rules=None,
+                    compute_dtype=jnp.float32, top_k: int = 100):
+    """Score query vs. n_candidates item embeddings; returns top-k.
+
+    batch = {query [B, D], candidates [C, D]} — the candidate matrix shards
+    over the ``corpus`` axes, reusing the ENNS sharded top-k path.
+    """
+    q = batch["query"].astype(compute_dtype)
+    cands = batch["candidates"].astype(compute_dtype)
+    cands = constrain(cands, ("corpus", None), rules)
+    scores = q @ cands.T                              # [B, C]
+    # batch is 1 (one user); the candidate axis takes (data x model)
+    scores = constrain(scores, (None, "corpus"), rules)
+    vals, idx = jax.lax.top_k(scores, top_k)
+    return vals, idx

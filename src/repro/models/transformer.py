@@ -1,0 +1,304 @@
+"""Decoder-only LM transformer family (dense + MoE, GQA, RoPE, SwiGLU).
+
+Covers the five assigned LM architectures:
+  arctic-480b   (MoE 128e top-2 + dense residual)
+  dbrx-132b     (MoE 16e top-4)
+  starcoder2-7b (dense, GQA kv=4)
+  phi3-medium   (dense, GQA kv=10)
+  chatglm3-6b   (dense, GQA kv=2, 2D-RoPE on half dims)
+
+Functional API:
+  init_params / params_logical            parameters + logical sharding axes
+  forward(params, tokens)                 logits (train / prefill)
+  loss_fn                                 next-token CE
+  init_kv_cache / decode_step             single-token serving with KV cache
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.utils import constrain, fold_rng
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 128
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0     # chatglm3 uses 0.5 (2D RoPE)
+    gated_mlp: bool = True         # SwiGLU
+    moe_experts: int = 0           # 0 => dense FFN
+    moe_top_k: int = 2
+    moe_dense_residual: bool = False   # arctic: dense MLP in parallel w/ MoE
+    moe_dp_groups: int = 1         # hierarchical dispatch groups (see §Perf)
+    capacity_factor: float = 1.25
+    norm_eps: float = 1e-5
+    param_dtype: Any = jnp.float32
+    head_tp: bool = True           # shard attention WEIGHTS by head
+    head_pad_to: int = 0           # pad activation heads to a TP-divisible
+                                   # count when n_heads % tp != 0
+    attn_block_q: int = 0          # q-block scan size (long prefill)
+    remat: bool = True
+    # 'full' recomputes everything in bwd; 'dots' saves matmul/collective
+    # outputs (jax checkpoint_policies) — §Perf iteration 3
+    remat_policy: str = "full"
+    # scan unroll factor; dryrun's roofline probes use fully-unrolled 1/2
+    # layer variants (XLA cost analysis counts a while body once)
+    scan_unroll: int = 1
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe_experts > 0
+
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        attn = d * self.d_head * (self.n_heads * 2 + self.n_kv_heads * 2)
+        if self.is_moe:
+            ff = self.moe_experts * 3 * d * f + d * self.moe_experts
+            if self.moe_dense_residual:
+                ff += 3 * d * f
+        else:
+            ff = (3 if self.gated_mlp else 2) * d * f
+        return self.n_layers * (attn + ff + 2 * d) + 2 * v * d + d
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k experts only)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        attn = d * self.d_head * (self.n_heads * 2 + self.n_kv_heads * 2)
+        ff = self.moe_top_k * 3 * d * f + d * self.moe_experts
+        if self.moe_dense_residual:
+            ff += 3 * d * f
+        return self.n_layers * (attn + ff + 2 * d) + 2 * self.vocab_size * d + d
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: TransformerConfig, key) -> dict:
+    ka, km, kd = jax.random.split(key, 3)
+    p = {
+        "attn_norm": L.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        "mlp_norm": L.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        "attn": L.init_attention(ka, cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.d_head, cfg.param_dtype),
+    }
+    if cfg.is_moe:
+        p["moe"] = L.init_moe(km, cfg.d_model, cfg.d_ff, cfg.moe_experts,
+                              cfg.param_dtype)
+        if cfg.moe_dense_residual:
+            p["mlp"] = L.init_mlp(kd, cfg.d_model, cfg.d_ff, cfg.gated_mlp,
+                                  cfg.param_dtype)
+    else:
+        p["mlp"] = L.init_mlp(km, cfg.d_model, cfg.d_ff, cfg.gated_mlp,
+                              cfg.param_dtype)
+    return p
+
+
+def init_params(cfg: TransformerConfig, key) -> dict:
+    ke, ko, kl = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    # stacked per-layer params (leading dim = n_layers) for lax.scan
+    stacked = jax.vmap(functools.partial(_init_layer, cfg))(layer_keys)
+    return {
+        "embed": jax.random.normal(
+            ke, (cfg.vocab_size, cfg.d_model), cfg.param_dtype)
+            * cfg.d_model ** -0.5,
+        "unembed": jax.random.normal(
+            ko, (cfg.d_model, cfg.vocab_size), cfg.param_dtype)
+            * cfg.d_model ** -0.5,
+        "final_norm": L.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        "layers": stacked,
+    }
+
+
+def params_logical(cfg: TransformerConfig) -> dict:
+    layer = {
+        "attn_norm": L.rmsnorm_logical(),
+        "mlp_norm": L.rmsnorm_logical(),
+        "attn": L.attention_logical(cfg.head_tp),
+    }
+    if cfg.is_moe:
+        layer["moe"] = L.moe_logical()
+        if cfg.moe_dense_residual:
+            layer["mlp"] = L.mlp_logical(cfg.gated_mlp)
+    else:
+        layer["mlp"] = L.mlp_logical(cfg.gated_mlp)
+    # prepend the stacked layer dim (never sharded)
+    layer = jax.tree.map(
+        lambda lg: (None,) + lg, layer,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, str) or e is None for e in x))
+    return {
+        # embed: rows replicated, d_model FSDP'd — a vocab-sharded table
+        # makes the token gather all-gather the whole table (§Perf iter 2)
+        "embed": (None, "fsdp"),
+        "unembed": ("fsdp", "vocab"),
+        "final_norm": L.rmsnorm_logical(),
+        "layers": layer,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_fn(cfg: TransformerConfig, rules, x, positions, lp, mask=None):
+    h, _ = L.attention(lp["attn"], L.rmsnorm(lp["attn_norm"], x, cfg.norm_eps),
+                       positions, causal=True, rope_theta=cfg.rope_theta,
+                       rope_fraction=cfg.rope_fraction, rules=rules,
+                       head_tp=cfg.head_tp, mask=mask,
+                       block_q=cfg.attn_block_q, head_pad_to=cfg.head_pad_to)
+    x = x + h
+    hn = L.rmsnorm(lp["mlp_norm"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_moe:
+        h, aux = L.moe(lp["moe"], hn, top_k=cfg.moe_top_k,
+                       capacity_factor=cfg.capacity_factor, rules=rules,
+                       dp_groups=cfg.moe_dp_groups)
+        if cfg.moe_dense_residual:
+            h = h + L.mlp(lp["mlp"], hn, rules=rules)
+    else:
+        h = L.mlp(lp["mlp"], hn, rules=rules)
+    return x + h, aux
+
+
+def forward_hidden(params, tokens, cfg: TransformerConfig, rules=None,
+                   compute_dtype=jnp.bfloat16):
+    """tokens: [B, S] int32 -> final-norm hidden states [B, S, D]."""
+    b, s = tokens.shape
+    emb = params["embed"].astype(compute_dtype)
+    x = emb[tokens]                                   # vocab-sharded gather
+    x = constrain(x, ("batch", "seq", "d_model"), rules)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(carry, lp):
+        x, aux = carry
+        lp = jax.tree.map(lambda a: a.astype(compute_dtype)
+                          if jnp.issubdtype(a.dtype, jnp.floating) else a, lp)
+        x, a = _layer_fn(cfg, rules, x, positions, lp)
+        return (x, aux + a), None
+
+    if cfg.remat and cfg.remat_policy == "dots":
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    elif cfg.remat:
+        body_fn = jax.checkpoint(body)
+    else:
+        body_fn = body
+    (x, aux), _ = jax.lax.scan(body_fn, (x.astype(compute_dtype),
+                                         jnp.zeros((), jnp.float32)),
+                               params["layers"], unroll=cfg.scan_unroll)
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+
+def forward(params, tokens, cfg: TransformerConfig, rules=None,
+            compute_dtype=jnp.bfloat16):
+    """tokens: [B, S] int32 -> logits [B, S, V] (compute dtype)."""
+    x, aux = forward_hidden(params, tokens, cfg, rules, compute_dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["unembed"].astype(compute_dtype))
+    logits = constrain(logits, ("batch", None, "vocab"), rules)
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: TransformerConfig, rules=None,
+            compute_dtype=jnp.bfloat16, aux_weight: float = 0.01):
+    """Next-token cross-entropy. batch = {tokens [B,S], labels [B,S]}."""
+    logits, aux = forward(params, batch["tokens"], cfg, rules, compute_dtype)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][..., None],
+                               axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode with KV cache
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: TransformerConfig, batch: int, max_seq: int,
+                  dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def kv_cache_logical(max_seq: int):
+    kv_ax = "kv_seq_long" if max_seq >= 2 ** 18 else "kv_seq"
+    return {"k": (None, "batch", kv_ax, "kv_heads", None),
+            "v": (None, "batch", kv_ax, "kv_heads", None)}
+
+
+def decode_step(params, cache, tokens, cache_index, cfg: TransformerConfig,
+                rules=None, compute_dtype=jnp.bfloat16):
+    """One serving step: tokens [B] int32, cache_index scalar int32.
+
+    Returns (logits [B, V], new_cache).  Attention over the cache uses
+    flash-decoding-style sharding: the KV seq dim is sharded over the model
+    (and data, for 500k contexts) mesh axes; GSPMD turns the softmax
+    normalization into a small cross-shard reduction.
+    """
+    b = tokens.shape[0]
+    emb = params["embed"].astype(compute_dtype)
+    x = emb[tokens][:, None, :]                       # [B,1,Dm]
+    x = constrain(x, ("batch", None, "d_model"), rules)
+    positions = jnp.broadcast_to(cache_index, (b, 1)).astype(jnp.int32)
+
+    def body(carry, inputs):
+        x = carry
+        lp, ck, cv = inputs
+        lp = jax.tree.map(lambda a: a.astype(compute_dtype)
+                          if jnp.issubdtype(a.dtype, jnp.floating) else a, lp)
+        h, (nk, nv) = L.attention(
+            lp["attn"], L.rmsnorm(lp["attn_norm"], x, cfg.norm_eps),
+            positions, causal=True, rope_theta=cfg.rope_theta,
+            rope_fraction=cfg.rope_fraction, rules=rules, head_tp=cfg.head_tp,
+            kv_cache=(ck, cv), cache_index=cache_index)
+        x = x + h
+        hn = L.rmsnorm(lp["mlp_norm"], x, cfg.norm_eps)
+        if cfg.is_moe:
+            h, _ = L.moe(lp["moe"], hn, top_k=cfg.moe_top_k,
+                         capacity_factor=cfg.capacity_factor, rules=rules)
+            # (decode: tiny token counts — flat dispatch is fine)
+            if cfg.moe_dense_residual:
+                h = h + L.mlp(lp["mlp"], hn, rules=rules)
+        else:
+            h = L.mlp(lp["mlp"], hn, rules=rules)
+        return x + h, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x.astype(compute_dtype),
+        (params["layers"], cache["k"], cache["v"]), unroll=cfg.scan_unroll)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["unembed"].astype(compute_dtype))[:, 0]
+    logits = constrain(logits, ("batch", "vocab"), rules)
+    return logits, {"k": nk, "v": nv}
+
+
+def prefill(params, tokens, cfg: TransformerConfig, rules=None,
+            compute_dtype=jnp.bfloat16):
+    """Prefill pass returning last-position logits (TTFT path).
+
+    §Perf: the unembed matmul runs on the LAST position only — at 32k
+    context the full-sequence unembed would be >half the prefill FLOPs and
+    all of its output discarded."""
+    x, _ = forward_hidden(params, tokens, cfg, rules, compute_dtype)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1],
+                        params["unembed"].astype(compute_dtype))
+    return constrain(logits, ("batch", "vocab"), rules)

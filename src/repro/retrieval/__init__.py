@@ -1,0 +1,1 @@
+"""Retrieval substrate: flat ENNS, IVF ANNS, int8 stores, distributed top-k."""

@@ -1,0 +1,53 @@
+"""Distributed exact top-k over a sharded corpus (shard_map + collectives).
+
+The production path for full-database retrieval: each model-axis shard holds a
+corpus slice, computes a local streaming top-k, and the k·(value,id) pairs are
+merged with an all-gather tree (O(shards·k) bytes on the interconnect instead
+of O(N) scores).  This is how the paper's 'slow full-database retrieval on
+the cloud' lowers onto a TPU pod.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.retrieval.flat import chunked_flat_search
+
+
+def distributed_flat_search(mesh: Mesh, corpus_axes: tuple[str, ...] = ("data", "model")):
+    """Returns a jit-able fn(corpus [N,d], queries [B,d]) -> (scores, ids [B,k]).
+
+    corpus is sharded over ``corpus_axes`` (row-wise); queries replicated.
+    """
+    axes = corpus_axes
+
+    def search(corpus, queries, k: int):
+        n_shards = 1
+        for a in axes:
+            n_shards *= mesh.shape[a]
+        shard_rows = corpus.shape[0] // n_shards
+
+        def local(corpus_blk, q):
+            # corpus_blk: [N/shards, d] local slice
+            s, i = jax.lax.top_k(q @ corpus_blk.T, min(k, corpus_blk.shape[0]))
+            # global ids: offset by this shard's row start
+            idx = jax.lax.axis_index(axes)
+            i = i + (idx * shard_rows).astype(i.dtype)
+            # all-gather the candidate sets over the corpus axes, then merge
+            s_all = jax.lax.all_gather(s, axes, axis=1, tiled=True)
+            i_all = jax.lax.all_gather(i, axes, axis=1, tiled=True)
+            ts, ti = jax.lax.top_k(s_all, k)
+            return ts, jnp.take_along_axis(i_all, ti, axis=1)
+
+        return shard_map(
+            local, mesh=mesh,
+            in_specs=(P(axes), P()),
+            out_specs=(P(), P()),
+            check_vma=False,   # post-all-gather results are replicated
+        )(corpus, queries)
+
+    return search

@@ -1,0 +1,1 @@
+"""RAG serving: engines (HaS / baselines), latency model, batched serving."""

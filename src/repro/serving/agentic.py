@@ -1,0 +1,113 @@
+"""Agentic RAG integration (paper §IV-E II): Auto-RAG-style 2-hop pipeline.
+
+Complex queries reference a bridge relation: "What is A(r(e1))?" decomposes
+into hop-1 "what entity is r(e1)?" (answered by a relation document of e1)
+and hop-2 "what is A(e2)?".  HaS intercepts every decomposed sub-query —
+no pipeline modification, exactly the paper's plug-in claim.  Decomposed
+sub-queries concentrate on popular entities even harder than raw queries
+(hub entities appear as many queries' bridge), which drives the paper's
+69.4% retrieval-latency cut at high DAR.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data.synthetic import SyntheticWorld, simulate_response_accuracy
+
+
+@dataclasses.dataclass
+class TwoHopDataset:
+    """Synthetic complex queries over relation permutations."""
+    world: SyntheticWorld
+    n_relations: int = 4
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        n = self.world.cfg.n_entities
+        # each relation is a mapping entity -> entity, biased toward hubs:
+        # half the targets collapse onto a small popular set
+        hubs = rng.choice(n, max(8, n // 100), replace=False)
+        self.relations = []
+        for _ in range(self.n_relations):
+            perm = rng.permutation(n)
+            collapse = rng.random(n) < 0.5
+            perm[collapse] = rng.choice(hubs, collapse.sum())
+            self.relations.append(perm)
+        # relation attribute ids: reuse the first n_relations attrs
+        self.rel_attr = list(range(self.n_relations))
+
+    def sample(self, n: int, zipf_a: float = 1.12, seed: int = 1):
+        rng = np.random.default_rng(seed)
+        w = self.world
+        out = []
+        for _ in range(n):
+            ranks = rng.zipf(zipf_a)
+            e1 = int(min(ranks - 1, w.cfg.n_entities - 1))
+            r = int(rng.integers(self.n_relations))
+            e2 = int(self.relations[r][e1])
+            attrs2 = np.flatnonzero(w.entity_attrs[e2])
+            a2 = int(rng.choice(attrs2)) if len(attrs2) else 0
+            out.append({"e1": e1, "rel": r, "e2": e2, "attr2": a2})
+        return out
+
+
+class AutoRagPipeline:
+    """Chain-of-thought loop: decompose -> retrieve (per hop) -> answer.
+
+    ``engine`` is any serving engine exposing the per-query step protocol
+    (HasEngine) or full retrieval; the pipeline itself never changes.
+    """
+
+    def __init__(self, dataset: TwoHopDataset, engine, full_engine,
+                 reasoning_latency: float = 0.35):
+        self.ds = dataset
+        self.engine = engine          # HaS (or None -> always full)
+        self.full = full_engine       # RetrievalService-backed full path
+        self.reasoning_latency = reasoning_latency
+
+    def _retrieve(self, q_emb):
+        if self.engine is not None:
+            ids, accept, lat, _ = self.engine.step(q_emb)
+            return ids, accept, lat
+        ids, _, t = self.full.full_search(q_emb)
+        return ids, False, self.full.latency.sample_cloud() + t
+
+    def run(self, complex_queries, dataset: str = "granola", seed: int = 0):
+        rng = np.random.default_rng(seed)
+        w = self.ds.world
+        recs = []
+        for cq in complex_queries:
+            total_retrieval = 0.0
+            accepts = []
+            # hop 1: bridge sub-query (entity e1, relation attribute)
+            q1 = w.encode_query(cq["e1"], self.ds.rel_attr[cq["rel"]], rng)
+            ids1, acc1, lat1 = self._retrieve(q1)
+            total_retrieval += lat1
+            accepts.append(acc1)
+            hop1_hit = bool(w.golden_mask(cq["e1"],
+                                          self.ds.rel_attr[cq["rel"]],
+                                          ids1).any())
+            # hop 2: the pipeline reasons out e2 (correct iff hop-1 grounded,
+            # else it guesses and retrieval goes off-entity)
+            if hop1_hit or rng.random() < 0.15:
+                e2 = cq["e2"]
+            else:
+                e2 = int(rng.integers(w.cfg.n_entities))
+            q2 = w.encode_query(e2, cq["attr2"], rng)
+            ids2, acc2, lat2 = self._retrieve(q2)
+            total_retrieval += lat2
+            accepts.append(acc2)
+            hop2_hit = bool(w.golden_mask(cq["e2"], cq["attr2"], ids2).any())
+            correct = simulate_response_accuracy(
+                rng, hop1_hit and hop2_hit, dataset)
+            recs.append({
+                "retrieval_latency": total_retrieval,
+                "e2e_latency": total_retrieval + 2 * self.reasoning_latency,
+                "dar": float(np.mean(accepts)),
+                "accuracy": correct,
+            })
+        keys = recs[0].keys()
+        return {k: float(np.mean([r[k] for r in recs])) for k in keys}

@@ -1,0 +1,94 @@
+"""HaS edge-cache replication: snapshot, warm standby, failover.
+
+The paper deploys HaS as an edge component; in production the edge node is
+the new single point of failure for the latency win (losing the cache means
+every query pays the cloud round-trip until the cache re-warms — minutes of
+degraded P99).  This module gives the HaS state the same durability story
+the training stack has:
+
+  * ``snapshot`` / ``restore``: the HasState pytree (query cache, doc store,
+    ring pointers) serializes through the checkpoint manager (atomic +
+    validated) — the fuzzy-channel IVF index is rebuilt from the corpus, not
+    checkpointed (it is derived state).
+  * ``WarmStandby``: holds a delta log of cache_update inputs since the last
+    snapshot and can replay them onto a restored snapshot, so a standby
+    engine resumes with at most ``max_lag`` queries of acceptance-rate loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core.has import HasConfig, HasState, cache_update, init_has_state
+
+
+def snapshot(mgr: CheckpointManager, step: int, state: HasState,
+             blocking: bool = True) -> None:
+    tree = {"query_emb": state.query_emb, "query_doc_ids": state.query_doc_ids,
+            "query_valid": state.query_valid, "q_ptr": state.q_ptr,
+            "doc_emb": state.doc_emb, "doc_ids": state.doc_ids,
+            "d_ptr": state.d_ptr}
+    mgr.save(step, tree, blocking=blocking)
+
+
+def restore(mgr: CheckpointManager, cfg: HasConfig) -> tuple[int, HasState] | None:
+    template = init_has_state(cfg)
+    tree = {"query_emb": template.query_emb,
+            "query_doc_ids": template.query_doc_ids,
+            "query_valid": template.query_valid, "q_ptr": template.q_ptr,
+            "doc_emb": template.doc_emb, "doc_ids": template.doc_ids,
+            "d_ptr": template.d_ptr}
+    out = mgr.restore_latest(tree)
+    if out is None:
+        return None
+    step, t = out
+    return step, HasState(
+        query_emb=jnp.asarray(t["query_emb"]),
+        query_doc_ids=jnp.asarray(t["query_doc_ids"]),
+        query_valid=jnp.asarray(t["query_valid"]),
+        q_ptr=jnp.asarray(t["q_ptr"]),
+        doc_emb=jnp.asarray(t["doc_emb"]),
+        doc_ids=jnp.asarray(t["doc_ids"]),
+        d_ptr=jnp.asarray(t["d_ptr"]))
+
+
+@dataclasses.dataclass
+class WarmStandby:
+    """Delta-log replication for a standby HaS engine."""
+    cfg: HasConfig
+    mgr: CheckpointManager
+    snapshot_every: int = 500
+    max_lag: int = 1000
+
+    def __post_init__(self):
+        self.log: deque = deque(maxlen=self.max_lag)
+        self._since_snapshot = 0
+        self._step = 0
+
+    def record_update(self, q_emb: np.ndarray, full_ids: np.ndarray,
+                      full_vecs: np.ndarray, state: HasState) -> None:
+        """Call after every primary cache_update."""
+        self.log.append((np.asarray(q_emb), np.asarray(full_ids),
+                         np.asarray(full_vecs)))
+        self._since_snapshot += 1
+        self._step += 1
+        if self._since_snapshot >= self.snapshot_every:
+            snapshot(self.mgr, self._step, state, blocking=False)
+            self._since_snapshot = 0
+            self.log.clear()
+
+    def failover(self) -> HasState:
+        """Rebuild the freshest possible state on the standby."""
+        out = restore(self.mgr, self.cfg)
+        state = out[1] if out is not None else init_has_state(self.cfg)
+        for q_emb, ids, vecs in self.log:      # replay the delta log
+            state = cache_update(self.cfg, state, jnp.asarray(q_emb),
+                                 jnp.asarray(ids.astype(np.int32)),
+                                 jnp.asarray(vecs))
+        return state

@@ -1,0 +1,155 @@
+"""Optimizers: AdamW (dense archs) and Adafactor (giant MoE archs).
+
+Adafactor's factored second moment keeps optimizer state ~O(params/row) so a
+480B-param MoE fits a v5e pod (AdamW's 2x fp32 state would not: 480B x 8 B =
+3.8 TB > the pod's 4 TB HBM).  Optimizer states inherit the parameter
+sharding (ZeRO-style: FSDP'd params imply FSDP'd states).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    # adafactor
+    decay: float = 0.8
+    min_dim_factored: int = 2      # factor 2D+ tensors
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return m, v, (p.astype(jnp.float32) - cfg.lr * u).astype(p.dtype)
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    m = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"m": m, "v": v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments, no momentum)
+# ---------------------------------------------------------------------------
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params):
+    def init_v(p):
+        if _factored(p):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"v": jax.tree.map(init_v, params,
+                              is_leaf=lambda x: hasattr(x, "shape")),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** (-cfg.decay)
+
+    def upd(g, v, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if _factored(p):
+            vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(jnp.mean(vr, axis=-1,
+                                            keepdims=True)[..., None], 1e-30))
+            u = g / (jnp.sqrt(denom) + cfg.eps)
+            nv = {"vr": vr, "vc": vc}
+        else:
+            vv = beta * v["v"] + (1 - beta) * g2
+            u = g / (jnp.sqrt(vv) + cfg.eps)
+            nv = {"v": vv}
+        # update clipping (Adafactor RMS-1 rule)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return nv, (p.astype(jnp.float32) - cfg.lr * u).astype(p.dtype)
+
+    leaves_is = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    out = jax.tree.map(upd, grads, state["v"], params, is_leaf=None)
+    nv = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"v": nv, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Unified interface
+# ---------------------------------------------------------------------------
+
+def opt_init(cfg: OptConfig, params):
+    return adamw_init(params) if cfg.name == "adamw" else adafactor_init(params)
+
+
+def opt_update(cfg: OptConfig, grads, state, params):
+    if cfg.grad_clip > 0:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+    if cfg.name == "adamw":
+        return adamw_update(cfg, grads, state, params)
+    return adafactor_update(cfg, grads, state, params)
+
+
+def opt_state_logical(cfg: OptConfig, params_logical):
+    """Optimizer-state sharding mirrors the parameter sharding."""
+    is_lg = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, str) or e is None for e in x)
+    if cfg.name == "adamw":
+        return {"m": params_logical, "v": params_logical, "step": ()}
+
+    def v_logical(lg):
+        # vr drops the last dim's axis, vc drops the second-to-last's
+        return {"vr": lg[:-1], "vc": lg[:-2] + lg[-1:]} if len(lg) >= 2 \
+            else {"v": lg}
+    return {"v": jax.tree.map(v_logical, params_logical, is_leaf=is_lg),
+            "step": ()}

@@ -1,0 +1,58 @@
+"""Train-step factory shared by the launcher, dry-run, and examples."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import (OptConfig, global_norm, opt_init,
+                                      opt_state_logical, opt_update)
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: OptConfig,
+                    compute_dtype=jnp.bfloat16):
+    """loss_fn(params, batch) -> (loss, metrics).  Returns step fn:
+    (params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        new_params, new_state = opt_update(opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = global_norm(grads)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_train_step_accum(loss_fn: Callable, opt_cfg: OptConfig,
+                          n_micro: int):
+    """Gradient accumulation over n_micro microbatches (lax.scan).
+
+    batch leaves must have leading dim divisible by n_micro; overlaps the
+    per-microbatch compute with the (GSPMD-inserted) gradient reductions.
+    """
+
+    def train_step(params, opt_state, batch):
+        def split(x):
+            return x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:])
+        micro = jax.tree.map(split, batch)
+
+        def body(acc, mb):
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            acc_g, acc_l = acc
+            return (jax.tree.map(jnp.add, acc_g, grads), acc_l + loss), None
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss), _ = jax.lax.scan(body, (zero, jnp.zeros(())), micro)
+        grads = jax.tree.map(lambda g: g / n_micro, grads)
+        new_params, new_state = opt_update(opt_cfg, grads, opt_state, params)
+        return new_params, new_state, {"loss": loss / n_micro,
+                                       "grad_norm": global_norm(grads)}
+
+    return train_step

@@ -1,0 +1,9 @@
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 CPU device.
+# Only launch/dryrun.py (run as a subprocess) forces 512 virtual devices.
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

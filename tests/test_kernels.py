@@ -1,0 +1,103 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("b,n,d,k,tile", [
+    (1, 257, 32, 5, 64),
+    (4, 1024, 64, 10, 256),
+    (8, 5000, 128, 16, 512),
+    (2, 100, 16, 10, 128),     # corpus smaller than tile
+    (3, 4096, 64, 64, 1024),   # large k
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_topk_search(b, n, d, k, tile, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, d)), dtype)
+    c = jnp.asarray(RNG.normal(size=(n, d)), dtype)
+    v, i = ops.topk_search(q, c, k, tile_c=tile, interpret=True)
+    vr, ir = ref.topk_search_ref(q, c, k)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(v), np.asarray(vr),
+                               rtol=tol, atol=tol)
+    # ids can differ on exact ties: check score-equivalence instead
+    got = np.asarray(jnp.sum(c[i] * q[:, None, :], -1), np.float32)
+    np.testing.assert_allclose(got, np.asarray(vr, np.float32),
+                               rtol=max(tol, 1e-4), atol=max(tol, 1e-4))
+
+
+@pytest.mark.parametrize("b,h,k,tile", [
+    (1, 100, 10, 64), (4, 1000, 10, 256), (8, 5000, 4, 512),
+    (2, 513, 16, 512),
+])
+def test_homology_score(b, h, k, tile):
+    draft = jnp.asarray(RNG.integers(-1, 60, (b, k)), jnp.int32)
+    cache = jnp.asarray(RNG.integers(0, 60, (h, k)), jnp.int32)
+    valid = jnp.asarray(RNG.random(h) > 0.3)
+    s = ops.homology_score(draft, cache, valid, tile_h=tile, interpret=True)
+    sr = ref.homology_score_ref(draft, cache, valid)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), atol=1e-6)
+
+
+@pytest.mark.parametrize("b,c,cap,d,p,k", [
+    (2, 8, 16, 32, 3, 5), (4, 32, 64, 64, 8, 10), (1, 4, 8, 16, 2, 4),
+])
+def test_ivf_scan(b, c, cap, d, p, k):
+    q = jnp.asarray(RNG.normal(size=(b, d)), jnp.float32)
+    bv = jnp.asarray(RNG.normal(size=(c, cap, d)), jnp.float32)
+    bi = jnp.asarray(RNG.integers(0, 10000, (c, cap)), jnp.int32)
+    bi = jnp.where(jnp.asarray(RNG.random((c, cap)) > 0.85), -1, bi)
+    probe = jnp.asarray(
+        np.stack([RNG.choice(c, p, replace=False) for _ in range(b)]),
+        jnp.int32)
+    v, i = ops.ivf_scan(q, probe, bv, bi, k, interpret=True)
+    vr, ir = ref.ivf_scan_ref(q, probe, bv, bi, k)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(vr),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("v,d,b,n", [(100, 32, 8, 4), (33, 8, 2, 9),
+                                     (500, 64, 16, 2)])
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_embedding_bag(v, d, b, n, mode, weighted):
+    t = jnp.asarray(RNG.normal(size=(v, d)), jnp.float32)
+    ids = jnp.asarray(RNG.integers(0, v, (b, n)), jnp.int32)
+    w = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32) if weighted else None
+    o = ops.embedding_bag(t, ids, w, mode, interpret=True)
+    orf = ref.embedding_bag_ref(t, ids, w, mode)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_embedding_bag_matches_segment_sum_substrate():
+    """Kernel == the take+segment_sum substrate used by the models."""
+    from repro.models.recsys import embedding_bag as substrate_bag
+    t = jnp.asarray(RNG.normal(size=(64, 16)), jnp.float32)
+    ids = jnp.asarray(RNG.integers(0, 64, (6, 5)), jnp.int32)
+    seg = jnp.repeat(jnp.arange(6), 5)
+    o1 = ops.embedding_bag(t, ids, mode="sum", interpret=True)
+    o2 = substrate_bag(t, ids.reshape(-1), seg, 6, mode="sum")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-5)
+
+
+@pytest.mark.parametrize("b,h,d,s,blk,clen", [
+    (2, 4, 16, 128, 32, 100), (1, 8, 32, 300, 64, 299), (3, 2, 8, 64, 64, 0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(b, h, d, s, blk, clen, dtype):
+    from repro.kernels.decode_attention import decode_attention_ref
+    q = jnp.asarray(RNG.normal(size=(b, h, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, s, h, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, s, h, d)), dtype)
+    o = ops.decode_attention(q, k, v, jnp.int32(clen), block_s=blk,
+                             interpret=True)
+    orf = decode_attention_ref(q, k, v, jnp.int32(clen))
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf),
+                               rtol=tol, atol=tol)

@@ -1,0 +1,117 @@
+"""Tests for the §Perf optimized paths and launch utilities."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+def test_moe_hierarchical_matches_flat():
+    from repro.models import layers as L
+    params = L.init_moe(jax.random.key(0), 16, 32, 4)
+    x = jax.random.normal(jax.random.key(1), (2, 8, 16))
+    o1, _ = L.moe(params, x, top_k=2, capacity_factor=16.0, dp_groups=1)
+    o2, _ = L.moe(params, x, top_k=2, capacity_factor=16.0, dp_groups=4)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flat_search_merge_chunks_exact(rng):
+    from repro.retrieval.flat import flat_search
+    corpus = jnp.asarray(rng.normal(size=(512, 16)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(3, 16)), jnp.float32)
+    s1, i1 = flat_search(corpus, q, 7)
+    s2, i2 = flat_search(corpus, q, 7, merge_chunks=8)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_has_rag_iterative_topk_exact(rng):
+    from repro.configs.has_rag import _iterative_topk
+    sc = jnp.asarray(rng.normal(size=(4, 8, 64)), jnp.float32)
+    v, i = _iterative_topk(sc, 5)
+    vr, ir = jax.lax.top_k(sc, 5)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(vr), rtol=1e-6)
+    assert np.array_equal(np.asarray(i), np.asarray(ir))
+
+
+def test_prefill_last_position_matches_forward():
+    from repro.models import transformer as tf
+    cfg = tf.TransformerConfig(name="t", n_layers=2, d_model=64, n_heads=4,
+                               n_kv_heads=2, d_ff=128, vocab_size=128,
+                               d_head=16, remat=False)
+    p = tf.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 12), 0, 128)
+    full, _ = tf.forward(p, toks, cfg, compute_dtype=jnp.float32)
+    last = tf.prefill(p, toks, cfg, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(full[:, -1]), np.asarray(last),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rules_for_mesh_drops_missing_axes():
+    from repro.launch.dryrun import rules_for_mesh
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    rules = rules_for_mesh(FakeMesh())
+    assert rules["batch"] == ("data",)
+    assert rules["kv_seq_long"] == ("data", "model")
+    assert rules["seq"] == "model"
+
+
+def test_collective_bytes_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %ag = f32[64,1024]{1,0} all-gather(f32[4,1024]{1,0} %p), replica_groups={}
+  %ar = (bf16[8,8]{1,0}, bf16[8,8]{1,0}) all-reduce(%a, %b), to_apply=%sum
+  %nothing = f32[2]{0} add(%x, %y)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 64 * 1024 * 4
+    assert out["all-reduce"] == 2 * 8 * 8 * 2
+    assert out["total"] == out["all-gather"] + out["all-reduce"]
+
+
+def test_roofline_analyze_corrects_scan():
+    from repro.launch.roofline import analyze
+    base = {"arch": "chatglm3-6b", "shape": "train_4k", "n_devices": 256,
+            "ok": True, "flops_per_device": 1e12, "bytes_per_device": 1e12,
+            "collectives": {"total": 1e9}}
+    u1 = dict(base, variant={"n_layers": 1, "unroll": True},
+              flops_per_device=2e12, bytes_per_device=2e12,
+              collectives={"total": 2e9})
+    u2 = dict(base, variant={"n_layers": 2, "unroll": True},
+              flops_per_device=3e12, bytes_per_device=3e12,
+              collectives={"total": 3e9})
+    rows = analyze([base, u1, u2])
+    assert len(rows) == 1
+    r = rows[0]
+    # 28 layers: u1 + 27 * (u2 - u1) = 2e12 + 27e12 = 29e12
+    assert abs(r["flops_per_chip"] - 29e12) < 1e9
+    assert r["corrected"]
+
+
+def test_compressed_allreduce_local_mesh(rng):
+    from repro.launch.mesh import make_local_mesh
+    from repro.training.compression import make_compressed_allreduce
+    mesh = make_local_mesh()
+    fn = make_compressed_allreduce(mesh, dp_axes=("data",))
+    g = {"w": jnp.asarray(rng.normal(size=(64,)), jnp.float32)}
+    e = {"w": jnp.zeros((64,), jnp.float32)}
+    red, err = fn(g, e)
+    # single device: reduction == dequantized value; error = quant residual
+    np.testing.assert_allclose(np.asarray(red["w"] + err["w"]),
+                               np.asarray(g["w"]), atol=1e-6)
+
+
+def test_agentic_pipeline_runs():
+    from repro.data.synthetic import SyntheticWorld, WorldConfig
+    from repro.serving.agentic import AutoRagPipeline, TwoHopDataset
+    from repro.serving.engine import RetrievalService
+    from repro.serving.latency import LatencyModel
+    world = SyntheticWorld(WorldConfig(n_entities=500, seed=0))
+    svc = RetrievalService(world, LatencyModel(), k=10, chunk=1024)
+    ds = TwoHopDataset(world, seed=0)
+    out = AutoRagPipeline(ds, None, svc).run(ds.sample(20, seed=1))
+    assert 0 <= out["accuracy"] <= 1
+    assert out["retrieval_latency"] > 0

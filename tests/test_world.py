@@ -1,0 +1,101 @@
+"""Synthetic world calibration: the paper's empirical observations hold."""
+import numpy as np
+import pytest
+
+from repro.data.synthetic import (DATASETS, ENCODERS, SyntheticWorld,
+                                  WorldConfig)
+
+
+@pytest.fixture(scope="module")
+def world():
+    return SyntheticWorld(WorldConfig(n_entities=2000, seed=0))
+
+
+def test_entity_alignment(world):
+    """Obs. 1: ~2.35/5 of top-5 docs entity-aligned; ~64% top-1 aligned."""
+    rng = np.random.default_rng(5)
+    a5, top1 = [], []
+    for _ in range(200):
+        e = int(rng.integers(world.cfg.n_entities))
+        avail = np.flatnonzero(world.entity_attrs[e])
+        a = int(rng.choice(avail))
+        q = world.encode_query(e, a, rng)
+        top = np.argsort(-(world.doc_emb @ q))[:5]
+        a5.append((world.doc_entity[top] == e).sum())
+        top1.append(world.doc_entity[top[0]] == e)
+    assert 1.5 < np.mean(a5) < 3.5          # paper: 2.35
+    assert 0.5 < np.mean(top1) < 0.9        # paper: 0.643
+
+
+def test_homologous_queries_share_golden_docs(world):
+    """Insight 1: homologous queries are empirically quasi-homologous."""
+    rng = np.random.default_rng(9)
+    share = []
+    for _ in range(100):
+        e = int(rng.integers(world.cfg.n_entities))
+        attrs = np.flatnonzero(world.entity_attrs[e])
+        if len(attrs) < 2:
+            continue
+        a1, a2 = rng.choice(attrs, 2, replace=False)
+        g1 = (world.doc_entity == e) & world.doc_attr_mask[:, a1]
+        g2 = (world.doc_entity == e) & world.doc_attr_mask[:, a2]
+        share.append((g1 & g2).any())
+    # ~half of homologous pairs share a golden doc outright; combined with
+    # entity-aligned result overlap (next test) this carries Insight 1
+    assert np.mean(share) > 0.4
+
+
+def test_homology_score_separates(world):
+    """Fig. 6c: homologous pairs' result overlap >> random pairs'."""
+    rng = np.random.default_rng(11)
+    k = 10
+    hom, rnd = [], []
+    for _ in range(60):
+        e = int(rng.integers(world.cfg.n_entities))
+        attrs = np.flatnonzero(world.entity_attrs[e])
+        if len(attrs) < 2:
+            continue
+        a1, a2 = rng.choice(attrs, 2, replace=False)
+        q1 = world.encode_query(e, int(a1), rng)
+        q2 = world.encode_query(e, int(a2), rng)
+        e3 = int(rng.integers(world.cfg.n_entities))
+        a3 = int(rng.choice(np.flatnonzero(world.entity_attrs[e3])))
+        q3 = world.encode_query(e3, a3, rng)
+        t1 = set(np.argsort(-(world.doc_emb @ q1))[:k].tolist())
+        t2 = set(np.argsort(-(world.doc_emb @ q2))[:k].tolist())
+        t3 = set(np.argsort(-(world.doc_emb @ q3))[:k].tolist())
+        hom.append(len(t1 & t2) / k)
+        rnd.append(len(t1 & t3) / k)
+    assert np.mean(hom) > np.mean(rnd) + 0.15
+    assert np.mean(rnd) < 0.05
+
+
+def test_zipf_popularity(world):
+    """Fig. 4: most queries share their entity with another query."""
+    qs = world.sample_queries(1000, pattern="zipf", zipf_a=1.12, seed=1)
+    ents = np.asarray([q["entity"] for q in qs])
+    _, counts = np.unique(ents, return_counts=True)
+    frac_repeat = (np.repeat(counts, counts) > 1).mean()
+    assert frac_repeat > 0.6                # paper: >60% have counterparts
+
+    scattered = world.sample_queries(1000, pattern="scattered", seed=1)
+    ents_s = np.asarray([q["entity"] for q in scattered])
+    _, cs = np.unique(ents_s, return_counts=True)
+    assert (np.repeat(cs, cs) > 1).mean() < frac_repeat
+
+
+def test_golden_mask_oracle(world):
+    e = 5
+    a = int(np.flatnonzero(world.entity_attrs[e])[0])
+    docs = np.flatnonzero((world.doc_entity == e)
+                          & world.doc_attr_mask[:, a])
+    assert world.golden_mask(e, a, docs).all()
+    other = np.flatnonzero(world.doc_entity != e)[:5]
+    assert not world.golden_mask(e, a, other).any()
+    assert not world.golden_mask(e, a, np.array([-1])).any()
+
+
+def test_encoder_presets_all_work():
+    for name, kw in ENCODERS.items():
+        w = SyntheticWorld(WorldConfig(n_entities=200, seed=1, **kw))
+        assert np.isfinite(w.doc_emb).all(), name
