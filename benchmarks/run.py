@@ -12,9 +12,10 @@ import time
 
 def main() -> None:
     from benchmarks import (fig11_k_sweep, fig13_agentic, retrieval_roofline,
-                            table2_anns, table3_reuse, table5_scattered,
-                            table6_fuzzy_ablation, table7_compression,
-                            table8_tau_encoders, table9_cache_size)
+                            sched_throughput, table2_anns, table3_reuse,
+                            table5_scattered, table6_fuzzy_ablation,
+                            table7_compression, table8_tau_encoders,
+                            table9_cache_size)
     from benchmarks.common import fmt_rows
 
     modules = [
@@ -28,6 +29,7 @@ def main() -> None:
         ("fig11_k_sweep (Fig 11)", fig11_k_sweep),
         ("fig13_agentic (Fig 13)", fig13_agentic),
         ("retrieval_roofline (Fig 1)", retrieval_roofline),
+        ("sched_throughput (serving scheduler)", sched_throughput),
     ]
     all_rows = []
     for name, mod in modules:

@@ -1,0 +1,103 @@
+"""Continuous-batching scheduler under open-loop Poisson load.
+
+Compares the event-driven scheduler (serving/scheduler.py) against the
+sequential ``HasEngine`` (closed loop: effective throughput = 1/AvgL) and
+the snapshot ``BatchedHasEngine`` on the same zipf (homology-heavy) stream:
+
+  * throughput (completed qps) and p50/p95/p99 latency across a QPS sweep
+    up to batch saturation (arrival rate >= the edge's speculation service
+    rate, i.e. the admission queue never drains);
+  * DAR parity with the micro-batch engine (sharing + late re-validation
+    can only add accepts);
+  * the single-flight sharing ablation: full-retrieval count with the
+    intra-batch homology election on vs. off.
+
+Run standalone:  PYTHONPATH=src python -m benchmarks.sched_throughput
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import N_QUERIES, get_queries, get_service, has_config, row
+from repro.serving.batched import BatchedHasEngine
+from repro.serving.engine import HasEngine
+from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                     SchedulerConfig, poisson_arrivals)
+
+
+def _fmt(s: dict) -> str:
+    return (f"thr={s['throughput_qps']:.2f}qps;dar={s['dar']:.4f};"
+            f"p50={s['p50_latency_s'] * 1e3:.0f}ms;"
+            f"p95={s['p95_latency_s'] * 1e3:.0f}ms;"
+            f"p99={s['p99_latency_s'] * 1e3:.0f}ms;"
+            f"shared={s['shared_accepts']};reval={s['reval_accepts']};"
+            f"full={s['full_retrievals']}")
+
+
+def run():
+    rows = []
+    svc = get_service()
+    n = min(N_QUERIES, 2000)
+    qs = list(get_queries("granola", n=n))
+    cfg = has_config()
+    sc = SchedulerConfig(max_spec_batch=32, full_batch=16,
+                         full_max_wait_s=0.05)
+    sched = ContinuousBatchingScheduler(svc, cfg, sc)
+
+    # closed-loop sequential baseline: one query in flight at a time
+    seq = HasEngine(svc, cfg).serve(qs[:min(n, 800)]).summary()
+    seq_thr = 1.0 / seq["avg_latency_s"]
+    rows.append(row("sched/sequential_has", seq["avg_latency_s"],
+                    f"thr={seq_thr:.2f}qps;dar={seq['dar']:.4f}"))
+
+    bat = BatchedHasEngine(svc, cfg, batch_size=sc.max_spec_batch
+                           ).serve(qs).summary()
+    rows.append(row("sched/batched_has", bat["avg_latency_s"],
+                    f"dar={bat['dar']:.4f}"))
+
+    # QPS sweep up to saturation of the edge speculation service rate
+    edge_rate = sc.max_spec_batch / sched._spec_time(sc.max_spec_batch)
+    sat = None
+    for frac, label in ((0.25, "qps_low"), (1.0, "qps_saturating"),
+                        (None, "qps_inf")):
+        if frac is None:
+            arrivals, qps_str = None, "inf"
+        else:
+            qps = frac * edge_rate
+            arrivals = poisson_arrivals(n, qps=qps, seed=7)
+            qps_str = f"{qps:.1f}"
+        s = sched.serve(qs, arrivals, seed=0).summary()
+        if label != "qps_low":
+            sat = s                               # saturated reference
+        rows.append(row(f"sched/{label}={qps_str}",
+                        s["avg_latency_s"], _fmt(s)))
+
+    # single-flight sharing ablation at full saturation
+    no_share = ContinuousBatchingScheduler(
+        svc, cfg, SchedulerConfig(max_spec_batch=32, full_batch=16,
+                                  full_max_wait_s=0.05, share=False),
+        index=sched.index)
+    s0 = no_share.serve(qs, None, seed=0).summary()
+    rows.append(row("sched/qps_inf_no_share", s0["avg_latency_s"], _fmt(s0)))
+
+    # acceptance verdicts (issue: scheduler beats sequential throughput at
+    # saturating QPS, DAR within 2 points of the micro-batch engine, and
+    # sharing measurably cuts full retrievals on a homology-heavy stream)
+    rows.append(row(
+        "sched/verdict_throughput", 0.0,
+        f"{'PASS' if sat['throughput_qps'] > seq_thr else 'FAIL'}"
+        f"(sched={sat['throughput_qps']:.2f}qps,seq={seq_thr:.2f}qps)"))
+    rows.append(row(
+        "sched/verdict_dar_parity", 0.0,
+        f"{'PASS' if sat['dar'] >= bat['dar'] - 0.02 else 'FAIL'}"
+        f"(sched={sat['dar']:.4f},batched={bat['dar']:.4f})"))
+    rows.append(row(
+        "sched/verdict_sharing", 0.0,
+        f"{'PASS' if sat['full_retrievals'] < s0['full_retrievals'] else 'FAIL'}"
+        f"(shared_on={sat['full_retrievals']},off={s0['full_retrievals']})"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import fmt_rows
+    print(fmt_rows(run()))

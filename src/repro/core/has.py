@@ -23,7 +23,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.homology import homology_scores, reidentify
+from repro.core.homology import (homology_scores, homology_scores_batched,
+                                 reidentify)
 from repro.retrieval.ivf import IVFIndex, ivf_search
 
 
@@ -128,6 +129,63 @@ def speculate(cfg: HasConfig, state: HasState, index: IVFIndex,
 speculate_batched = jax.jit(
     jax.vmap(speculate, in_axes=(None, None, None, 0)),
     static_argnames=("cfg",))
+
+
+# ---------------------------------------------------------------------------
+# Intra-batch homology sharing (continuous-batching acceptance channel)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def intra_batch_share(val_ids: jax.Array, rejected: jax.Array,
+                      tau: jax.Array, pending: jax.Array | None = None):
+    """Greedy leader election among the rejected drafts of a full batch.
+
+    The snapshot semantics of micro-batched serving cannot let intra-batch
+    queries re-identify each other through the cache; this scores them
+    against *each other* instead: ``val_ids [B, k]`` are the validation
+    drafts, ``rejected [B]`` marks queries awaiting a full retrieval.
+    Scanning in admission order, each rejected query either becomes a
+    *leader* (pays one full retrieval) or a *follower* of the best earlier
+    leader with homology > tau, sharing that leader's full result instead
+    of paying for its own (single-flight collapsing of homologous work).
+
+    ``pending [B]`` optionally marks rows that are ALREADY leaders of
+    earlier, still-unresolved full retrievals: they keep their leader role
+    and serve as attach targets, letting a serving loop extend the election
+    window from one batch to its whole reject queue.
+
+    ``tau`` here may reasonably be lower than the validation threshold:
+    validation scores a draft against a cached FULL result set, while
+    sharing scores two k-item speculative drafts against each other, which
+    systematically underestimates the queries' true homology (both sides
+    are noisy subsets).
+
+    Returns dict(is_leader [B] bool, leader [B] int32, share_score [B]):
+    rows neither rejected nor pending keep leader[i] == i with is_leader
+    False.
+    """
+    b = val_ids.shape[0]
+    if pending is None:
+        pending = jnp.zeros((b,), bool)
+    # pairwise homology: scores[i, j] = s(q_i, q_j), 0 on invalid columns
+    scores = homology_scores_batched(val_ids, val_ids, rejected | pending)
+    idx = jnp.arange(b)
+    tau = jnp.float32(tau)
+
+    def body(i, carry):
+        is_leader, leader, share = carry
+        s = jnp.where(is_leader & (idx < i), scores[i], -1.0)
+        best = jnp.argmax(s).astype(jnp.int32)
+        follow = rejected[i] & ~pending[i] & (s[best] > tau)
+        lead = (rejected[i] & ~follow) | pending[i]
+        return (is_leader.at[i].set(lead),
+                leader.at[i].set(jnp.where(follow, best, i)),
+                share.at[i].set(jnp.where(follow, s[best], 0.0)))
+
+    is_leader, leader, share = jax.lax.fori_loop(
+        0, b, body, (pending, idx.astype(jnp.int32),
+                     jnp.zeros((b,), jnp.float32)))
+    return {"is_leader": is_leader, "leader": leader, "share_score": share}
 
 
 # ---------------------------------------------------------------------------

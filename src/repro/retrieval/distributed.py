@@ -13,7 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.utils import shard_map
 
 from repro.retrieval.flat import chunked_flat_search
 

@@ -1,1 +1,2 @@
-"""RAG serving: engines (HaS / baselines), latency model, batched serving."""
+"""RAG serving: engines (HaS / baselines), latency model, batched serving,
+and the event-driven continuous-batching scheduler (scheduler.py)."""

@@ -13,6 +13,12 @@ Semantics vs. the sequential engine: intra-batch queries cannot re-identify
 each other (the cache is a snapshot), so DAR is a lower bound that converges
 to the sequential engine's as batch_size/stream_length -> 0.  Latency per
 query improves by amortizing dispatch + the full-search matmul batch.
+
+The engine rides the shared :class:`~repro.serving.engine.ServeLoop`
+substrate: it only implements ``_step_batch``; metrics recording and rng
+threading live in the base class.  serving/scheduler.py lifts the same
+micro-batch mechanics into an event-driven continuous-batching loop that
+additionally lets intra-batch rejects share full retrievals.
 """
 from __future__ import annotations
 
@@ -24,74 +30,66 @@ import numpy as np
 
 from repro.core.has import (HasConfig, cache_update, init_has_state,
                             speculate_batched)
-from repro.retrieval.flat import chunked_flat_search
-from repro.retrieval.ivf import build_ivf, subset_index
-from repro.serving.engine import LLMS, RetrievalService, ServeResult, \
-    _finish, _metrics_init, _record
+from repro.retrieval.ivf import build_ivf
+from repro.serving.engine import (RetrievalService, ServeLoop,
+                                  full_batch_searcher, fuzzy_scope)
 
 
-class BatchedHasEngine:
+class BatchedHasEngine(ServeLoop):
     def __init__(self, service: RetrievalService, cfg: HasConfig | None = None,
                  batch_size: int = 32, seed: int = 0):
-        self.s = service
+        super().__init__(service)
         self.cfg = cfg or HasConfig(k=service.k, d=service.world.cfg.d)
         self.state = init_has_state(self.cfg)
         self.index = build_ivf(service.corpus, self.cfg.n_buckets, seed=seed)
         self.batch_size = batch_size
-        self.fuzzy_scope = (min(self.cfg.nprobe, self.index.n_buckets)
-                            / self.index.n_buckets)
-        self._full_batch = jax.jit(lambda c, q: chunked_flat_search(
-            c, q, self.cfg.k, min(32768, c.shape[0])))
+        self.fuzzy_scope = fuzzy_scope(self.cfg, self.index)
+        self._full_batch = full_batch_searcher(service.corpus, self.cfg.k)
         # warmup
         z = jnp.zeros((batch_size, self.s.world.cfg.d))
         jax.block_until_ready(
             speculate_batched(self.cfg, self.state, self.index, z))
         self._full_batch(self.s.corpus, z)[0].block_until_ready()
 
-    def serve(self, queries, dataset="granola", llms=LLMS,
-              seed=0) -> ServeResult:
-        rng = np.random.default_rng(seed)
-        m = _metrics_init(len(queries), llms)
+    def _step_batch(self, group, rng, dataset):
         lat_model = self.s.latency
         bs = self.batch_size
-        for start in range(0, len(queries), bs):
-            group = queries[start:start + bs]
-            embs = np.stack([q["emb"] for q in group])
-            if len(group) < bs:                       # pad the tail batch
-                pad = np.zeros((bs - len(group), embs.shape[1]), np.float32)
-                embs = np.concatenate([embs, pad])
-            t0 = time.perf_counter()
-            out = speculate_batched(self.cfg, self.state, self.index,
-                                    jnp.asarray(embs))
-            jax.block_until_ready(out)
-            t_spec = (time.perf_counter() - t0) / max(len(group), 1)
-            accepts = np.asarray(out["accept"])[:len(group)]
-            drafts = np.asarray(out["draft_ids"])[:len(group)]
+        embs = np.stack([q["emb"] for q in group])
+        if len(group) < bs:                           # pad the tail batch
+            pad = np.zeros((bs - len(group), embs.shape[1]), np.float32)
+            embs = np.concatenate([embs, pad])
+        t0 = time.perf_counter()
+        out = speculate_batched(self.cfg, self.state, self.index,
+                                jnp.asarray(embs))
+        jax.block_until_ready(out)
+        t_spec = (time.perf_counter() - t0) / max(len(group), 1)
+        accepts = np.asarray(out["accept"])[:len(group)]
+        drafts = np.asarray(out["draft_ids"])[:len(group)]
 
-            # compact the rejected sub-batch -> one batched full search
-            rej = np.flatnonzero(~accepts)
-            t_full = 0.0
-            if len(rej):
-                sub = jnp.asarray(embs[rej])
-                _, ids_full = self._full_batch(self.s.corpus, sub)
-                ids_full = np.asarray(ids_full)
-                t_full = lat_model.full_scan_time()   # amortized batch scan
-                for j, qi in enumerate(rej):
-                    ids = ids_full[j].astype(np.int32)
-                    self.state = cache_update(
-                        self.cfg, self.state, jnp.asarray(embs[qi]),
-                        jnp.asarray(ids), self.s.corpus[ids])
+        # compact the rejected sub-batch -> one batched full search
+        rej = np.flatnonzero(~accepts)
+        ids_full, t_full = None, 0.0
+        if len(rej):
+            sub = jnp.asarray(embs[rej])
+            _, ids_full = self._full_batch(self.s.corpus, sub)
+            ids_full = np.asarray(ids_full)
+            t_full = lat_model.full_scan_time()       # amortized batch scan
+            for j, qi in enumerate(rej):
+                ids = ids_full[j].astype(np.int32)
+                self.state = cache_update(
+                    self.cfg, self.state, jnp.asarray(embs[qi]),
+                    jnp.asarray(ids), self.s.corpus[ids])
 
-            fuzzy_t = lat_model.scan_time(
-                lat_model.target_corpus * self.fuzzy_scope * 2.0)
-            for i, q in enumerate(group):
-                lat = lat_model.sample_edge() + t_spec + fuzzy_t
-                if accepts[i]:
-                    ids = drafts[i]
-                else:
-                    j = int(np.flatnonzero(rej == i)[0])
-                    ids = ids_full[j]
-                    lat += lat_model.sample_cloud() + t_full
-                _record(m, start + i, self.s.world, q, ids, lat,
-                        bool(accepts[i]), dataset, llms, rng)
-        return _finish(m)
+        fuzzy_t = lat_model.scan_time(
+            lat_model.target_corpus * self.fuzzy_scope * 2.0)
+        results = []
+        for i in range(len(group)):
+            lat = lat_model.sample_edge() + t_spec + fuzzy_t
+            if accepts[i]:
+                ids = drafts[i]
+            else:
+                j = int(np.flatnonzero(rej == i)[0])
+                ids = ids_full[j]
+                lat += lat_model.sample_cloud() + t_full
+            results.append((ids, bool(accepts[i]), lat))
+        return results

@@ -1,7 +1,15 @@
 """RAG serving engines: Full / HaS / reuse-based / CRAG / ANNS (paper §IV).
 
-Each engine serves a query stream sequentially (Algorithm 1 semantics: the
-cache mutates between queries) and records the paper's metrics:
+All engines run on one serve-loop substrate (:class:`ServeLoop`): the loop
+owns metrics recording, record-rng threading and micro-batch iteration, and
+an engine only implements ``_step`` (one query -> ids/accept/latency) or
+``_step_batch`` (one micro-batch -> a list of those).  ``batch_size == 1``
+gives Algorithm 1's sequential semantics (the cache mutates between
+queries); serving/batched.py sets ``batch_size > 1`` for snapshot
+micro-batching, and serving/scheduler.py reuses the same metrics substrate
+for event-driven continuous batching.
+
+Recorded metrics (paper §IV):
 
   AvgL   average end-to-end retrieval latency
   DAR    draft acceptance rate
@@ -112,6 +120,18 @@ def _finish(m) -> ServeResult:
 LLMS = ("qwen3-8b", "llama3-8b", "mixtral-7b")
 
 
+def full_batch_searcher(corpus, k: int):
+    """Jitted coalesced exact top-k over the corpus for a query batch —
+    the one full-retrieval matmul shared by the batched/scheduler engines."""
+    return jax.jit(lambda c, q: chunked_flat_search(
+        c, q, k, min(32768, c.shape[0])))
+
+
+def fuzzy_scope(cfg, index) -> float:
+    """Fraction of the fuzzy IVF index streamed per probed query."""
+    return min(cfg.nprobe, index.n_buckets) / index.n_buckets
+
+
 def _record(m, i, world, query, ids, lat, accept, dataset, llms, rng):
     golden = world.golden_mask(query["entity"], query["attr"], ids)
     hit = bool(golden.any())
@@ -125,26 +145,64 @@ def _record(m, i, world, query, ids, lat, accept, dataset, llms, rng):
 
 
 # ---------------------------------------------------------------------------
-# Engines
+# Serve-loop substrate
 # ---------------------------------------------------------------------------
 
-class FullRetrievalEngine:
-    """Baseline: always full-database retrieval on the cloud."""
+class ServeLoop:
+    """One serve loop for every engine (sequential or micro-batched).
+
+    ``serve`` owns the stream mechanics every engine previously hand-rolled:
+    metrics array allocation, per-query recording (DocHit/CAR/RA draws from
+    the record rng), and micro-batch iteration.  Engines implement either
+
+      * ``_step(q, rng, dataset) -> (ids, accept, latency_s)`` — sequential
+        Algorithm 1 semantics (``batch_size == 1``), or
+      * ``_step_batch(group, rng, dataset) -> [(ids, accept, latency_s)]`` —
+        snapshot micro-batch semantics (``batch_size > 1``).
+
+    Latency accounting convention (serving/latency.py): engines compose each
+    query's latency from sampled RTTs (the latency model's own rng stream),
+    measured edge compute, and analytic bandwidth-bound scan times.
+    """
+
+    batch_size: int = 1
 
     def __init__(self, service: RetrievalService):
         self.s = service
 
-    def serve(self, queries, dataset="granola", llms=LLMS, seed=0) -> ServeResult:
+    def _step(self, q, rng, dataset):
+        raise NotImplementedError
+
+    def _step_batch(self, group, rng, dataset):
+        return [self._step(q, rng, dataset) for q in group]
+
+    def serve(self, queries, dataset="granola", llms=LLMS,
+              seed=0) -> ServeResult:
         rng = np.random.default_rng(seed)
         m = _metrics_init(len(queries), llms)
-        for i, q in enumerate(queries):
-            ids, _, t = self.s.full_search(q["emb"])
-            lat = self.s.latency.sample_cloud() + t
-            _record(m, i, self.s.world, q, ids, lat, False, dataset, llms, rng)
+        bs = max(int(self.batch_size), 1)
+        for start in range(0, len(queries), bs):
+            group = queries[start:start + bs]
+            for j, (ids, accept, lat) in enumerate(
+                    self._step_batch(group, rng, dataset)):
+                _record(m, start + j, self.s.world, group[j], ids, lat,
+                        bool(accept), dataset, llms, rng)
         return _finish(m)
 
 
-class ANNSEngine:
+# ---------------------------------------------------------------------------
+# Engines
+# ---------------------------------------------------------------------------
+
+class FullRetrievalEngine(ServeLoop):
+    """Baseline: always full-database retrieval on the cloud."""
+
+    def _step(self, q, rng, dataset):
+        ids, _, t = self.s.full_search(q["emb"])
+        return ids, False, self.s.latency.sample_cloud() + t
+
+
+class ANNSEngine(ServeLoop):
     """IVF / ScaNN-substitute at a configurable scope (Table II ♠/♦).
 
     'scann' = IVF partitioning + int8 asymmetric scoring (the TPU-native
@@ -156,7 +214,7 @@ class ANNSEngine:
     def __init__(self, service: RetrievalService, method: str = "ivf",
                  n_buckets: int = 4096, nprobe: int = 64,
                  on_edge: bool = True, seed: int = 0):
-        self.s = service
+        super().__init__(service)
         self.on_edge = on_edge
         self.method = method
         self.index = build_ivf(service.corpus, n_buckets, seed=seed)
@@ -187,25 +245,20 @@ class ANNSEngine:
                               self.index.n_buckets)
         return np.asarray(ids[0]), t
 
-    def serve(self, queries, dataset="granola", llms=LLMS, seed=0) -> ServeResult:
-        rng = np.random.default_rng(seed)
-        m = _metrics_init(len(queries), llms)
-        for i, q in enumerate(queries):
-            ids, t = self.search(q["emb"])
-            rtt = (self.s.latency.sample_edge() if self.on_edge
-                   else self.s.latency.sample_cloud())
-            _record(m, i, self.s.world, q, ids, rtt + t, False, dataset,
-                    llms, rng)
-        return _finish(m)
+    def _step(self, q, rng, dataset):
+        ids, t = self.search(q["emb"])
+        rtt = (self.s.latency.sample_edge() if self.on_edge
+               else self.s.latency.sample_cloud())
+        return ids, False, rtt + t
 
 
-class HasEngine:
+class HasEngine(ServeLoop):
     """The paper's system (Algorithm 1) with optional ANNS fallback (♦)."""
 
     def __init__(self, service: RetrievalService, cfg: HasConfig | None = None,
                  fallback: ANNSEngine | None = None,
                  fuzzy_fraction: float = 1.0, seed: int = 0):
-        self.s = service
+        super().__init__(service)
         self.cfg = cfg or HasConfig(k=service.k, d=service.world.cfg.d)
         self.state = init_has_state(self.cfg)
         index = build_ivf(service.corpus, self.cfg.n_buckets, seed=seed)
@@ -251,22 +304,18 @@ class HasEngine:
         lat += time.perf_counter() - t0
         return ids, False, lat, float(out["homology"])
 
-    def serve(self, queries, dataset="granola", llms=LLMS, seed=0) -> ServeResult:
-        rng = np.random.default_rng(seed)
-        m = _metrics_init(len(queries), llms)
-        for i, q in enumerate(queries):
-            ids, accept, lat, _ = self.step(q["emb"])
-            _record(m, i, self.s.world, q, ids, lat, accept, dataset, llms, rng)
-        return _finish(m)
+    def _step(self, q, rng, dataset):
+        ids, accept, lat, _ = self.step(q["emb"])
+        return ids, accept, lat
 
 
-class ReuseEngine:
+class ReuseEngine(ServeLoop):
     """Proximity / SafeRadius / MinCache reuse baselines (Table III)."""
 
     def __init__(self, service: RetrievalService, method: str,
                  h_max: int = 5000, theta: float = 0.9, alpha: float = 2.0,
                  t_lex: float = 0.6, t_sem: float = 0.9):
-        self.s = service
+        super().__init__(service)
         self.method = method
         self.state = init_reuse_state(h_max, service.k, service.world.cfg.d)
         self.theta, self.alpha = theta, alpha
@@ -285,28 +334,24 @@ class ReuseEngine:
                                   jnp.float32(self.t_sem))
         raise ValueError(self.method)
 
-    def serve(self, queries, dataset="granola", llms=LLMS, seed=0) -> ServeResult:
-        rng = np.random.default_rng(seed)
-        m = _metrics_init(len(queries), llms)
-        for i, q in enumerate(queries):
-            lat = self.s.latency.sample_edge()
-            t0 = time.perf_counter()
-            ok, slot, _ = self._match(q)
-            ok = bool(ok)
-            lat += time.perf_counter() - t0
-            if ok:
-                ids = np.asarray(self.state.doc_ids[int(slot)])
-            else:
-                ids, vecs, t = self.s.full_search(q["emb"])
-                lat += self.s.latency.sample_cloud() + t
-                scores = np.asarray(self.s.corpus[ids] @ q["emb"])
-                self.state = reuse_insert(
-                    self.state, jnp.asarray(q["emb"]),
-                    jnp.asarray(ids.astype(np.int32)), jnp.asarray(vecs),
-                    jnp.asarray(scores),
-                    jnp.asarray(minhash_signature(q["tokens"])))
-            _record(m, i, self.s.world, q, ids, lat, ok, dataset, llms, rng)
-        return _finish(m)
+    def _step(self, q, rng, dataset):
+        lat = self.s.latency.sample_edge()
+        t0 = time.perf_counter()
+        ok, slot, _ = self._match(q)
+        ok = bool(ok)
+        lat += time.perf_counter() - t0
+        if ok:
+            ids = np.asarray(self.state.doc_ids[int(slot)])
+        else:
+            ids, vecs, t = self.s.full_search(q["emb"])
+            lat += self.s.latency.sample_cloud() + t
+            scores = np.asarray(self.s.corpus[ids] @ q["emb"])
+            self.state = reuse_insert(
+                self.state, jnp.asarray(q["emb"]),
+                jnp.asarray(ids.astype(np.int32)), jnp.asarray(vecs),
+                jnp.asarray(scores),
+                jnp.asarray(minhash_signature(q["tokens"])))
+        return ids, ok, lat
 
 
 class CRAGEngine(HasEngine):
@@ -317,28 +362,22 @@ class CRAGEngine(HasEngine):
         super().__init__(service, cfg, seed=seed)
         self.evaluator = evaluator or CRAGEvaluator()
 
-    def serve(self, queries, dataset="granola", llms=LLMS, seed=0) -> ServeResult:
-        rng = np.random.default_rng(seed)
-        ood = dataset == "popqa"
-        m = _metrics_init(len(queries), llms)
-        for i, q in enumerate(queries):
-            lat = self.s.latency.sample_edge()
-            t0 = time.perf_counter()
-            out = speculate(self.cfg, self.state, self.index,
-                            jnp.asarray(q["emb"]))
-            jax.block_until_ready(out)
-            lat += (time.perf_counter() - t0) + self._fuzzy_time()
-            draft = np.asarray(out["draft_ids"])
-            golden = self.s.world.golden_mask(q["entity"], q["attr"], draft)
-            lat += self.evaluator.latency_s          # LLM inference cost
-            accept = self.evaluator.evaluate(rng, golden, ood)
-            if accept:
-                ids = draft
-            else:
-                ids, vecs, t = self.s.full_search(q["emb"])
-                lat += self.s.latency.sample_cloud() + t
-                self.state = cache_update(
-                    self.cfg, self.state, jnp.asarray(q["emb"]),
-                    jnp.asarray(ids.astype(np.int32)), jnp.asarray(vecs))
-            _record(m, i, self.s.world, q, ids, lat, accept, dataset, llms, rng)
-        return _finish(m)
+    def _step(self, q, rng, dataset):
+        lat = self.s.latency.sample_edge()
+        t0 = time.perf_counter()
+        out = speculate(self.cfg, self.state, self.index,
+                        jnp.asarray(q["emb"]))
+        jax.block_until_ready(out)
+        lat += (time.perf_counter() - t0) + self._fuzzy_time()
+        draft = np.asarray(out["draft_ids"])
+        golden = self.s.world.golden_mask(q["entity"], q["attr"], draft)
+        lat += self.evaluator.latency_s              # LLM inference cost
+        accept = self.evaluator.evaluate(rng, golden, dataset == "popqa")
+        if accept:
+            return draft, True, lat
+        ids, vecs, t = self.s.full_search(q["emb"])
+        lat += self.s.latency.sample_cloud() + t
+        self.state = cache_update(
+            self.cfg, self.state, jnp.asarray(q["emb"]),
+            jnp.asarray(ids.astype(np.int32)), jnp.asarray(vecs))
+        return ids, False, lat

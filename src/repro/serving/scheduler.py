@@ -1,0 +1,421 @@
+"""Event-driven continuous-batching HaS serving (virtual-clock simulation).
+
+Request lifecycle:
+
+    arrive -> admission queue -> batched ``speculate`` on the edge
+           -> accepted: return early (queue wait + spec compute + edge RTT)
+           -> rejected:
+                -> scored against every PENDING leader (queued or in-flight
+                   full retrievals) and the other rejects of its speculation
+                   batch via :func:`repro.core.has.intra_batch_share`;
+                   homologous peers become FOLLOWERS and share the leader's
+                   single full retrieval (single-flight collapsing)
+                -> leaders wait in the full-retrieval queue, are LATE
+                   RE-VALIDATED against the current cache at cloud-dispatch
+                   time (results ingested while they queued may re-identify
+                   them; one ``reidentify`` on the already-computed
+                   validation draft, no fuzzy scan), and the survivors are
+                   coalesced into ONE batched cloud matmul
+                -> full results ingest into the cache, leaders and their
+                   followers return
+
+The edge (speculation) and the cloud (full retrieval) are independent
+resources, so speculation of later admissions overlaps in-flight full
+retrievals — the continuous-batching win that neither the sequential
+``HasEngine`` (strict Algorithm 1) nor the snapshot micro-batches of
+``BatchedHasEngine`` can express.  Four completion channels result —
+``draft`` / ``reval`` / ``shared`` / ``full`` — of which the first three
+count as accepted (only ``full`` pays for its own full retrieval; only
+``full`` and ``shared`` wait on the cloud).
+
+Latency accounting: every component is *modeled* — sampled RTTs from the
+scheduler's own per-serve rng plus analytic bandwidth-bound scan times
+(serving/latency.py) — so a run is a pure function of
+(seed, arrival trace, query stream).  tests/test_scheduler.py relies on
+this bit-for-bit determinism.  Batched scans are charged bandwidth-bound:
+one coalesced matmul streams the operand once, so a full-retrieval batch
+costs ``full_scan_time()`` regardless of batch width, and a speculation
+batch streams ``min(B * scope, 1.0)`` of the fuzzy index.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import heapq
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.has import (HasConfig, cache_update, init_has_state,
+                            intra_batch_share, speculate_batched)
+from repro.core.homology import reidentify
+from repro.retrieval.ivf import build_ivf
+from repro.serving.engine import (LLMS, RetrievalService, ServeResult,
+                                  _metrics_init, _record,
+                                  full_batch_searcher)
+from repro.serving.engine import fuzzy_scope as _fuzzy_scope
+
+
+def poisson_arrivals(n: int, qps: float, seed: int = 0) -> np.ndarray:
+    """Arrival times of a Poisson process at rate ``qps`` (open-loop load)."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / qps, size=n))
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    max_spec_batch: int = 32       # admission -> speculation coalescing cap
+    full_batch: int = 16           # rejected leaders per cloud dispatch
+    full_max_wait_s: float = 0.05  # dispatch a partial batch after this wait
+    max_inflight_full: int = 1     # concurrent cloud dispatches
+    share: bool = True             # homology sharing across the reject queue
+    share_tau: float | None = None  # sharing threshold; None -> 0.5 * cfg.tau
+    max_pending_leaders: int = 256  # sharing registry capacity (fixed shape)
+    revalidate: bool = True        # re-check leaders at cloud-dispatch time
+    ingest_followers: bool = True  # followers' (q, shared D_full) also cached
+
+
+@dataclasses.dataclass
+class SchedResult(ServeResult):
+    """ServeResult + open-loop serving metrics."""
+    t_arrive: np.ndarray
+    t_done: np.ndarray
+    cloud_s: np.ndarray            # cloud RTT + scan charged to each request
+    channels: np.ndarray           # 'draft' | 'reval' | 'shared' | 'full'
+    full_retrievals: int           # queries that PAID for a full retrieval
+    spec_batches: int
+    full_batches: int
+
+    def summary(self) -> dict[str, float]:
+        out = super().summary()
+        lat = self.latencies
+        makespan = float(self.t_done.max() - self.t_arrive.min())
+        out.update({
+            "p50_latency_s": float(np.percentile(lat, 50)),
+            "p95_latency_s": float(np.percentile(lat, 95)),
+            "p99_latency_s": float(np.percentile(lat, 99)),
+            "makespan_s": makespan,
+            "throughput_qps": len(lat) / max(makespan, 1e-9),
+            "shared_accepts": int(np.sum(self.channels == "shared")),
+            "reval_accepts": int(np.sum(self.channels == "reval")),
+            "full_retrievals": int(self.full_retrievals),
+            "spec_batches": int(self.spec_batches),
+            "full_batches": int(self.full_batches),
+        })
+        return out
+
+
+@dataclasses.dataclass
+class _Request:
+    idx: int
+    q: dict
+    t_arrive: float
+    edge_rtt: float = 0.0
+    t_rejected: float = 0.0
+    val_ids: np.ndarray | None = None
+    draft_ids: np.ndarray | None = None
+    ids: np.ndarray | None = None
+    channel: str = "pending"
+    t_done: float = -1.0
+    cloud_s: float = 0.0
+    slot: int = -1                         # leader-registry slot
+    followers: list = dataclasses.field(default_factory=list)
+
+
+# event-kind priorities at equal timestamps: full results ingest before a
+# speculation batch dispatched at the same instant (cache freshness), and
+# both before new arrivals join the queue
+_FULL_DONE, _SPEC_DONE, _ARRIVE, _FULL_TIMER = 0, 1, 2, 3
+
+
+class ContinuousBatchingScheduler:
+    """Continuous-batching HaS engine over an open-loop arrival process.
+
+    Each ``serve`` call is an independent stream: the cache is re-initialised
+    so that (seed, arrivals, queries) fully determine the result.
+    """
+
+    def __init__(self, service: RetrievalService, cfg: HasConfig | None = None,
+                 sched: SchedulerConfig | None = None, seed: int = 0,
+                 index=None):
+        self.s = service
+        self.cfg = cfg or HasConfig(k=service.k, d=service.world.cfg.d)
+        self.sched = sched or SchedulerConfig()
+        self.state = init_has_state(self.cfg)
+        self.index = index if index is not None else build_ivf(
+            service.corpus, self.cfg.n_buckets, seed=seed)
+        self.fuzzy_scope = _fuzzy_scope(self.cfg, self.index)
+        self._share_tau = (self.sched.share_tau if self.sched.share_tau
+                           is not None else 0.5 * self.cfg.tau)
+        self._full_batch = full_batch_searcher(service.corpus, self.cfg.k)
+        # late re-validation: homology re-check of queued validation drafts
+        # against the updated query cache (no fuzzy scan needed)
+        self._revalidate = jax.jit(jax.vmap(
+            reidentify, in_axes=(0, None, None, None)))
+        # warmup the device shapes used by the loop
+        sc, d, k = self.sched, service.world.cfg.d, self.cfg.k
+        jax.block_until_ready(speculate_batched(
+            self.cfg, self.state, self.index, jnp.zeros((sc.max_spec_batch, d))))
+        self._full_batch(self.s.corpus,
+                         jnp.zeros((sc.full_batch, d)))[0].block_until_ready()
+        jax.block_until_ready(self._revalidate(
+            jnp.zeros((sc.full_batch, k), jnp.int32),
+            self.state.query_doc_ids, self.state.query_valid,
+            jnp.float32(self.cfg.tau)))
+        nrows = sc.max_pending_leaders + sc.max_spec_batch
+        jax.block_until_ready(intra_batch_share(
+            jnp.full((nrows, k), -1, jnp.int32), jnp.zeros((nrows,), bool),
+            jnp.float32(self._share_tau), jnp.zeros((nrows,), bool)))
+
+    # -- modeled service times (bandwidth-bound coalesced scans) -----------
+
+    def _spec_time(self, b: int) -> float:
+        """Edge time for one speculation batch of b queries: the cache
+        channel streams the doc store once; the fuzzy channel streams the
+        union of probed buckets (capped at the whole index)."""
+        lat = self.s.latency
+        fuzzy = lat.scan_time(min(b * self.fuzzy_scope, 1.0)
+                              * lat.target_corpus * 2.0 + self.cfg.n_buckets)
+        return fuzzy + lat.scan_time(self.cfg.doc_cap)
+
+    def _full_time(self) -> float:
+        return self.s.latency.full_scan_time()
+
+    # -- event loop --------------------------------------------------------
+
+    def serve(self, queries, arrivals: np.ndarray | None = None,
+              dataset: str = "granola", llms=LLMS, seed: int = 0) -> SchedResult:
+        sc = self.sched
+        cap = sc.max_pending_leaders
+        n = len(queries)
+        if arrivals is None:                     # fully saturated admission
+            arrivals = np.zeros(n)
+        arrivals = np.asarray(arrivals, np.float64)
+        assert arrivals.shape == (n,)
+
+        self.state = init_has_state(self.cfg)    # independent stream
+        rtt_rng = np.random.default_rng(seed)    # scheduler-owned RTT stream
+        lat = self.s.latency
+
+        reqs = [_Request(idx=i, q=q, t_arrive=float(arrivals[i]))
+                for i, q in enumerate(queries)]
+        heap: list[tuple[float, int, int, Any]] = []
+        seq = 0
+        for r in reqs:
+            heapq.heappush(heap, (r.t_arrive, _ARRIVE, seq, r))
+            seq += 1
+
+        admission: collections.deque[_Request] = collections.deque()
+        leaders: collections.deque[_Request] = collections.deque()  # queued
+        edge_busy = False
+        inflight_full = 0
+        timer_armed = False
+        spec_batches = full_batches = full_retrievals = 0
+
+        # fixed-shape sharing registry over ALL pending (queued + in-flight)
+        # leaders; new rejects are scored against it in one device call
+        reg_vals = np.full((cap, self.cfg.k), -1, np.int32)
+        reg_valid = np.zeros(cap, bool)
+        reg_req: list[_Request | None] = [None] * cap
+        free_slots = list(range(cap - 1, -1, -1))          # pop() -> lowest
+
+        def registry_add(r: _Request):
+            if not free_slots:
+                return                      # registry full: r stays a leader
+            slot = free_slots.pop()
+            reg_vals[slot] = r.val_ids
+            reg_valid[slot] = True
+            reg_req[slot] = r
+            r.slot = slot
+
+        def registry_remove(r: _Request):
+            if r.slot >= 0:
+                reg_valid[r.slot] = False
+                reg_req[r.slot] = None
+                free_slots.append(r.slot)
+                free_slots.sort(reverse=True)
+                r.slot = -1
+
+        def _admit_chunk(group: list[_Request]):
+            g = len(group)
+            vals = np.concatenate([
+                reg_vals,
+                np.stack([r.val_ids for r in group]),
+                np.full((sc.max_spec_batch - g, self.cfg.k), -1, np.int32)])
+            rejected = np.zeros(cap + sc.max_spec_batch, bool)
+            rejected[cap:cap + g] = True
+            pending = np.concatenate(
+                [reg_valid, np.zeros(sc.max_spec_batch, bool)])
+            out = intra_batch_share(jnp.asarray(vals), jnp.asarray(rejected),
+                                    jnp.float32(self._share_tau),
+                                    jnp.asarray(pending))
+            leader_of = np.asarray(out["leader"])
+            is_leader = np.asarray(out["is_leader"])
+            for j, r in enumerate(group):
+                row = cap + j
+                if is_leader[row]:
+                    leaders.append(r)
+                    registry_add(r)
+                else:
+                    li = leader_of[row]
+                    lead = reg_req[li] if li < cap else group[li - cap]
+                    lead.followers.append(r)
+
+        def admit_rejects(group: list[_Request]):
+            """Share-or-lead election for newly rejected requests against the
+            pending-leader registry + each other (admission order)."""
+            if not sc.share:
+                for r in group:
+                    leaders.append(r)
+                    registry_add(r)
+                return
+            for i in range(0, len(group), sc.max_spec_batch):
+                _admit_chunk(group[i:i + sc.max_spec_batch])
+
+        def dispatch_spec(t: float):
+            nonlocal edge_busy, seq, spec_batches
+            batch = [admission.popleft()
+                     for _ in range(min(len(admission), sc.max_spec_batch))]
+            embs = np.zeros((sc.max_spec_batch, self.s.world.cfg.d),
+                            np.float32)
+            for j, r in enumerate(batch):
+                embs[j] = r.q["emb"]
+                r.edge_rtt = rtt_rng.uniform(*lat.edge_rtt)
+            out = speculate_batched(self.cfg, self.state, self.index,
+                                    jnp.asarray(embs))
+            accepts = np.asarray(out["accept"])
+            drafts = np.asarray(out["draft_ids"])
+            val_ids = np.asarray(out["val_ids"])
+            for j, r in enumerate(batch):
+                if accepts[j]:
+                    r.ids, r.channel = drafts[j], "draft"
+                else:
+                    r.val_ids, r.draft_ids = val_ids[j], drafts[j]
+            t_done = t + self._spec_time(len(batch))
+            heapq.heappush(heap, (t_done, _SPEC_DONE, seq, batch))
+            seq += 1
+            edge_busy = True
+            spec_batches += 1
+
+        def try_spec(t: float):
+            if not edge_busy and admission:
+                dispatch_spec(t)
+
+        def dispatch_full(t: float):
+            nonlocal inflight_full, seq, full_batches, full_retrievals
+            batch = [leaders.popleft()
+                     for _ in range(min(len(leaders), sc.full_batch))]
+            # late re-validation: results ingested while these leaders
+            # queued may re-identify them now — no cloud work needed
+            if sc.revalidate:
+                vids = np.full((sc.full_batch, self.cfg.k), -1, np.int32)
+                for j, r in enumerate(batch):
+                    vids[j] = r.val_ids
+                acc = np.asarray(self._revalidate(
+                    jnp.asarray(vids), self.state.query_doc_ids,
+                    self.state.query_valid, jnp.float32(self.cfg.tau))[0])
+                survivors = []
+                for j, r in enumerate(batch):
+                    if acc[j]:
+                        r.ids, r.channel = r.draft_ids, "reval"
+                        r.t_done = t + r.edge_rtt
+                        registry_remove(r)
+                        # orphaned followers re-enter the election
+                        readmit, r.followers = r.followers, []
+                        admit_rejects(readmit)
+                    else:
+                        survivors.append(r)
+                batch = survivors
+            b = len(batch)
+            if not b:
+                return
+            embs = np.zeros((sc.full_batch, self.s.world.cfg.d), np.float32)
+            for j, r in enumerate(batch):
+                embs[j] = r.q["emb"]
+            # one coalesced matmul retrieves every leader of the dispatch
+            _, ids_full = self._full_batch(self.s.corpus, jnp.asarray(embs))
+            ids_full = np.asarray(ids_full)
+            cloud = rtt_rng.uniform(*lat.cloud_rtt) + self._full_time()
+            heapq.heappush(heap, (t + cloud, _FULL_DONE, seq,
+                                  (batch, ids_full, cloud)))
+            seq += 1
+            inflight_full += 1
+            full_batches += 1
+            full_retrievals += b
+
+        def try_full(t: float):
+            nonlocal timer_armed, seq
+            while inflight_full < sc.max_inflight_full and leaders:
+                deadline = leaders[0].t_rejected + sc.full_max_wait_s
+                if len(leaders) < sc.full_batch and t < deadline:
+                    if not timer_armed:
+                        heapq.heappush(heap, (deadline, _FULL_TIMER, seq,
+                                              None))
+                        seq += 1
+                        timer_armed = True
+                    return
+                dispatch_full(t)
+
+        while heap:
+            t, kind, _, payload = heapq.heappop(heap)
+            if kind == _ARRIVE:
+                admission.append(payload)
+                try_spec(t)
+            elif kind == _SPEC_DONE:
+                edge_busy = False
+                rejected = []
+                for r in payload:
+                    if r.channel == "draft":
+                        r.t_done = t + r.edge_rtt
+                    else:
+                        r.t_rejected = t
+                        rejected.append(r)
+                admit_rejects(rejected)
+                try_full(t)
+                try_spec(t)
+            elif kind == _FULL_DONE:
+                inflight_full -= 1
+                batch, ids_full, cloud = payload
+                for j, r in enumerate(batch):
+                    r.ids = ids_full[j].astype(np.int32)
+                    r.channel = "full"
+                    r.cloud_s = cloud
+                    r.t_done = t + r.edge_rtt
+                    registry_remove(r)
+                    for f in r.followers:
+                        f.ids, f.channel = r.ids, "shared"
+                        f.cloud_s = cloud
+                        f.t_done = t + f.edge_rtt
+                for j, r in enumerate(batch):
+                    self.state = cache_update(
+                        self.cfg, self.state, jnp.asarray(r.q["emb"]),
+                        jnp.asarray(r.ids), self.s.corpus[jnp.asarray(r.ids)])
+                    if sc.ingest_followers:
+                        for f in r.followers:
+                            self.state = cache_update(
+                                self.cfg, self.state,
+                                jnp.asarray(f.q["emb"]), jnp.asarray(f.ids),
+                                self.s.corpus[jnp.asarray(f.ids)])
+                try_full(t)
+            else:                                  # _FULL_TIMER
+                timer_armed = False
+                try_full(t)
+
+        # -- metrics (request-index order, shared substrate) ---------------
+        rng = np.random.default_rng(seed)
+        m = _metrics_init(n, llms)
+        for r in reqs:
+            accept = r.channel in ("draft", "reval", "shared")
+            _record(m, r.idx, self.s.world, r.q, r.ids,
+                    r.t_done - r.t_arrive, accept, dataset, llms, rng)
+        return SchedResult(
+            latencies=m["latencies"], accepts=m["accepts"],
+            doc_hits=m["doc_hits"], correct_accepts=m["correct"], ra=m["ra"],
+            t_arrive=np.array([r.t_arrive for r in reqs]),
+            t_done=np.array([r.t_done for r in reqs]),
+            cloud_s=np.array([r.cloud_s for r in reqs]),
+            channels=np.array([r.channel for r in reqs]),
+            full_retrievals=full_retrievals,
+            spec_batches=spec_batches, full_batches=full_batches)

@@ -11,11 +11,39 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import inspect
 from typing import Any, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Version-compatible shard_map
+# ---------------------------------------------------------------------------
+
+try:                                     # newer jax exports it at top level
+    from jax import shard_map as _shard_map
+except ImportError:                      # older releases: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# the replication-check kwarg was renamed check_rep -> check_vma in a
+# different release than the top-level export, so probe the signature
+# instead of inferring the spelling from the import location
+_REP_KWARG = ("check_vma" if "check_vma" in
+              inspect.signature(_shard_map).parameters else "check_rep")
+
+
+def shard_map(f, *, check_vma: bool | None = None, **kw):
+    """`jax.shard_map` across jax versions.
+
+    Newer jax exports ``jax.shard_map`` and spells the replication-check
+    kwarg ``check_vma``; older versions live in ``jax.experimental`` and
+    spell it ``check_rep``.  Callers always use the new spelling.
+    """
+    if check_vma is not None:
+        kw[_REP_KWARG] = check_vma
+    return _shard_map(f, **kw)
 
 # ---------------------------------------------------------------------------
 # Logical axis rules

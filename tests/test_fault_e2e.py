@@ -2,7 +2,8 @@
 elastic downscale plan, plus hypothesis property tests on HaS invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+# real hypothesis when installed, skip-stubs otherwise (see conftest.py)
+from conftest import given, settings, st
 
 import jax
 import jax.numpy as jnp

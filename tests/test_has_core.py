@@ -5,7 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+# real hypothesis when installed, skip-stubs otherwise (see conftest.py)
+from conftest import given, settings, st
 
 from repro.core.has import HasConfig, cache_update, init_has_state, speculate
 from repro.core.homology import (homology_scores, pairwise_homology,

@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+# real hypothesis when installed, skip-stubs otherwise (see conftest.py)
+from conftest import given, settings, st
 
 from repro.retrieval.flat import (chunked_flat_search, flat_search,
                                   quantize_store, quantized_search)
