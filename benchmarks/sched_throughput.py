@@ -10,15 +10,25 @@ the snapshot ``BatchedHasEngine`` on the same zipf (homology-heavy) stream:
   * DAR parity with the micro-batch engine (sharing + late re-validation
     can only add accepts);
   * the single-flight sharing ablation: full-retrieval count with the
-    intra-batch homology election on vs. off.
+    intra-batch homology election on vs. off;
+  * the dispatch model of the batch-native refactor: one fused
+    ``speculate_batch`` program per speculation batch and one fused
+    ``cache_update_batched`` scan per ingest chunk (counted by the
+    ``repro.core.dispatch`` probe during the saturated run), swept over
+    backend × speculation batch size (the Pallas backend joins the sweep
+    on TPU; on CPU it runs in interpret mode and is benchmarked by
+    ``retrieval_roofline.sweep_backends`` instead).
 
 Run standalone:  PYTHONPATH=src python -m benchmarks.sched_throughput
 """
 from __future__ import annotations
 
+import jax
 import numpy as np
 
 from benchmarks.common import N_QUERIES, get_queries, get_service, has_config, row
+from repro.core import dispatch
+from repro.core.has import default_backend
 from repro.serving.batched import BatchedHasEngine
 from repro.serving.engine import HasEngine
 from repro.serving.scheduler import (ContinuousBatchingScheduler,
@@ -66,11 +76,25 @@ def run():
             qps = frac * edge_rate
             arrivals = poisson_arrivals(n, qps=qps, seed=7)
             qps_str = f"{qps:.1f}"
-        s = sched.serve(qs, arrivals, seed=0).summary()
+        with dispatch.capture() as probe:
+            s = sched.serve(qs, arrivals, seed=0).summary()
         if label != "qps_low":
             sat = s                               # saturated reference
         rows.append(row(f"sched/{label}={qps_str}",
                         s["avg_latency_s"], _fmt(s)))
+        if label == "qps_inf":
+            # dispatch model of the batch-native hot path: 1 fused program
+            # per speculation batch, 1 fused ingest scan per chunk
+            c = probe.counts()
+            spec_per_batch = c.get("speculate_batch", 0) / max(
+                s["spec_batches"], 1)
+            ingest_per_full = c.get("cache_update_batched", 0) / max(
+                s["full_batches"], 1)
+            rows.append(row(
+                "sched/dispatches", 0.0,
+                f"spec_per_batch={spec_per_batch:.2f};"
+                f"ingest_per_full_batch={ingest_per_full:.2f};"
+                f"total={sum(c.values())}"))
 
     # single-flight sharing ablation at full saturation
     no_share = ContinuousBatchingScheduler(
@@ -79,6 +103,26 @@ def run():
         index=sched.index)
     s0 = no_share.serve(qs, None, seed=0).summary()
     rows.append(row("sched/qps_inf_no_share", s0["avg_latency_s"], _fmt(s0)))
+
+    # backend × speculation-batch-size sweep at saturation (the Pallas
+    # backend joins on TPU; on CPU it would run the kernels in interpret
+    # mode, which retrieval_roofline.sweep_backends measures instead)
+    backends = ["xla"] + (["pallas"] if jax.default_backend() == "tpu"
+                          else [])
+    for backend in backends:
+        for b in (8, 32):
+            if backend == default_backend() and b == sc.max_spec_batch:
+                s_b = sat        # already measured above (backend=None ->
+                                 # default_backend(), same compiled path)
+            else:
+                swp = ContinuousBatchingScheduler(
+                    svc, cfg, SchedulerConfig(
+                        max_spec_batch=b, full_batch=16,
+                        full_max_wait_s=0.05, backend=backend),
+                    index=sched.index)
+                s_b = swp.serve(qs, None, seed=0).summary()
+            rows.append(row(f"sched/backend={backend}/B={b}",
+                            s_b["avg_latency_s"], _fmt(s_b)))
 
     # acceptance verdicts (issue: scheduler beats sequential throughput at
     # saturating QPS, DAR within 2 points of the micro-batch engine, and

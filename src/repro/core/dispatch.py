@@ -1,0 +1,61 @@
+"""Host→device dispatch accounting for the serving hot path.
+
+A *dispatch* is one host-side invocation of a jitted program (one XLA
+executable launch): the unit the batch-native refactor optimizes, since a
+speculation batch that costs O(B) dispatches is dominated by host↔device
+round-trips long before it is bandwidth-bound.  Every public entry point in
+``core/has.py`` records itself here, so benchmarks can assert the dispatch
+model (e.g. "one ``speculate_batch`` call == one dispatch regardless of B")
+instead of inferring it from wall-clock.
+
+The probe is a process-global counter keyed by entry-point name; recording
+is a dict increment (no device sync, no tracing interaction — wrappers
+record *outside* the jitted callables, so nothing is counted at trace time).
+
+Usage::
+
+    from repro.core import dispatch
+    with dispatch.capture() as probe:
+        speculate_batch(cfg, state, index, q)     # [B, d]
+    assert probe.total() == 1
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+from typing import Iterator
+
+_counts: collections.Counter = collections.Counter()
+
+
+def record(name: str) -> None:
+    """Count one device dispatch attributed to entry point ``name``."""
+    _counts[name] += 1
+
+
+def counts() -> dict[str, int]:
+    return dict(_counts)
+
+
+def reset() -> None:
+    _counts.clear()
+
+
+class Capture:
+    """Dispatch counts scoped to a ``with dispatch.capture()`` block."""
+
+    def __init__(self, baseline: dict[str, int]):
+        self._baseline = baseline
+
+    def counts(self) -> dict[str, int]:
+        return {k: v - self._baseline.get(k, 0)
+                for k, v in _counts.items()
+                if v - self._baseline.get(k, 0) > 0}
+
+    def total(self) -> int:
+        return sum(self.counts().values())
+
+
+@contextlib.contextmanager
+def capture() -> Iterator[Capture]:
+    yield Capture(dict(_counts))

@@ -8,11 +8,45 @@ All state lives in fixed-shape JAX arrays so every step jits:
   * fuzzy channel C_f = an aggressively configured IVFIndex (see
     retrieval/ivf.py), optionally subset-compressed (Table VII).
 
-``speculate`` performs: two-channel top-k -> rerank/merge -> draft ->
-homology validation (reidentify).  ``cache_update`` inserts the fallback
-full-retrieval result.  The host-side serving loop (serving/engine.py)
-sequences these per query exactly as Algorithm 1; the batched variant
-processes micro-batches against a cache snapshot.
+Entry points (each records itself on :mod:`repro.core.dispatch` so the
+serving layers' dispatch-count model is measurable, one record == one
+host→device program launch):
+
+``speculate``
+    One speculative retrieval for a single query [d]: two-channel top-k ->
+    rerank/merge -> draft -> homology validation (Algorithm 1 lines 1–14).
+``speculate_batch``
+    The batch-native hot path: [B, d] queries through ONE jitted program
+    behind a ``backend="pallas" | "xla"`` switch.
+
+    * ``backend="xla"`` is the reference oracle (and the CPU default): a
+      dense [B, Dc] cache-channel score matrix plus the jnp IVF search,
+      whose bucket gather materializes [B, nprobe, cap, d] in HBM.
+    * ``backend="pallas"`` dispatches the cache channel to the streaming
+      ``topk_search`` kernel (the doc store never leaves VMEM tiles), the
+      fuzzy channel to the scalar-prefetch ``ivf_scan`` kernel (centroid
+      top-nprobe on the MXU, buckets DMA'd per grid step with no HBM
+      materialization), and validation to the ``homology_score`` kernel.
+      On CPU the kernels run in interpret mode (``interpret=None`` picks
+      per platform), numerically identical to the TPU path.
+
+    Dedup-merge, rerank and validation are fused into the same jitted
+    program, so a batch of B queries costs exactly one device dispatch
+    instead of the O(B) launches of per-query serving.
+``speculate_batched``
+    Legacy ``vmap(speculate)`` lifting, kept as a second oracle for the
+    batch path (same numerics as ``backend="xla"``).
+``cache_update``
+    Insert one fallback full-retrieval result (Algorithm 1 line 16).
+``cache_update_batched``
+    Fold a whole full-retrieval batch (leaders + follower attribution from
+    ``intra_batch_share``) into ``HasState`` with one donated-buffer
+    ``lax.scan`` — exactly equivalent to a sequential fold of
+    ``cache_update`` over the unmasked rows, in one dispatch.
+
+The host-side serving loop (serving/engine.py) sequences these per query
+exactly as Algorithm 1; serving/batched.py and serving/scheduler.py drive
+the batch-native entry points.
 """
 from __future__ import annotations
 
@@ -22,7 +56,9 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import dispatch
 from repro.core.homology import (homology_scores, homology_scores_batched,
                                  reidentify)
 from repro.retrieval.ivf import IVFIndex, ivf_search
@@ -77,6 +113,11 @@ def init_has_state(cfg: HasConfig, dtype=jnp.float32) -> HasState:
     )
 
 
+def default_backend() -> str:
+    """Pallas kernels on TPU, the XLA oracle elsewhere (CPU containers)."""
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
 # ---------------------------------------------------------------------------
 # Two-channel fast retrieval + homology validation
 # ---------------------------------------------------------------------------
@@ -88,17 +129,14 @@ def _dedup_merge(s_a, i_a, s_b, i_b, k):
     s = jnp.concatenate([s_a, s_b])
     i = jnp.concatenate([i_a, i_b])
     ts, t = jax.lax.top_k(s, k)
-    return ts, i[t]
+    # a dup-masked (or bucket-starved) entry carries -inf but may retain a
+    # stale positive doc id; normalize so validation never counts phantom
+    # overlaps against the query cache
+    return ts, jnp.where(jnp.isfinite(ts), i[t], -1)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def speculate(cfg: HasConfig, state: HasState, index: IVFIndex,
-              q_emb: jax.Array):
-    """One speculative retrieval (Algorithm 1 lines 1–14) for query q [d].
-
-    Returns dict with draft ids/scores, accept flag, best homology score and
-    matched cache slot.
-    """
+def _speculate_impl(cfg: HasConfig, state: HasState, index: IVFIndex,
+                    q_emb: jax.Array):
     q = q_emb[None, :]                                       # [1, d]
 
     # cache channel: flat exact top-k over the doc store
@@ -126,9 +164,110 @@ def speculate(cfg: HasConfig, state: HasState, index: IVFIndex,
             "homology": best, "matched_slot": slot}
 
 
-speculate_batched = jax.jit(
-    jax.vmap(speculate, in_axes=(None, None, None, 0)),
+_speculate_jit = functools.partial(jax.jit, static_argnames=("cfg",))(
+    _speculate_impl)
+
+_speculate_batched_jit = jax.jit(
+    jax.vmap(_speculate_impl, in_axes=(None, None, None, 0)),
     static_argnames=("cfg",))
+
+
+def speculate(cfg: HasConfig, state: HasState, index: IVFIndex,
+              q_emb: jax.Array):
+    """One speculative retrieval (Algorithm 1 lines 1–14) for query q [d].
+
+    Returns dict with draft ids/scores, accept flag, best homology score and
+    matched cache slot.
+    """
+    dispatch.record("speculate")
+    return _speculate_jit(cfg, state, index, q_emb)
+
+
+def speculate_batched(cfg: HasConfig, state: HasState, index: IVFIndex,
+                      q_embs: jax.Array):
+    """Legacy vmap lifting of :func:`speculate` over [B, d] queries."""
+    dispatch.record("speculate_batched")
+    return _speculate_batched_jit(cfg, state, index, q_embs)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "backend", "interpret", "tile_c"))
+def _speculate_batch_impl(cfg: HasConfig, state: HasState, index: IVFIndex,
+                          q_embs: jax.Array, backend: str, interpret: bool,
+                          tile_c: int):
+    nprobe = min(cfg.nprobe, index.n_buckets)
+
+    if backend == "pallas":
+        from repro.kernels.homology_score import homology_score
+        from repro.kernels.ivf_scan import ivf_scan
+        from repro.kernels.topk_search import topk_search
+
+        # cache channel: streaming tiled top-k, doc store stays in VMEM
+        s_c, slots = topk_search(q_embs, state.doc_emb, cfg.k,
+                                 tile_c=tile_c, valid=state.doc_ids >= 0,
+                                 interpret=interpret)
+        i_c = jnp.where(jnp.isfinite(s_c),
+                        state.doc_ids[jnp.maximum(slots, 0)], -1)
+
+        # fuzzy channel: centroid top-nprobe on the MXU, then the
+        # scalar-prefetch bucket scan (no [B, nprobe, cap, d] gather)
+        cscores = q_embs @ index.centroids.T                 # [B, C]
+        _, probe = jax.lax.top_k(cscores, nprobe)
+        s_f, i_f = ivf_scan(q_embs, probe.astype(jnp.int32),
+                            index.bucket_vecs, index.bucket_ids, cfg.k,
+                            interpret=interpret)
+    elif backend == "xla":
+        # reference oracle: dense score matrix + materialized bucket gather
+        sc = q_embs @ state.doc_emb.T                        # [B, Dc]
+        sc = jnp.where(state.doc_ids[None, :] >= 0, sc, -jnp.inf)
+        s_c, slots = jax.lax.top_k(sc, cfg.k)
+        i_c = jnp.where(jnp.isfinite(s_c), state.doc_ids[slots], -1)
+        s_f, i_f = ivf_search(index, q_embs, nprobe=cfg.nprobe, k=cfg.k)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    merge = jax.vmap(
+        lambda sa, ia, sb, ib: _dedup_merge(sa, ia, sb, ib, cfg.k))
+    s_val, i_val = merge(s_c, i_c, s_f, i_f) \
+        if cfg.use_fuzzy_validation else (s_c, i_c)
+    s_out, i_out = merge(s_c, i_c, s_f, i_f) \
+        if cfg.use_fuzzy_enhancement else (s_c, i_c)
+
+    if backend == "pallas":
+        scores = homology_score(i_val, state.query_doc_ids,
+                                state.query_valid, interpret=interpret)
+    else:
+        scores = homology_scores_batched(i_val, state.query_doc_ids,
+                                         state.query_valid)
+    slot = jnp.argmax(scores, axis=1).astype(jnp.int32)      # [B]
+    best = jnp.take_along_axis(scores, slot[:, None], axis=1)[:, 0]
+    accept = best > jnp.float32(cfg.tau)
+
+    return {"draft_ids": i_out, "draft_scores": s_out,
+            "val_ids": i_val, "accept": accept,
+            "homology": best, "matched_slot": slot}
+
+
+def speculate_batch(cfg: HasConfig, state: HasState, index: IVFIndex,
+                    q_embs: jax.Array, backend: str | None = None,
+                    interpret: bool | None = None, tile_c: int = 1024):
+    """Batch-native speculation: [B, d] queries, one device dispatch.
+
+    ``backend=None`` auto-selects (:func:`default_backend`): the Pallas
+    kernel pipeline on TPU, the XLA reference on CPU.  ``interpret=None``
+    runs the kernels in interpret mode off-TPU.  Returns the same dict as
+    :func:`speculate` with a leading batch axis on every entry.
+    """
+    if backend is None:
+        backend = default_backend()
+    if backend != "pallas":
+        interpret = False                  # irrelevant: one jit cache entry
+    elif interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    dispatch.record("speculate_batch")
+    return _speculate_batch_impl(cfg, state, index, q_embs,
+                                 backend=backend, interpret=interpret,
+                                 tile_c=tile_c)
 
 
 # ---------------------------------------------------------------------------
@@ -192,19 +331,23 @@ def intra_batch_share(val_ids: jax.Array, rejected: jax.Array,
 # Cache update on rejection (Algorithm 1 line 16)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnames=("state",))
-def cache_update(cfg: HasConfig, state: HasState, q_emb: jax.Array,
-                 full_ids: jax.Array, full_vecs: jax.Array) -> HasState:
-    """Insert (q, D_full) into P and the new docs into C_c (FIFO, dedup)."""
+def _cache_update_impl(cfg: HasConfig, state: HasState, q_emb: jax.Array,
+                       full_ids: jax.Array, full_vecs: jax.Array) -> HasState:
     h = cfg.h_max
     slot = state.q_ptr % h
     query_emb = state.query_emb.at[slot].set(q_emb)
     query_doc_ids = state.query_doc_ids.at[slot].set(full_ids)
     query_valid = state.query_valid.at[slot].set(True)
 
-    # doc dedup: only insert ids not already present
+    # doc dedup: only insert ids not already present in the store AND not
+    # duplicated earlier in this full result (first occurrence wins —
+    # in-batch duplicates must not burn extra ring slots)
     present = jnp.any(full_ids[:, None] == state.doc_ids[None, :], axis=1)
-    new = (~present) & (full_ids >= 0)
+    pos_in = jnp.arange(full_ids.shape[0])
+    dup_in_batch = jnp.any(
+        (full_ids[:, None] == full_ids[None, :])
+        & (pos_in[None, :] < pos_in[:, None]), axis=1)
+    new = (~present) & (~dup_in_batch) & (full_ids >= 0)
     # ring positions for the new docs
     offs = jnp.cumsum(new.astype(jnp.int32)) - 1
     pos = (state.d_ptr + offs) % state.doc_ids.shape[0]
@@ -218,9 +361,120 @@ def cache_update(cfg: HasConfig, state: HasState, q_emb: jax.Array,
                     doc_emb=doc_emb, doc_ids=doc_ids, d_ptr=d_ptr)
 
 
+_cache_update_jit = functools.partial(
+    jax.jit, static_argnames=("cfg",), donate_argnames=("state",))(
+        _cache_update_impl)
+
+
+def cache_update(cfg: HasConfig, state: HasState, q_emb: jax.Array,
+                 full_ids: jax.Array, full_vecs: jax.Array) -> HasState:
+    """Insert (q, D_full) into P and the new docs into C_c (FIFO, dedup)."""
+    dispatch.record("cache_update")
+    return _cache_update_jit(cfg, state, q_emb, full_ids, full_vecs)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnames=("state",))
+def _cache_update_batched_jit(cfg: HasConfig, state: HasState,
+                              q_embs: jax.Array, full_ids: jax.Array,
+                              full_vecs: jax.Array,
+                              mask: jax.Array) -> HasState:
+    def body(st, xs):
+        q, ids, vecs, on = xs
+        st = jax.lax.cond(
+            on, lambda s: _cache_update_impl(cfg, s, q, ids, vecs),
+            lambda s: s, st)
+        return st, None
+
+    state, _ = jax.lax.scan(body, state, (q_embs, full_ids, full_vecs, mask))
+    return state
+
+
+def cache_update_batched(cfg: HasConfig, state: HasState, q_embs: jax.Array,
+                         full_ids: jax.Array, full_vecs: jax.Array,
+                         mask: jax.Array | None = None) -> HasState:
+    """Fold a whole full-retrieval batch into the cache in ONE dispatch.
+
+    q_embs [B,d], full_ids [B,k], full_vecs [B,k,d]; ``mask [B]`` (optional)
+    marks real rows — padding rows (mask False) leave the state untouched,
+    so serving layers can reuse one compiled shape for variable-size ingest
+    batches.  Equivalent to folding :func:`cache_update` sequentially over
+    the unmasked rows (a donated-buffer ``lax.scan`` of the same body), but
+    costs one device dispatch instead of B.
+    """
+    if mask is None:
+        mask = jnp.ones((q_embs.shape[0],), bool)
+    dispatch.record("cache_update_batched")
+    return _cache_update_batched_jit(cfg, state, q_embs, full_ids,
+                                     full_vecs, mask)
+
+
+def cache_update_chunked(cfg: HasConfig, state: HasState, q_embs, full_ids,
+                         full_vecs=None, *, corpus=None,
+                         chunk: int) -> HasState:
+    """Fold N host-side update rows through ``cache_update_batched``.
+
+    The one pad-to-fixed-shape helper shared by every serving layer
+    (scheduler ingest, batched-engine reject ingest, warm-standby delta
+    replay): rows are chunked to ``chunk``, each chunk zero-padded and
+    masked so a single compiled shape serves any N.  ``q_embs [N, d]`` and
+    ``full_ids [N, k]`` are host arrays/lists; pass either ``full_vecs
+    [N, k, d]`` explicitly or a device ``corpus`` to gather them from by
+    id on device (one gather per chunk, no host round-trip).
+    """
+    q_embs = np.asarray(q_embs, np.float32)
+    full_ids = np.asarray(full_ids, np.int32)
+    n, k, d = len(q_embs), full_ids.shape[1], q_embs.shape[1]
+    if full_vecs is not None:
+        full_vecs = np.asarray(full_vecs, np.float32)
+    for i0 in range(0, n, chunk):
+        m = min(chunk, n - i0)
+        embs = np.zeros((chunk, d), np.float32)
+        ids = np.zeros((chunk, k), np.int32)
+        mask = np.zeros((chunk,), bool)
+        embs[:m] = q_embs[i0:i0 + m]
+        ids[:m] = full_ids[i0:i0 + m]
+        mask[:m] = True
+        ids_j = jnp.asarray(ids)
+        if full_vecs is None:
+            vecs = corpus[ids_j]
+        else:
+            vecs = np.zeros((chunk, k, d), np.float32)
+            vecs[:m] = full_vecs[i0:i0 + m]
+            vecs = jnp.asarray(vecs)
+        state = cache_update_batched(cfg, state, jnp.asarray(embs), ids_j,
+                                     vecs, jnp.asarray(mask))
+    return state
+
+
 def cache_memory_bytes(cfg: HasConfig) -> int:
     """Memory footprint of the cache (Table IX 'Mem' column)."""
     d = cfg.d
     per_query = d * 4 + cfg.k * 4 + 1
     per_doc = d * 4 + 4
     return cfg.h_max * per_query + cfg.doc_cap * per_doc
+
+
+def speculation_bytes_moved(cfg: HasConfig, n_buckets: int, bucket_cap: int,
+                            b: int, backend: str) -> int:
+    """Analytic HBM traffic estimate for one ``speculate_batch`` call.
+
+    Shared terms: the centroid matmul reads [C, d] once and validation reads
+    the [H, k] id table once.  The backends differ on the two channels:
+
+    * ``xla``   — the cache channel writes+reads a dense [B, Dc] score
+      matrix on top of the doc-store stream, and the fuzzy channel's bucket
+      gather materializes [B, nprobe, cap, d] in HBM (write + re-read for
+      scoring), tripling bucket traffic.
+    * ``pallas`` — the doc store streams through VMEM tiles once regardless
+      of B, and each probed bucket is DMA'd and scored in place (read once).
+    """
+    d, k = cfg.d, cfg.k
+    nprobe = min(cfg.nprobe, n_buckets)
+    common = n_buckets * d * 4 + cfg.h_max * k * 4
+    doc_stream = cfg.doc_cap * d * 4
+    bucket_read = b * nprobe * bucket_cap * d * 4
+    if backend == "pallas":
+        return common + doc_stream + bucket_read
+    score_mat = 2 * b * cfg.doc_cap * 4          # write + re-read
+    return common + doc_stream + score_mat + 3 * bucket_read

@@ -20,10 +20,11 @@ def auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def topk_search(queries, corpus, k, tile_c: int = 1024, interpret=None):
+def topk_search(queries, corpus, k, tile_c: int = 1024, valid=None,
+                interpret=None):
     if interpret is None:
         interpret = auto_interpret()
-    return _topk_search(queries, corpus, k, tile_c=tile_c,
+    return _topk_search(queries, corpus, k, tile_c=tile_c, valid=valid,
                         interpret=interpret)
 
 

@@ -22,8 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _topk_kernel(q_ref, c_ref, vals_ref, idx_ref, *, k: int, tile_c: int,
-                 n_corpus: int):
+def _topk_kernel(q_ref, c_ref, valid_ref, vals_ref, idx_ref, *, k: int,
+                 tile_c: int, n_corpus: int):
     step = pl.program_id(0)
     b = q_ref.shape[0]
 
@@ -34,13 +34,16 @@ def _topk_kernel(q_ref, c_ref, vals_ref, idx_ref, *, k: int, tile_c: int,
 
     q = q_ref[...].astype(jnp.float32)
     c = c_ref[...].astype(jnp.float32)
+    valid = valid_ref[...]                                # [TILE_C]
     scores = jax.lax.dot_general(
         q, c, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)               # [B, TILE_C]
     base = step * tile_c
     col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
-    # mask the tail tile's out-of-range columns
-    scores = jnp.where(base + col < n_corpus, scores, -jnp.inf)
+    # mask the tail tile's out-of-range columns and invalid corpus rows
+    # (empty doc-store ring slots when scanning a HaS cache channel)
+    scores = jnp.where((base + col < n_corpus) & valid[None, :],
+                       scores, -jnp.inf)
     kcol = jax.lax.broadcasted_iota(jnp.int32, (b, k), 1)
 
     def merge(i, carry):
@@ -64,15 +67,24 @@ def _topk_kernel(q_ref, c_ref, vals_ref, idx_ref, *, k: int, tile_c: int,
 
 @functools.partial(jax.jit, static_argnames=("k", "tile_c", "interpret"))
 def topk_search(queries: jax.Array, corpus: jax.Array, k: int,
-                tile_c: int = 1024, interpret: bool = False):
-    """queries [B,d], corpus [N,d] -> (vals [B,k] desc-sorted, idx [B,k])."""
+                tile_c: int = 1024, valid: jax.Array | None = None,
+                interpret: bool = False):
+    """queries [B,d], corpus [N,d] -> (vals [B,k] desc-sorted, idx [B,k]).
+
+    ``valid`` ([N] bool, optional) masks corpus rows out of the result —
+    used by the HaS cache channel, whose doc-store ring contains empty
+    slots (doc_ids < 0) that must never win a top-k position.
+    """
     n, d = corpus.shape
     b = queries.shape[0]
+    if valid is None:
+        valid = jnp.ones((n,), bool)
     n_tiles = pl.cdiv(n, tile_c)
     pad = n_tiles * tile_c - n
     if pad:
         corpus = jnp.concatenate(
             [corpus, jnp.zeros((pad, d), corpus.dtype)], axis=0)
+        valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
 
     vals, idx = pl.pallas_call(
         functools.partial(_topk_kernel, k=k, tile_c=tile_c, n_corpus=n),
@@ -80,6 +92,7 @@ def topk_search(queries: jax.Array, corpus: jax.Array, k: int,
         in_specs=[
             pl.BlockSpec((b, d), lambda i: (0, 0)),        # queries resident
             pl.BlockSpec((tile_c, d), lambda i: (i, 0)),   # corpus stream
+            pl.BlockSpec((tile_c,), lambda i: (i,)),       # validity stream
         ],
         out_specs=[
             pl.BlockSpec((b, k), lambda i: (0, 0)),        # running top-k
@@ -88,7 +101,7 @@ def topk_search(queries: jax.Array, corpus: jax.Array, k: int,
         out_shape=[jax.ShapeDtypeStruct((b, k), jnp.float32),
                    jax.ShapeDtypeStruct((b, k), jnp.int32)],
         interpret=interpret,
-    )(queries, corpus)
+    )(queries, corpus, valid)
     # final K-element sort outside the kernel
     order = jnp.argsort(-vals, axis=1)
     return jnp.take_along_axis(vals, order, axis=1), \

@@ -4,15 +4,19 @@ Algorithm 1 is sequential (each query can hit the cache updated by the
 previous one).  At production load the engine instead processes micro-batches
 against a cache snapshot:
 
-  1. ``speculate_batched`` scores the whole micro-batch on device;
+  1. ``speculate_batch`` scores the whole micro-batch in ONE fused device
+     dispatch (Pallas kernel pipeline on TPU, XLA oracle on CPU);
   2. rejected queries are compacted into a padded sub-batch and sent through
      ONE batched full-database search (the continuous-batching analogue);
-  3. the cache ingests all rejected results, then the next micro-batch runs.
+  3. ``cache_update_batched`` folds every rejected result into the cache in
+     one donated-buffer scan, then the next micro-batch runs.
 
 Semantics vs. the sequential engine: intra-batch queries cannot re-identify
 each other (the cache is a snapshot), so DAR is a lower bound that converges
 to the sequential engine's as batch_size/stream_length -> 0.  Latency per
-query improves by amortizing dispatch + the full-search matmul batch.
+query improves by amortizing dispatch + the full-search matmul batch; the
+whole step is three device dispatches (speculate / full search / ingest)
+regardless of batch width.
 
 The engine rides the shared :class:`~repro.serving.engine.ServeLoop`
 substrate: it only implements ``_step_batch``; metrics recording and rng
@@ -28,8 +32,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.has import (HasConfig, cache_update, init_has_state,
-                            speculate_batched)
+from repro.core.has import (HasConfig, cache_update_batched,
+                            cache_update_chunked, init_has_state,
+                            speculate_batch)
 from repro.retrieval.ivf import build_ivf
 from repro.serving.engine import (RetrievalService, ServeLoop,
                                   full_batch_searcher, fuzzy_scope)
@@ -37,19 +42,28 @@ from repro.serving.engine import (RetrievalService, ServeLoop,
 
 class BatchedHasEngine(ServeLoop):
     def __init__(self, service: RetrievalService, cfg: HasConfig | None = None,
-                 batch_size: int = 32, seed: int = 0):
+                 batch_size: int = 32, seed: int = 0,
+                 backend: str | None = None):
         super().__init__(service)
         self.cfg = cfg or HasConfig(k=service.k, d=service.world.cfg.d)
         self.state = init_has_state(self.cfg)
         self.index = build_ivf(service.corpus, self.cfg.n_buckets, seed=seed)
         self.batch_size = batch_size
+        self.backend = backend                  # None -> auto per platform
         self.fuzzy_scope = fuzzy_scope(self.cfg, self.index)
         self._full_batch = full_batch_searcher(service.corpus, self.cfg.k)
-        # warmup
+        # warmup the fused programs at the shapes the loop uses
         z = jnp.zeros((batch_size, self.s.world.cfg.d))
         jax.block_until_ready(
-            speculate_batched(self.cfg, self.state, self.index, z))
+            speculate_batch(self.cfg, self.state, self.index, z,
+                            backend=backend))
         self._full_batch(self.s.corpus, z)[0].block_until_ready()
+        scratch = init_has_state(self.cfg)      # donated, then discarded
+        jax.block_until_ready(cache_update_batched(
+            self.cfg, scratch, z,
+            jnp.zeros((batch_size, self.cfg.k), jnp.int32),
+            jnp.zeros((batch_size, self.cfg.k, self.s.world.cfg.d)),
+            jnp.zeros((batch_size,), bool)).q_ptr)
 
     def _step_batch(self, group, rng, dataset):
         lat_model = self.s.latency
@@ -59,8 +73,8 @@ class BatchedHasEngine(ServeLoop):
             pad = np.zeros((bs - len(group), embs.shape[1]), np.float32)
             embs = np.concatenate([embs, pad])
         t0 = time.perf_counter()
-        out = speculate_batched(self.cfg, self.state, self.index,
-                                jnp.asarray(embs))
+        out = speculate_batch(self.cfg, self.state, self.index,
+                              jnp.asarray(embs), backend=self.backend)
         jax.block_until_ready(out)
         t_spec = (time.perf_counter() - t0) / max(len(group), 1)
         accepts = np.asarray(out["accept"])[:len(group)]
@@ -74,11 +88,11 @@ class BatchedHasEngine(ServeLoop):
             _, ids_full = self._full_batch(self.s.corpus, sub)
             ids_full = np.asarray(ids_full)
             t_full = lat_model.full_scan_time()       # amortized batch scan
-            for j, qi in enumerate(rej):
-                ids = ids_full[j].astype(np.int32)
-                self.state = cache_update(
-                    self.cfg, self.state, jnp.asarray(embs[qi]),
-                    jnp.asarray(ids), self.s.corpus[ids])
+            # fold the whole rejected batch into the cache in ONE dispatch
+            # (padded to the compiled batch_size shape; mask drops the pad)
+            self.state = cache_update_chunked(
+                self.cfg, self.state, embs[rej], ids_full.astype(np.int32),
+                corpus=self.s.corpus, chunk=bs)
 
         fuzzy_t = lat_model.scan_time(
             lat_model.target_corpus * self.fuzzy_scope * 2.0)

@@ -33,7 +33,8 @@ from repro.core.baselines import (CRAGEvaluator, ReuseState, init_reuse_state,
                                   mincache_match, minhash_signature,
                                   proximity_match, reuse_insert,
                                   saferadius_match)
-from repro.core.has import HasConfig, cache_update, init_has_state, speculate
+from repro.core.has import (HasConfig, cache_update, init_has_state,
+                            speculate_batch)
 from repro.data.synthetic import SyntheticWorld, simulate_response_accuracy
 from repro.retrieval.flat import chunked_flat_search, quantize_store, quantized_search
 from repro.retrieval.ivf import (IVFIndex, build_ivf, ivf_search,
@@ -257,17 +258,20 @@ class HasEngine(ServeLoop):
 
     def __init__(self, service: RetrievalService, cfg: HasConfig | None = None,
                  fallback: ANNSEngine | None = None,
-                 fuzzy_fraction: float = 1.0, seed: int = 0):
+                 fuzzy_fraction: float = 1.0, seed: int = 0,
+                 backend: str | None = None):
         super().__init__(service)
         self.cfg = cfg or HasConfig(k=service.k, d=service.world.cfg.d)
         self.state = init_has_state(self.cfg)
         index = build_ivf(service.corpus, self.cfg.n_buckets, seed=seed)
         self.index = subset_index(index, fuzzy_fraction)
         self.fallback = fallback
+        self.backend = backend                  # None -> auto per platform
         self.fuzzy_scope = (self.cfg.nprobe / self.cfg.n_buckets) * fuzzy_fraction
-        # warmup both jitted paths
-        z = jnp.zeros((self.s.world.cfg.d,))
-        out = speculate(self.cfg, self.state, self.index, z)
+        # warmup the fused speculation program at the sequential shape B=1
+        z = jnp.zeros((1, self.s.world.cfg.d))
+        out = speculate_batch(self.cfg, self.state, self.index, z,
+                              backend=backend)
         jax.block_until_ready(out)
 
     def _fuzzy_time(self) -> float:
@@ -280,14 +284,16 @@ class HasEngine(ServeLoop):
         """Returns (ids, accept, latency_s, homology)."""
         lat = self.s.latency.sample_edge()
         t0 = time.perf_counter()
-        out = speculate(self.cfg, self.state, self.index, jnp.asarray(q_emb))
+        out = speculate_batch(self.cfg, self.state, self.index,
+                              jnp.asarray(q_emb)[None], backend=self.backend)
         jax.block_until_ready(out)
         # measured edge compute (cache channel + validation at true scale)
         # + analytic fuzzy scan extrapolated to the target corpus
         lat += (time.perf_counter() - t0) + self._fuzzy_time()
-        accept = bool(out["accept"])
+        accept = bool(out["accept"][0])
         if accept:
-            return np.asarray(out["draft_ids"]), True, lat, float(out["homology"])
+            return np.asarray(out["draft_ids"][0]), True, lat, \
+                float(out["homology"][0])
         # fallback: full database (cloud) or optimized ANNS (♦)
         if self.fallback is not None:
             ids, t = self.fallback.search(q_emb)
@@ -302,7 +308,7 @@ class HasEngine(ServeLoop):
                                   jnp.asarray(vecs))
         jax.block_until_ready(self.state.q_ptr)
         lat += time.perf_counter() - t0
-        return ids, False, lat, float(out["homology"])
+        return ids, False, lat, float(out["homology"][0])
 
     def _step(self, q, rng, dataset):
         ids, accept, lat, _ = self.step(q["emb"])
@@ -365,11 +371,12 @@ class CRAGEngine(HasEngine):
     def _step(self, q, rng, dataset):
         lat = self.s.latency.sample_edge()
         t0 = time.perf_counter()
-        out = speculate(self.cfg, self.state, self.index,
-                        jnp.asarray(q["emb"]))
+        out = speculate_batch(self.cfg, self.state, self.index,
+                              jnp.asarray(q["emb"])[None],
+                              backend=self.backend)
         jax.block_until_ready(out)
         lat += (time.perf_counter() - t0) + self._fuzzy_time()
-        draft = np.asarray(out["draft_ids"])
+        draft = np.asarray(out["draft_ids"][0])
         golden = self.s.world.golden_mask(q["entity"], q["attr"], draft)
         lat += self.evaluator.latency_s              # LLM inference cost
         accept = self.evaluator.evaluate(rng, golden, dataset == "popqa")

@@ -25,7 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.core.has import HasConfig, HasState, cache_update, init_has_state
+from repro.core.has import (HasConfig, HasState, cache_update_chunked,
+                            init_has_state)
 
 
 def snapshot(mgr: CheckpointManager, step: int, state: HasState,
@@ -65,6 +66,7 @@ class WarmStandby:
     mgr: CheckpointManager
     snapshot_every: int = 500
     max_lag: int = 1000
+    replay_batch: int = 64         # delta entries folded per device dispatch
 
     def __post_init__(self):
         self.log: deque = deque(maxlen=self.max_lag)
@@ -84,11 +86,21 @@ class WarmStandby:
             self.log.clear()
 
     def failover(self) -> HasState:
-        """Rebuild the freshest possible state on the standby."""
+        """Rebuild the freshest possible state on the standby.
+
+        The delta log replays through ``cache_update_chunked`` — one fused
+        donated-buffer scan per ``replay_batch`` chunk (padded, masked)
+        instead of a per-entry dispatch loop, so recovery time is dominated
+        by the scan itself rather than host round-trips.
+        """
         out = restore(self.mgr, self.cfg)
         state = out[1] if out is not None else init_has_state(self.cfg)
-        for q_emb, ids, vecs in self.log:      # replay the delta log
-            state = cache_update(self.cfg, state, jnp.asarray(q_emb),
-                                 jnp.asarray(ids.astype(np.int32)),
-                                 jnp.asarray(vecs))
-        return state
+        log = list(self.log)
+        if not log:
+            return state
+        return cache_update_chunked(
+            self.cfg, state,
+            np.stack([q for q, _, _ in log]),
+            np.stack([ids for _, ids, _ in log]).astype(np.int32),
+            np.stack([vecs for _, _, vecs in log]),
+            chunk=self.replay_batch)

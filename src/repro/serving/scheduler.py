@@ -2,7 +2,9 @@
 
 Request lifecycle:
 
-    arrive -> admission queue -> batched ``speculate`` on the edge
+    arrive -> admission queue -> fused ``speculate_batch`` on the edge
+              (one device dispatch per speculation batch; Pallas kernel
+              pipeline on TPU, XLA oracle on CPU — see core/has.py)
            -> accepted: return early (queue wait + spec compute + edge RTT)
            -> rejected:
                 -> scored against every PENDING leader (queued or in-flight
@@ -16,8 +18,10 @@ Request lifecycle:
                    them; one ``reidentify`` on the already-computed
                    validation draft, no fuzzy scan), and the survivors are
                    coalesced into ONE batched cloud matmul
-                -> full results ingest into the cache, leaders and their
-                   followers return
+                -> full results (leaders + follower attribution) ingest into
+                   the cache via ``cache_update_batched`` — one fused
+                   donated-buffer scan per ``ingest_batch`` chunk instead of
+                   a per-request dispatch loop — and everyone returns
 
 The edge (speculation) and the cloud (full retrieval) are independent
 resources, so speculation of later admissions overlaps in-flight full
@@ -48,8 +52,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.has import (HasConfig, cache_update, init_has_state,
-                            intra_batch_share, speculate_batched)
+from repro.core.has import (HasConfig, cache_update_batched,
+                            cache_update_chunked, init_has_state,
+                            intra_batch_share, speculate_batch)
 from repro.core.homology import reidentify
 from repro.retrieval.ivf import build_ivf
 from repro.serving.engine import (LLMS, RetrievalService, ServeResult,
@@ -75,6 +80,8 @@ class SchedulerConfig:
     max_pending_leaders: int = 256  # sharing registry capacity (fixed shape)
     revalidate: bool = True        # re-check leaders at cloud-dispatch time
     ingest_followers: bool = True  # followers' (q, shared D_full) also cached
+    ingest_batch: int = 32         # fused cache-ingest chunk (compiled shape)
+    backend: str | None = None     # speculation backend; None -> platform auto
 
 
 @dataclasses.dataclass
@@ -154,10 +161,21 @@ class ContinuousBatchingScheduler:
         # against the updated query cache (no fuzzy scan needed)
         self._revalidate = jax.jit(jax.vmap(
             reidentify, in_axes=(0, None, None, None)))
-        # warmup the device shapes used by the loop
+        # warmup: pre-compile the fused programs at BOTH device shapes the
+        # loop uses — the [max_spec_batch, d] speculation program and the
+        # [ingest_batch, ...] fused cache ingest — plus the full-search and
+        # re-validation programs, so first-request latency is never billed
+        # to compilation
         sc, d, k = self.sched, service.world.cfg.d, self.cfg.k
-        jax.block_until_ready(speculate_batched(
-            self.cfg, self.state, self.index, jnp.zeros((sc.max_spec_batch, d))))
+        jax.block_until_ready(speculate_batch(
+            self.cfg, self.state, self.index,
+            jnp.zeros((sc.max_spec_batch, d)), backend=sc.backend))
+        scratch = init_has_state(self.cfg)      # donated, then discarded
+        jax.block_until_ready(cache_update_batched(
+            self.cfg, scratch, jnp.zeros((sc.ingest_batch, d)),
+            jnp.zeros((sc.ingest_batch, k), jnp.int32),
+            jnp.zeros((sc.ingest_batch, k, d)),
+            jnp.zeros((sc.ingest_batch,), bool)).q_ptr)
         self._full_batch(self.s.corpus,
                          jnp.zeros((sc.full_batch, d)))[0].block_until_ready()
         jax.block_until_ready(self._revalidate(
@@ -182,6 +200,25 @@ class ContinuousBatchingScheduler:
 
     def _full_time(self) -> float:
         return self.s.latency.full_scan_time()
+
+    # -- fused cache ingest ------------------------------------------------
+
+    def _ingest(self, batch):
+        """Fold a completed full-retrieval batch (leaders followed by their
+        followers, i.e. the attribution computed by ``intra_batch_share``)
+        into the cache via ``cache_update_chunked`` — one device dispatch
+        per ``ingest_batch`` chunk instead of one per request.  Row order
+        matches the old per-request loop, so the final state is identical."""
+        rows = []
+        for r in batch:
+            rows.append(r)
+            if self.sched.ingest_followers:
+                rows.extend(r.followers)
+        self.state = cache_update_chunked(
+            self.cfg, self.state,
+            np.stack([r.q["emb"] for r in rows]),
+            np.stack([r.ids for r in rows]),
+            corpus=self.s.corpus, chunk=self.sched.ingest_batch)
 
     # -- event loop --------------------------------------------------------
 
@@ -283,8 +320,8 @@ class ContinuousBatchingScheduler:
             for j, r in enumerate(batch):
                 embs[j] = r.q["emb"]
                 r.edge_rtt = rtt_rng.uniform(*lat.edge_rtt)
-            out = speculate_batched(self.cfg, self.state, self.index,
-                                    jnp.asarray(embs))
+            out = speculate_batch(self.cfg, self.state, self.index,
+                                  jnp.asarray(embs), backend=sc.backend)
             accepts = np.asarray(out["accept"])
             drafts = np.asarray(out["draft_ids"])
             val_ids = np.asarray(out["val_ids"])
@@ -388,16 +425,7 @@ class ContinuousBatchingScheduler:
                         f.ids, f.channel = r.ids, "shared"
                         f.cloud_s = cloud
                         f.t_done = t + f.edge_rtt
-                for j, r in enumerate(batch):
-                    self.state = cache_update(
-                        self.cfg, self.state, jnp.asarray(r.q["emb"]),
-                        jnp.asarray(r.ids), self.s.corpus[jnp.asarray(r.ids)])
-                    if sc.ingest_followers:
-                        for f in r.followers:
-                            self.state = cache_update(
-                                self.cfg, self.state,
-                                jnp.asarray(f.q["emb"]), jnp.asarray(f.ids),
-                                self.s.corpus[jnp.asarray(f.ids)])
+                self._ingest(batch)
                 try_full(t)
             else:                                  # _FULL_TIMER
                 timer_armed = False
@@ -419,3 +447,7 @@ class ContinuousBatchingScheduler:
             channels=np.array([r.channel for r in reqs]),
             full_retrievals=full_retrievals,
             spec_batches=spec_batches, full_batches=full_batches)
+
+
+# canonical name for the continuous-batching HaS scheduler
+HasScheduler = ContinuousBatchingScheduler
