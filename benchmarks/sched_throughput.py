@@ -19,19 +19,39 @@ the snapshot ``BatchedHasEngine`` on the same zipf (homology-heavy) stream:
     on TPU; on CPU it runs in interpret mode and is benchmarked by
     ``retrieval_roofline.sweep_backends`` instead).
 
+Two opt-in sweeps ride along (see --help):
+
+  * ``--sweep-backend-shards`` — the cloud stage as a WORKER POOL over the
+    pluggable retrieval backend (retrieval/service.py): full-retrieval
+    throughput vs ``backend.n_workers`` (1→4 mesh-sharded workers at fixed
+    DAR, on a scattered low-homology stream where the full stage is the
+    bottleneck).  The pool replaces the deprecated serialized
+    ``SchedulerConfig.max_inflight_full`` scalar.
+  * ``--sweep-share-tau`` — calibration of the sharing threshold
+    (``share_tau``) across multipliers of the validation tau: follower
+    doc-hit degradation vs latency/full-retrieval savings; the sweep sets
+    ``repro.serving.scheduler.DEFAULT_SHARE_TAU_MULT``.
+
 Run standalone:  PYTHONPATH=src python -m benchmarks.sched_throughput
 """
 from __future__ import annotations
 
+import argparse
+
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import N_QUERIES, get_queries, get_service, has_config, row
+from benchmarks.common import (N_QUERIES, get_queries, get_service,
+                               has_config, row)
 from repro.core import dispatch
 from repro.core.has import default_backend
+from repro.retrieval.service import RetrievalService, ShardedMeshBackend
 from repro.serving.batched import BatchedHasEngine
 from repro.serving.engine import HasEngine
-from repro.serving.scheduler import (ContinuousBatchingScheduler,
+from repro.serving.latency import LatencyModel
+from repro.serving.scheduler import (DEFAULT_SHARE_TAU_MULT,
+                                     ContinuousBatchingScheduler,
                                      SchedulerConfig, poisson_arrivals)
 
 
@@ -142,6 +162,151 @@ def run():
     return rows
 
 
+def sweep_backend_shards():
+    """Cloud-stage worker pool: full-retrieval throughput vs backend workers.
+
+    Saturated load on a scattered (squad-like) stream — near-zero homology,
+    so nearly every query pays a full retrieval and the cloud stage is the
+    bottleneck whose scaling the sweep isolates.  The flat backend is the
+    serialized baseline (1 worker, the old ``max_inflight_full=1``
+    behavior); the sharded backend adds mesh workers 1→4 at 4 corpus
+    shards.  Full-stage throughput = paid full retrievals / makespan.
+    """
+    rows = []
+    base = get_service()
+    world = base.world
+    n = min(N_QUERIES, 1500)
+    # entity-unique scattered stream: no query re-encounters an earlier
+    # query's entity, so acceptance cannot depend on WHEN full results
+    # ingest -> DAR is pinned across worker counts and nearly every query
+    # pays a full retrieval (the stage whose scaling the sweep isolates)
+    pool = world.sample_queries(4 * n, pattern="scattered",
+                                p_uncovered=0.9, seed=2)
+    seen, qs = set(), []
+    for q in pool:
+        if q["entity"] not in seen:
+            seen.add(q["entity"])
+            qs.append(q)
+        if len(qs) == n:
+            break
+    n = len(qs)
+    cfg = has_config(nprobe=1)          # thin edge: cloud stage dominates
+    corpus = jnp.asarray(world.doc_emb)
+
+    def one(label, backend_fn):
+        lat = LatencyModel()
+        svc = RetrievalService(world, lat, k=base.k, chunk=base.chunk,
+                               backend=backend_fn(lat))
+        # sharing/revalidation off: the sweep isolates the full stage (its
+        # work is then identical across worker counts; only overlap varies)
+        sched = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(
+            max_spec_batch=32, full_batch=8, full_max_wait_s=0.05,
+            share=False, revalidate=False))
+        r = sched.serve(qs, None, seed=0)
+        s = r.summary()
+        thr_full = s["full_retrievals"] / max(s["makespan_s"], 1e-9)
+        rows.append(row(
+            f"backshards/{label}", s["avg_latency_s"],
+            f"full_thr={thr_full:.2f}qps;dar={s['dar']:.4f};"
+            f"max_inflight={s['max_inflight_full_batches']};"
+            f"full={s['full_retrievals']};"
+            f"makespan={s['makespan_s']:.1f}s"))
+        return thr_full, s
+
+    one("flat/w=1", lambda lat: None)
+    thr, dar, infl = [], [], []
+    for w in (1, 2, 3, 4):
+        t, s = one(f"sharded4/w={w}",
+                   lambda lat, w=w: ShardedMeshBackend(
+                       corpus, base.k, lat, n_shards=4, n_workers=w))
+        thr.append(t)
+        dar.append(s["dar"])
+        infl.append(s["max_inflight_full_batches"])
+
+    # verdicts: the pool sustains >=2 concurrent full batches, full-stage
+    # throughput rises monotonically 1->4 workers, DAR stays unchanged
+    mono = all(b > a for a, b in zip(thr, thr[1:]))
+    rows.append(row(
+        "backshards/verdict_concurrency", 0.0,
+        f"{'PASS' if max(infl[1:]) >= 2 else 'FAIL'}"
+        f"(max_inflight@w2..4={infl[1:]})"))
+    rows.append(row(
+        "backshards/verdict_scaling", 0.0,
+        f"{'PASS' if mono and thr[-1] > 1.5 * thr[0] else 'FAIL'}"
+        f"(full_thr_w1..4={','.join(f'{t:.2f}' for t in thr)})"))
+    rows.append(row(
+        "backshards/verdict_dar_fixed", 0.0,
+        f"{'PASS' if max(dar) - min(dar) <= 0.02 else 'FAIL'}"
+        f"(dar_w1..4={','.join(f'{d:.4f}' for d in dar)})"))
+    return rows
+
+
+def sweep_share_tau():
+    """Sharing-threshold calibration: follower doc-hit degradation vs the
+    latency / full-retrieval savings across share_tau = mult * cfg.tau on
+    the homology-heavy granola stream at saturation.  The chosen default
+    (``DEFAULT_SHARE_TAU_MULT``) is the most aggressive (lowest, i.e.
+    cheapest-latency) multiplier whose follower channel stays within 10
+    doc-hit points of the full channel."""
+    rows = []
+    svc = get_service()
+    n = min(N_QUERIES, 1500)
+    qs = list(get_queries("granola", n=n))
+    cfg = has_config()
+    picked = None
+    for mult in (0.25, 0.5, 0.75, 1.0):
+        sched = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(
+            max_spec_batch=32, full_batch=16, full_max_wait_s=0.05,
+            share_tau=mult * cfg.tau))
+        r = sched.serve(qs, None, seed=0)
+        s = r.summary()
+        shared = r.channels == "shared"
+        full = r.channels == "full"
+        hit_sh = float(r.doc_hits[shared].mean()) if shared.any() else 1.0
+        hit_fl = float(r.doc_hits[full].mean()) if full.any() else 1.0
+        degr = hit_fl - hit_sh
+        rows.append(row(
+            f"sharetau/mult={mult}", s["avg_latency_s"],
+            f"shared={int(shared.sum())};follower_hit={hit_sh:.4f};"
+            f"full_hit={hit_fl:.4f};degr={degr:+.4f};"
+            f"full_retrievals={s['full_retrievals']};dar={s['dar']:.4f}"))
+        # multipliers sweep ascending: the first within the degradation
+        # bound is the most aggressive acceptable one (lower mult = more
+        # sharing = lower latency)
+        if picked is None and degr <= 0.10:
+            picked = mult
+    rows.append(row(
+        "sharetau/verdict_default", 0.0,
+        f"{'PASS' if picked == DEFAULT_SHARE_TAU_MULT else 'FAIL'}"
+        f"(sweep_pick={picked},default={DEFAULT_SHARE_TAU_MULT})"))
+    return rows
+
+
 if __name__ == "__main__":
     from benchmarks.common import fmt_rows
-    print(fmt_rows(run()))
+    ap = argparse.ArgumentParser(
+        description="Continuous-batching scheduler benchmarks.  The cloud "
+                    "stage is a worker pool sized by the retrieval "
+                    "backend's n_workers (retrieval/service.py); the old "
+                    "SchedulerConfig.max_inflight_full scalar is "
+                    "deprecated.")
+    ap.add_argument("--sweep-backend-shards", action="store_true",
+                    help="backend × worker sweep: full-retrieval throughput "
+                         "scaling with the cloud worker pool (1→4 "
+                         "mesh-sharded workers at fixed DAR)")
+    ap.add_argument("--sweep-share-tau", action="store_true",
+                    help="share_tau calibration: follower doc-hit "
+                         "degradation vs latency across tau multipliers; "
+                         "sets DEFAULT_SHARE_TAU_MULT")
+    ap.add_argument("--skip-base", action="store_true",
+                    help="run only the requested sweeps, not the base "
+                         "throughput/DAR/sharing verdicts")
+    args = ap.parse_args()
+    rows = []
+    if not args.skip_base:
+        rows += run()
+    if args.sweep_backend_shards:
+        rows += sweep_backend_shards()
+    if args.sweep_share_tau:
+        rows += sweep_share_tau()
+    print(fmt_rows(rows))

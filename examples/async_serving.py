@@ -1,13 +1,20 @@
 """Continuous-batching async serving demo: open-loop load on the scheduler.
 
-    PYTHONPATH=src python examples/async_serving.py [n_requests] [qps]
+    PYTHONPATH=src python examples/async_serving.py [n_requests] [qps] [backend]
 
 Requests arrive as a Poisson process; the event-driven scheduler
 (serving/scheduler.py) coalesces admissions into speculation batches on the
 edge, returns accepted drafts immediately, collapses homologous rejects
 into shared full retrievals (single-flight), late-revalidates queued
 rejects against the freshly ingested cache, and overlaps the cloud
-full-retrieval pipeline with ongoing edge speculation.  Compare against
+full-retrieval pipeline with ongoing edge speculation.
+
+The cloud stage is a WORKER POOL over the pluggable retrieval backend
+(retrieval/service.py) — ``backend.n_workers`` concurrent full-retrieval
+dispatches, not the old serialized ``max_inflight_full=1`` scalar (that
+config knob is deprecated; the backend sizes the pool).  Pass ``sharded``
+as the third argument to back the pool with 4 mesh-sharded workers and
+watch p95/p99 drop as full batches overlap.  Compare against
 ``examples/rag_serving.py`` which serves the same world strictly
 sequentially.
 """
@@ -17,6 +24,7 @@ import numpy as np
 
 from repro.core.has import HasConfig
 from repro.data.synthetic import DATASETS, SyntheticWorld, WorldConfig
+from repro.retrieval.service import ShardedMeshBackend
 from repro.serving.engine import HasEngine, RetrievalService
 from repro.serving.latency import LatencyModel
 from repro.serving.scheduler import (ContinuousBatchingScheduler,
@@ -26,9 +34,19 @@ from repro.serving.scheduler import (ContinuousBatchingScheduler,
 def main():
     n = int(sys.argv[1]) if len(sys.argv) > 1 else 600
     qps = float(sys.argv[2]) if len(sys.argv) > 2 else 25.0
+    backend_name = sys.argv[3] if len(sys.argv) > 3 else "flat"
 
     world = SyntheticWorld(WorldConfig(n_entities=5000, seed=0))
-    service = RetrievalService(world, LatencyModel(), k=10)
+    latency = LatencyModel()
+    backend = None                                  # default: flat, 1 worker
+    if backend_name == "sharded":
+        import jax.numpy as jnp
+        backend = ShardedMeshBackend(jnp.asarray(world.doc_emb), 10, latency,
+                                     n_shards=4, n_workers=4)
+    elif backend_name != "flat":
+        raise SystemExit(f"unknown backend {backend_name!r} "
+                         "(choices: flat, sharded)")
+    service = RetrievalService(world, latency, k=10, backend=backend)
     cfg = HasConfig(k=10, tau=0.2, h_max=4000, nprobe=8, n_buckets=512, d=64)
     ds = DATASETS["granola"]
     queries = world.sample_queries(n, pattern=ds["pattern"],
@@ -43,6 +61,9 @@ def main():
     s = res.summary()
 
     print(f"open-loop load          {qps:.1f} qps Poisson, {n} requests")
+    print(f"cloud worker pool       {backend_name} backend, "
+          f"{sched.n_full_workers} worker(s), peak concurrency "
+          f"{s['max_inflight_full_batches']:.0f}")
     print(f"completed throughput    {s['throughput_qps']:.2f} qps "
           f"(makespan {s['makespan_s']:.1f} s)")
     print(f"latency p50/p95/p99     {s['p50_latency_s'] * 1e3:.0f} / "

@@ -1,10 +1,19 @@
 """Serving driver: HaS speculative retrieval over a synthetic query stream.
 
   python -m repro.launch.serve --queries 2000 --dataset granola --tau 0.2
+
+Full-database retrieval is pluggable (``--retrieval-backend``, see
+retrieval/service.py): ``flat`` is the in-process exact scan, ``sharded``
+row-shards the corpus over ``--shards`` mesh workers
+(``LatencyModel.shard_scale`` speedup + ``--workers`` concurrent cloud
+dispatch slots for the scheduler's worker pool), ``replica`` routes through
+``--workers`` warm standbys whose delta logs are reconciled on every cache
+ingest.
 """
 from __future__ import annotations
 
 import argparse
+import tempfile
 
 
 def main() -> None:
@@ -15,6 +24,16 @@ def main() -> None:
     ap.add_argument("--engine", default="has",
                     choices=["has", "full", "proximity", "saferadius",
                              "mincache", "crag", "ivf", "scann"])
+    ap.add_argument("--retrieval-backend", default="flat",
+                    choices=["flat", "sharded", "replica"],
+                    help="full-retrieval backend (retrieval/service.py): "
+                         "in-process flat scan, mesh-sharded concurrent "
+                         "scan, or warm-standby replicas")
+    ap.add_argument("--shards", type=int, default=4,
+                    help="corpus shards for --retrieval-backend sharded")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="concurrent cloud dispatch slots (sharded) / "
+                         "standby replicas (replica)")
     ap.add_argument("--tau", type=float, default=0.2)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--h-max", type=int, default=5000)
@@ -22,8 +41,12 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    import jax.numpy as jnp
+
     from repro.core.has import HasConfig
     from repro.data.synthetic import DATASETS, SyntheticWorld, WorldConfig
+    from repro.retrieval.service import (LocalFlatBackend, ReplicaBackend,
+                                         ShardedMeshBackend)
     from repro.serving.engine import (ANNSEngine, CRAGEngine,
                                       FullRetrievalEngine, HasEngine,
                                       ReuseEngine, RetrievalService)
@@ -31,7 +54,27 @@ def main() -> None:
 
     world = SyntheticWorld(WorldConfig(n_entities=args.entities,
                                        seed=args.seed))
-    svc = RetrievalService(world, LatencyModel(), k=args.k)
+    latency = LatencyModel()
+    corpus = jnp.asarray(world.doc_emb)
+    if args.retrieval_backend == "sharded":
+        backend = ShardedMeshBackend(corpus, args.k, latency,
+                                     n_shards=args.shards,
+                                     n_workers=args.workers)
+    elif args.retrieval_backend == "replica":
+        from repro.checkpoint import CheckpointManager
+        from repro.serving.replication import WarmStandby
+        cfg0 = HasConfig(k=args.k, tau=args.tau, h_max=args.h_max,
+                         nprobe=16, n_buckets=2048, d=world.cfg.d)
+        standbys = [
+            WarmStandby(cfg0, CheckpointManager(tempfile.mkdtemp(
+                prefix=f"has-standby{i}-")), snapshot_every=10_000,
+                max_lag=50_000)
+            for i in range(max(1, args.workers))]
+        backend = ReplicaBackend(
+            LocalFlatBackend(corpus, args.k, latency), standbys, corpus)
+    else:
+        backend = None                       # RetrievalService default: flat
+    svc = RetrievalService(world, latency, k=args.k, backend=backend)
     ds = DATASETS[args.dataset]
     queries = world.sample_queries(
         args.queries, pattern=ds["pattern"], zipf_a=ds["zipf_a"],
@@ -53,7 +96,9 @@ def main() -> None:
         engine = ANNSEngine(svc, method=args.engine)
 
     result = engine.serve(queries, dataset=args.dataset, seed=args.seed)
-    print(f"[serve] engine={args.engine} dataset={args.dataset}")
+    print(f"[serve] engine={args.engine} dataset={args.dataset} "
+          f"retrieval-backend={args.retrieval_backend} "
+          f"(n_workers={svc.backend.n_workers})")
     for k, v in result.summary().items():
         print(f"  {k:20s} {v:.4f}")
 

@@ -1,1 +1,4 @@
-"""Retrieval substrate: flat ENNS, IVF ANNS, int8 stores, distributed top-k."""
+"""Retrieval substrate: flat ENNS, IVF ANNS, int8 stores, distributed top-k,
+and the pluggable full-retrieval backend layer (service.py): the
+FullRetrievalBackend protocol, LocalFlatBackend / ShardedMeshBackend /
+ReplicaBackend, and the RetrievalService every serving layer composes."""

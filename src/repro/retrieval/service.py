@@ -1,0 +1,241 @@
+"""Pluggable full-retrieval backend layer + the shared RetrievalService.
+
+The paper's speedup comes from *bypassing* slow full-database retrieval, but
+every rejected draft still pays for it — so the cloud stage is the serving
+system's scaling bottleneck.  This module makes that stage pluggable: the
+:class:`FullRetrievalBackend` protocol is what every serving layer (the
+``ServeLoop`` engines, ``BatchedHasEngine``, the continuous-batching
+scheduler, ``AutoRagPipeline``) sees, and three implementations cover the
+deployment spectrum:
+
+``LocalFlatBackend``
+    One in-process exact scan (``chunked_flat_search``) — the historical
+    behavior of ``RetrievalService.full_search``.  One worker: full
+    retrievals serialize behind each other.
+``ShardedMeshBackend``
+    The corpus row-sharded over a CPU/TPU mesh
+    (``retrieval/distributed.py``): each shard streams N/shards rows and the
+    O(shards·k) candidate sets merge with an all-gather.  Latency is scaled
+    by ``LatencyModel.shard_scale(n_shards)`` and the backend exposes
+    ``n_workers`` concurrent dispatch slots, so the scheduler's cloud stage
+    becomes a worker *pool* whose throughput scales with corpus shards.
+    Off-mesh (one local device) the identical merge math runs through
+    :func:`~repro.retrieval.distributed.sharded_topk_reference`, keeping
+    results bit-identical to the mesh path and to ``LocalFlatBackend``.
+``ReplicaBackend``
+    Routes full retrievals through warm-standby replicas
+    (``serving/replication.py``): ``n_workers`` = number of standbys, and
+    every cache ingest is reconciled into each standby's delta log
+    (``on_ingest``), so any replica can fail over with the cache it would
+    have had — the scheduler no longer assumes one authoritative cache.
+
+Latency protocol: ``latency(batch)`` returns the *modeled* service time of
+one coalesced dispatch (bandwidth-bound: a batch streams the operand once,
+so the time is batch-width independent); ``n_workers`` is how many such
+dispatches the virtual clock may overlap.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.retrieval.distributed import (distributed_flat_search,
+                                         sharded_topk_reference)
+from repro.retrieval.flat import chunked_flat_search
+
+
+@runtime_checkable
+class FullRetrievalBackend(Protocol):
+    """What a serving layer needs from the full-database retrieval stage."""
+
+    #: concurrent dispatch slots the virtual clock may overlap
+    n_workers: int
+
+    def search(self, q_embs: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """Exact top-k for a query batch [B, d] -> (scores [B,k], ids [B,k])."""
+        ...
+
+    def latency(self, batch: int) -> float:
+        """Modeled service time (s) of ONE coalesced dispatch of ``batch``."""
+        ...
+
+    def on_ingest(self, q_embs: np.ndarray, full_ids: np.ndarray,
+                  state) -> None:
+        """Cache-ingest notification (rows just folded into the HaS cache)."""
+        ...
+
+
+class _BackendBase:
+    """Shared no-op ingest hook; concrete backends set search/latency."""
+
+    n_workers: int = 1
+
+    def on_ingest(self, q_embs, full_ids, state) -> None:
+        return None
+
+
+class LocalFlatBackend(_BackendBase):
+    """Today's behavior: one in-process chunked exact scan, one worker."""
+
+    def __init__(self, corpus: jax.Array, k: int, lat, chunk: int = 32768):
+        self.corpus = corpus
+        self.k = k
+        self.lat = lat
+        self.chunk = min(chunk, corpus.shape[0])
+        self._search = jax.jit(functools.partial(
+            chunked_flat_search, k=k, chunk=self.chunk))
+        self.n_workers = 1
+
+    def search(self, q_embs):
+        return self._search(self.corpus, q_embs)
+
+    def latency(self, batch: int) -> float:
+        # bandwidth-bound coalesced matmul: the batch streams the corpus once
+        return self.lat.full_scan_time()
+
+
+class ShardedMeshBackend(_BackendBase):
+    """Row-sharded mesh scan with a concurrent-dispatch worker pool.
+
+    ``mesh`` (multi-device) lowers through ``distributed_flat_search``
+    (shard_map + all-gather merge over ``corpus_axes``); without a mesh —
+    or on a 1-device mesh — the same candidate-merge math runs through
+    ``sharded_topk_reference`` so the virtual clock can model an
+    ``n_shards``-way deployment from a single-device container.  Either
+    path returns scores/ids bit-identical to ``LocalFlatBackend``.
+    """
+
+    def __init__(self, corpus: jax.Array, k: int, lat, n_shards: int = 4,
+                 n_workers: int = 1, mesh=None,
+                 corpus_axes: tuple[str, ...] = ("data", "model")):
+        self.corpus = corpus
+        self.k = k
+        self.lat = lat
+        self.mesh = mesh
+        mesh_shards = 1
+        if mesh is not None:
+            for a in corpus_axes:
+                mesh_shards *= mesh.shape.get(a, 1)
+        if mesh is not None and mesh_shards > 1:
+            # the mesh decides the physical shard count
+            self.n_shards = mesh_shards
+            if corpus.shape[0] % mesh_shards:
+                raise ValueError(
+                    f"corpus rows {corpus.shape[0]} must divide evenly over "
+                    f"{mesh_shards} mesh shards")
+            dist = distributed_flat_search(mesh, corpus_axes)
+            self._search = jax.jit(lambda c, q: dist(c, q, k))
+        else:
+            self.n_shards = max(1, int(n_shards))
+            self._search = functools.partial(
+                sharded_topk_reference, k=k, n_shards=self.n_shards)
+        self.n_workers = max(1, int(n_workers))
+
+    def search(self, q_embs):
+        return self._search(self.corpus, q_embs)
+
+    def latency(self, batch: int) -> float:
+        # every shard streams N/n_shards rows concurrently + merge overhead
+        return self.lat.full_scan_time() * self.lat.shard_scale(self.n_shards)
+
+
+class ReplicaBackend(_BackendBase):
+    """Warm-standby replica routing + cache-ingest reconciliation.
+
+    Wraps an inner backend for the actual scan and models one concurrent
+    dispatch slot per standby replica.  ``on_ingest`` mirrors every row the
+    serving loop folds into the authoritative cache onto each standby's
+    delta log (``WarmStandby.record_update``), so a failover resumes with
+    exactly the cache the primary had — the serving loop no longer owns the
+    only authoritative copy.
+    """
+
+    def __init__(self, inner: FullRetrievalBackend, standbys: Sequence,
+                 corpus: jax.Array):
+        self.inner = inner
+        self.standbys = list(standbys)
+        self.corpus = corpus
+        self._corpus_np = np.asarray(corpus)    # one host copy, reused
+        self.n_workers = max(1, len(self.standbys))
+
+    def search(self, q_embs):
+        return self.inner.search(q_embs)
+
+    def latency(self, batch: int) -> float:
+        return self.inner.latency(batch)
+
+    def on_ingest(self, q_embs, full_ids, state) -> None:
+        q_embs = np.asarray(q_embs, np.float32)
+        full_ids = np.asarray(full_ids, np.int32)
+        vecs = self._corpus_np[full_ids]                  # [N, k, d]
+        for sb in self.standbys:
+            sb.record_batch(q_embs, full_ids, vecs, state)
+
+
+class RetrievalService:
+    """Shared substrate: corpus + latency calibration + retrieval backend.
+
+    Composition only — the world supplies the corpus, the
+    :class:`LatencyModel` supplies analytic scan times, and the
+    :class:`FullRetrievalBackend` supplies the actual full-database search
+    (``backend=None`` -> :class:`LocalFlatBackend`, the historical
+    behavior).
+
+    Latency accounting (see serving/latency.py): edge-local compute (cache
+    channel, homology validation, cache updates) is charged at *measured*
+    wall-clock — those structures run at their true paper-scale sizes here.
+    Corpus-proportional compute (full ENNS scan, fuzzy IVF scan) is charged
+    analytically as bytes/bandwidth at the paper's 49.2M-passage target
+    scale, with the bandwidth calibrated from a measured reference scan.
+    """
+
+    def __init__(self, world, latency, k: int = 10, chunk: int = 32768,
+                 calibrate: bool = False,
+                 backend: FullRetrievalBackend | None = None):
+        self.world = world
+        self.latency = latency
+        self.latency.d = world.cfg.d
+        self.latency.actual_corpus = world.cfg.n_docs
+        self.k = k
+        self.chunk = min(chunk, world.cfg.n_docs)
+        # one device-resident corpus: reuse the backend's copy when one was
+        # injected (every backend holds the same world.doc_emb by contract)
+        bc = getattr(backend, "corpus", None) if backend is not None else None
+        self.corpus = bc if bc is not None else jnp.asarray(world.doc_emb)
+        self.backend = backend if backend is not None else LocalFlatBackend(
+            self.corpus, k, latency, chunk=self.chunk)
+        # warmup (+ optional bandwidth calibration from a measured scan)
+        z = jnp.zeros((1, world.cfg.d))
+        self.backend.search(z)[0].block_until_ready()
+        if calibrate:
+            # bandwidth is defined against the UNSHARDED reference scan
+            # (shard_scale etc. apply on top of it) — always time the flat
+            # chunked scan, not backend.search, or a sharded backend would
+            # count its speedup twice
+            ref = (self.backend._search
+                   if isinstance(self.backend, LocalFlatBackend)
+                   else jax.jit(functools.partial(
+                       chunked_flat_search, k=k, chunk=self.chunk)))
+            ref(self.corpus, z)[0].block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(3):
+                ref(self.corpus, z)[0].block_until_ready()
+            self.latency.calibrate((time.perf_counter() - t0) / 3,
+                                   world.cfg.n_docs)
+
+    def full_search(self, q_emb: np.ndarray):
+        """Exact full-database search; returns (ids [k], vecs [k,d], t_comp)."""
+        s, ids = self.backend.search(jnp.asarray(q_emb)[None])
+        ids = np.asarray(ids[0])
+        t = self.backend.latency(1)
+        return ids, np.asarray(self.corpus[ids]), t
+
+    def full_search_batch(self, q_embs) -> tuple[np.ndarray, float]:
+        """Coalesced exact search for [B, d]; returns (ids [B,k], t_comp)."""
+        _, ids = self.backend.search(jnp.asarray(q_embs))
+        return np.asarray(ids), self.backend.latency(len(q_embs))

@@ -59,6 +59,11 @@ class AutoRagPipeline:
 
     ``engine`` is any serving engine exposing the per-query step protocol
     (HasEngine) or full retrieval; the pipeline itself never changes.
+    ``full_engine`` is the shared :class:`~repro.retrieval.service.
+    RetrievalService`, whose ``full_search`` routes through the pluggable
+    full-retrieval backend (flat / sharded-mesh / replica) — swapping the
+    cloud stage under the agentic pipeline needs no pipeline changes
+    either.
     """
 
     def __init__(self, dataset: TwoHopDataset, engine, full_engine,

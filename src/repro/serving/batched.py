@@ -36,8 +36,7 @@ from repro.core.has import (HasConfig, cache_update_batched,
                             cache_update_chunked, init_has_state,
                             speculate_batch)
 from repro.retrieval.ivf import build_ivf
-from repro.serving.engine import (RetrievalService, ServeLoop,
-                                  full_batch_searcher, fuzzy_scope)
+from repro.serving.engine import RetrievalService, ServeLoop, fuzzy_scope
 
 
 class BatchedHasEngine(ServeLoop):
@@ -51,13 +50,12 @@ class BatchedHasEngine(ServeLoop):
         self.batch_size = batch_size
         self.backend = backend                  # None -> auto per platform
         self.fuzzy_scope = fuzzy_scope(self.cfg, self.index)
-        self._full_batch = full_batch_searcher(service.corpus, self.cfg.k)
         # warmup the fused programs at the shapes the loop uses
         z = jnp.zeros((batch_size, self.s.world.cfg.d))
         jax.block_until_ready(
             speculate_batch(self.cfg, self.state, self.index, z,
                             backend=backend))
-        self._full_batch(self.s.corpus, z)[0].block_until_ready()
+        service.backend.search(z)[0].block_until_ready()
         scratch = init_has_state(self.cfg)      # donated, then discarded
         jax.block_until_ready(cache_update_batched(
             self.cfg, scratch, z,
@@ -84,15 +82,16 @@ class BatchedHasEngine(ServeLoop):
         rej = np.flatnonzero(~accepts)
         ids_full, t_full = None, 0.0
         if len(rej):
-            sub = jnp.asarray(embs[rej])
-            _, ids_full = self._full_batch(self.s.corpus, sub)
-            ids_full = np.asarray(ids_full)
-            t_full = lat_model.full_scan_time()       # amortized batch scan
+            # one coalesced dispatch on the pluggable full-retrieval backend
+            ids_full, t_full = self.s.full_search_batch(embs[rej])
             # fold the whole rejected batch into the cache in ONE dispatch
             # (padded to the compiled batch_size shape; mask drops the pad)
             self.state = cache_update_chunked(
                 self.cfg, self.state, embs[rej], ids_full.astype(np.int32),
                 corpus=self.s.corpus, chunk=bs)
+            # replica-style backends mirror the ingest onto standby logs
+            self.s.backend.on_ingest(embs[rej], ids_full.astype(np.int32),
+                                     self.state)
 
         fuzzy_t = lat_model.scan_time(
             lat_model.target_corpus * self.fuzzy_scope * 2.0)

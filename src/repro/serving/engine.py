@@ -3,7 +3,11 @@
 All engines run on one serve-loop substrate (:class:`ServeLoop`): the loop
 owns metrics recording, record-rng threading and micro-batch iteration, and
 an engine only implements ``_step`` (one query -> ids/accept/latency) or
-``_step_batch`` (one micro-batch -> a list of those).  ``batch_size == 1``
+``_step_batch`` (one micro-batch -> a list of those).  Full-database
+retrieval routes through the pluggable backend layer of the shared
+:class:`~repro.retrieval.service.RetrievalService` (flat / sharded-mesh /
+replica — see retrieval/service.py), so every engine's cloud stage swaps
+without engine changes.  ``batch_size == 1``
 gives Algorithm 1's sequential semantics (the cache mutates between
 queries); serving/batched.py sets ``batch_size > 1`` for snapshot
 micro-batching, and serving/scheduler.py reuses the same metrics substrate
@@ -21,7 +25,6 @@ Recorded metrics (paper §IV):
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Any, Callable
 
@@ -36,9 +39,14 @@ from repro.core.baselines import (CRAGEvaluator, ReuseState, init_reuse_state,
 from repro.core.has import (HasConfig, cache_update, init_has_state,
                             speculate_batch)
 from repro.data.synthetic import SyntheticWorld, simulate_response_accuracy
-from repro.retrieval.flat import chunked_flat_search, quantize_store, quantized_search
 from repro.retrieval.ivf import (IVFIndex, build_ivf, ivf_search,
                                  subset_index)
+# RetrievalService composes world + latency + a pluggable full-retrieval
+# backend (retrieval/service.py); re-exported here for the serving layers
+# and for backward compatibility of `repro.serving.engine.RetrievalService`.
+from repro.retrieval.service import (FullRetrievalBackend, LocalFlatBackend,
+                                     ReplicaBackend, RetrievalService,
+                                     ShardedMeshBackend)
 from repro.serving.latency import LatencyModel
 
 
@@ -66,46 +74,6 @@ class ServeResult:
         return out
 
 
-class RetrievalService:
-    """Shared substrate: corpus, exact full search, latency calibration.
-
-    Latency accounting (see serving/latency.py): edge-local compute (cache
-    channel, homology validation, cache updates) is charged at *measured*
-    wall-clock — those structures run at their true paper-scale sizes here.
-    Corpus-proportional compute (full ENNS scan, fuzzy IVF scan) is charged
-    analytically as bytes/bandwidth at the paper's 49.2M-passage target
-    scale, with the bandwidth calibrated from a measured reference scan.
-    """
-
-    def __init__(self, world: SyntheticWorld, latency: LatencyModel,
-                 k: int = 10, chunk: int = 32768, calibrate: bool = False):
-        self.world = world
-        self.latency = latency
-        self.latency.d = world.cfg.d
-        self.latency.actual_corpus = world.cfg.n_docs
-        self.k = k
-        self.chunk = min(chunk, world.cfg.n_docs)
-        self.corpus = jnp.asarray(world.doc_emb)
-        self._full = jax.jit(functools.partial(
-            chunked_flat_search, k=k, chunk=self.chunk))
-        # warmup (+ optional bandwidth calibration from a measured scan)
-        self._full(self.corpus, jnp.zeros((1, world.cfg.d)))[0].block_until_ready()
-        if calibrate:
-            t0 = time.perf_counter()
-            for _ in range(3):
-                self._full(self.corpus,
-                           jnp.zeros((1, world.cfg.d)))[0].block_until_ready()
-            self.latency.calibrate((time.perf_counter() - t0) / 3,
-                                   world.cfg.n_docs)
-
-    def full_search(self, q_emb: np.ndarray):
-        """Exact full-database search; returns (ids [k], vecs [k,d], t_comp)."""
-        s, ids = self._full(self.corpus, jnp.asarray(q_emb)[None])
-        ids = np.asarray(ids[0])
-        t = self.latency.full_scan_time()
-        return ids, np.asarray(self.corpus[ids]), t
-
-
 def _metrics_init(n, llms):
     return dict(latencies=np.zeros(n), accepts=np.zeros(n, bool),
                 doc_hits=np.zeros(n, bool), correct=np.zeros(n, bool),
@@ -119,13 +87,6 @@ def _finish(m) -> ServeResult:
 
 
 LLMS = ("qwen3-8b", "llama3-8b", "mixtral-7b")
-
-
-def full_batch_searcher(corpus, k: int):
-    """Jitted coalesced exact top-k over the corpus for a query batch —
-    the one full-retrieval matmul shared by the batched/scheduler engines."""
-    return jax.jit(lambda c, q: chunked_flat_search(
-        c, q, k, min(32768, c.shape[0])))
 
 
 def fuzzy_scope(cfg, index) -> float:
@@ -308,6 +269,9 @@ class HasEngine(ServeLoop):
                                   jnp.asarray(vecs))
         jax.block_until_ready(self.state.q_ptr)
         lat += time.perf_counter() - t0
+        # replica-style backends mirror the ingest onto standby delta logs
+        self.s.backend.on_ingest(np.asarray(q_emb)[None],
+                                 ids.astype(np.int32)[None], self.state)
         return ids, False, lat, float(out["homology"][0])
 
     def _step(self, q, rng, dataset):
@@ -387,4 +351,6 @@ class CRAGEngine(HasEngine):
         self.state = cache_update(
             self.cfg, self.state, jnp.asarray(q["emb"]),
             jnp.asarray(ids.astype(np.int32)), jnp.asarray(vecs))
+        self.s.backend.on_ingest(np.asarray(q["emb"])[None],
+                                 ids.astype(np.int32)[None], self.state)
         return ids, False, lat

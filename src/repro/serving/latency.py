@@ -35,6 +35,13 @@ class LatencyModel:
     # RetrievalService(calibrate=True) replaces it with THIS machine's
     # measured bandwidth instead.
     bandwidth: float = 10.3e9
+    # Per-shard overhead of the distributed scan (retrieval/distributed.py):
+    # every worker all-gathers and merges O(shards·k) candidate pairs, so
+    # the merge cost GROWS with the shard count — modeled as this fraction
+    # of the full (unsharded) scan time per extra shard.  0.2% puts the
+    # over-sharding inflection (where adding shards stops helping) at
+    # s ≈ sqrt(1/0.002) ≈ 22 shards.
+    shard_merge_overhead: float = 0.002
     seed: int = 0
 
     def __post_init__(self):
@@ -51,6 +58,17 @@ class LatencyModel:
     def full_scan_time(self) -> float:
         """Full-database ENNS at the paper's target corpus scale."""
         return self.scan_time(self.target_corpus)
+
+    def shard_scale(self, n_shards: int) -> float:
+        """Multiplier on ``full_scan_time()`` when the scan is row-sharded
+        over ``n_shards`` mesh workers (retrieval/distributed.py): every
+        worker streams N/n_shards rows concurrently (the 1/s term), and the
+        O(shards·k) all-gather candidate merge charges
+        ``shard_merge_overhead`` of the full scan per extra shard — a
+        linearly growing term, so over-sharding eventually costs more than
+        it saves (minimum near s = sqrt(1/overhead))."""
+        s = max(1, int(n_shards))
+        return 1.0 / s + self.shard_merge_overhead * (s - 1)
 
     def calibrate(self, measured_s: float, n_vectors: int,
                   bytes_per_dim: int = 4) -> None:

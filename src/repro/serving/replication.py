@@ -13,6 +13,14 @@ the training stack has:
   * ``WarmStandby``: holds a delta log of cache_update inputs since the last
     snapshot and can replay them onto a restored snapshot, so a standby
     engine resumes with at most ``max_lag`` queries of acceptance-rate loss.
+
+Serving integration: ``retrieval/service.py::ReplicaBackend`` routes the
+scheduler's full-retrieval worker pool through warm standbys and mirrors
+every cache ingest onto each standby's delta log (``record_update``) via
+the backend's ``on_ingest`` hook — with zero lag, ``failover()`` rebuilds
+EXACTLY the primary's cache (tests/test_retrieval_backends.py asserts
+bit-equality), so the scheduler no longer holds the only authoritative
+copy.
 """
 from __future__ import annotations
 
@@ -76,10 +84,24 @@ class WarmStandby:
     def record_update(self, q_emb: np.ndarray, full_ids: np.ndarray,
                       full_vecs: np.ndarray, state: HasState) -> None:
         """Call after every primary cache_update."""
-        self.log.append((np.asarray(q_emb), np.asarray(full_ids),
-                         np.asarray(full_vecs)))
-        self._since_snapshot += 1
-        self._step += 1
+        self.record_batch(np.asarray(q_emb)[None], np.asarray(full_ids)[None],
+                          np.asarray(full_vecs)[None], state)
+
+    def record_batch(self, q_embs: np.ndarray, full_ids: np.ndarray,
+                     full_vecs: np.ndarray, state: HasState) -> None:
+        """Append a whole ingest batch, then apply the snapshot cadence ONCE.
+
+        ``state`` must be the post-batch primary state.  The cadence check
+        runs after ALL rows are appended: snapshotting mid-batch would
+        clear the log while the batch tail still gets appended, and a
+        failover would then replay rows the snapshot already contains
+        (double-applying them into the FIFO rings).
+        """
+        for q, ids, vecs in zip(q_embs, full_ids, full_vecs):
+            self.log.append((np.asarray(q), np.asarray(ids),
+                             np.asarray(vecs)))
+        self._since_snapshot += len(q_embs)
+        self._step += len(q_embs)
         if self._since_snapshot >= self.snapshot_every:
             snapshot(self.mgr, self._step, state, blocking=False)
             self._since_snapshot = 0

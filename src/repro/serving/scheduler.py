@@ -27,7 +27,14 @@ The edge (speculation) and the cloud (full retrieval) are independent
 resources, so speculation of later admissions overlaps in-flight full
 retrievals — the continuous-batching win that neither the sequential
 ``HasEngine`` (strict Algorithm 1) nor the snapshot micro-batches of
-``BatchedHasEngine`` can express.  Four completion channels result —
+``BatchedHasEngine`` can express.  The cloud stage itself is a WORKER POOL
+over the service's pluggable full-retrieval backend
+(retrieval/service.py): ``backend.n_workers`` concurrent dispatch slots,
+each charged ``backend.latency(batch)`` on the virtual clock — one slot
+for the in-process ``LocalFlatBackend`` (the historical serialized cloud),
+several for ``ShardedMeshBackend`` mesh workers or ``ReplicaBackend`` warm
+standbys, whose cache ingests the loop reconciles via
+``backend.on_ingest``.  Four completion channels result —
 ``draft`` / ``reval`` / ``shared`` / ``full`` — of which the first three
 count as accepted (only ``full`` pays for its own full retrieval; only
 ``full`` and ``shared`` wait on the cloud).
@@ -52,15 +59,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import warnings
+
 from repro.core.has import (HasConfig, cache_update_batched,
                             cache_update_chunked, init_has_state,
                             intra_batch_share, speculate_batch)
 from repro.core.homology import reidentify
 from repro.retrieval.ivf import build_ivf
 from repro.serving.engine import (LLMS, RetrievalService, ServeResult,
-                                  _metrics_init, _record,
-                                  full_batch_searcher)
+                                  _metrics_init, _record)
 from repro.serving.engine import fuzzy_scope as _fuzzy_scope
+
+# Sharing-threshold default as a multiple of the validation threshold
+# cfg.tau, calibrated by `benchmarks/sched_throughput.py --sweep-share-tau`
+# on the homology-heavy granola stream at saturation: 0.5x cuts avg
+# latency ~11% vs 1.0x with the follower channel's doc-hit at or above the
+# full channel's (followers attach to genuinely homologous leaders), while
+# 0.25x degrades follower doc-hit by 16+ points (non-homologous attachment).
+DEFAULT_SHARE_TAU_MULT = 0.5
 
 
 def poisson_arrivals(n: int, qps: float, seed: int = 0) -> np.ndarray:
@@ -74,9 +90,14 @@ class SchedulerConfig:
     max_spec_batch: int = 32       # admission -> speculation coalescing cap
     full_batch: int = 16           # rejected leaders per cloud dispatch
     full_max_wait_s: float = 0.05  # dispatch a partial batch after this wait
-    max_inflight_full: int = 1     # concurrent cloud dispatches
+    # DEPRECATED: the cloud stage is now a worker pool sized by the
+    # retrieval backend (`service.backend.n_workers`); a non-None value
+    # still loads (old configs keep working) and overrides the pool size,
+    # with a DeprecationWarning at scheduler construction.
+    max_inflight_full: int | None = None
     share: bool = True             # homology sharing across the reject queue
-    share_tau: float | None = None  # sharing threshold; None -> 0.5 * cfg.tau
+    share_tau: float | None = None  # sharing threshold; None ->
+    #                                 DEFAULT_SHARE_TAU_MULT * cfg.tau
     max_pending_leaders: int = 256  # sharing registry capacity (fixed shape)
     revalidate: bool = True        # re-check leaders at cloud-dispatch time
     ingest_followers: bool = True  # followers' (q, shared D_full) also cached
@@ -94,6 +115,7 @@ class SchedResult(ServeResult):
     full_retrievals: int           # queries that PAID for a full retrieval
     spec_batches: int
     full_batches: int
+    max_inflight_full_batches: int = 1  # worker-pool concurrency high-water
 
     def summary(self) -> dict[str, float]:
         out = super().summary()
@@ -110,6 +132,7 @@ class SchedResult(ServeResult):
             "full_retrievals": int(self.full_retrievals),
             "spec_batches": int(self.spec_batches),
             "full_batches": int(self.full_batches),
+            "max_inflight_full_batches": int(self.max_inflight_full_batches),
         })
         return out
 
@@ -155,8 +178,20 @@ class ContinuousBatchingScheduler:
             service.corpus, self.cfg.n_buckets, seed=seed)
         self.fuzzy_scope = _fuzzy_scope(self.cfg, self.index)
         self._share_tau = (self.sched.share_tau if self.sched.share_tau
-                           is not None else 0.5 * self.cfg.tau)
-        self._full_batch = full_batch_searcher(service.corpus, self.cfg.k)
+                           is not None
+                           else DEFAULT_SHARE_TAU_MULT * self.cfg.tau)
+        # cloud-stage worker pool: one slot per backend worker (mesh shard
+        # group / warm-standby replica); the deprecated scalar still wins
+        # when an old config sets it
+        if self.sched.max_inflight_full is not None:
+            warnings.warn(
+                "SchedulerConfig.max_inflight_full is deprecated; the "
+                "full-retrieval stage is a worker pool sized by "
+                "service.backend.n_workers (see retrieval/service.py)",
+                DeprecationWarning, stacklevel=2)
+            self.n_full_workers = max(1, int(self.sched.max_inflight_full))
+        else:
+            self.n_full_workers = max(1, int(service.backend.n_workers))
         # late re-validation: homology re-check of queued validation drafts
         # against the updated query cache (no fuzzy scan needed)
         self._revalidate = jax.jit(jax.vmap(
@@ -176,8 +211,8 @@ class ContinuousBatchingScheduler:
             jnp.zeros((sc.ingest_batch, k), jnp.int32),
             jnp.zeros((sc.ingest_batch, k, d)),
             jnp.zeros((sc.ingest_batch,), bool)).q_ptr)
-        self._full_batch(self.s.corpus,
-                         jnp.zeros((sc.full_batch, d)))[0].block_until_ready()
+        service.backend.search(
+            jnp.zeros((sc.full_batch, d)))[0].block_until_ready()
         jax.block_until_ready(self._revalidate(
             jnp.zeros((sc.full_batch, k), jnp.int32),
             self.state.query_doc_ids, self.state.query_valid,
@@ -198,8 +233,9 @@ class ContinuousBatchingScheduler:
                               * lat.target_corpus * 2.0 + self.cfg.n_buckets)
         return fuzzy + lat.scan_time(self.cfg.doc_cap)
 
-    def _full_time(self) -> float:
-        return self.s.latency.full_scan_time()
+    def _full_time(self, b: int) -> float:
+        """Modeled cloud compute of one coalesced backend dispatch."""
+        return self.s.backend.latency(b)
 
     # -- fused cache ingest ------------------------------------------------
 
@@ -208,17 +244,20 @@ class ContinuousBatchingScheduler:
         followers, i.e. the attribution computed by ``intra_batch_share``)
         into the cache via ``cache_update_chunked`` — one device dispatch
         per ``ingest_batch`` chunk instead of one per request.  Row order
-        matches the old per-request loop, so the final state is identical."""
+        matches the old per-request loop, so the final state is identical.
+        The backend is then notified (``on_ingest``) so replica-style
+        backends can reconcile standby caches with the same rows."""
         rows = []
         for r in batch:
             rows.append(r)
             if self.sched.ingest_followers:
                 rows.extend(r.followers)
+        q_embs = np.stack([r.q["emb"] for r in rows])
+        full_ids = np.stack([r.ids for r in rows])
         self.state = cache_update_chunked(
-            self.cfg, self.state,
-            np.stack([r.q["emb"] for r in rows]),
-            np.stack([r.ids for r in rows]),
+            self.cfg, self.state, q_embs, full_ids,
             corpus=self.s.corpus, chunk=self.sched.ingest_batch)
+        self.s.backend.on_ingest(q_embs, full_ids, self.state)
 
     # -- event loop --------------------------------------------------------
 
@@ -247,7 +286,8 @@ class ContinuousBatchingScheduler:
         admission: collections.deque[_Request] = collections.deque()
         leaders: collections.deque[_Request] = collections.deque()  # queued
         edge_busy = False
-        inflight_full = 0
+        inflight_full = 0              # busy cloud-pool workers
+        max_inflight = 0               # pool-concurrency high-water mark
         timer_armed = False
         spec_batches = full_batches = full_retrievals = 0
 
@@ -341,7 +381,8 @@ class ContinuousBatchingScheduler:
                 dispatch_spec(t)
 
         def dispatch_full(t: float):
-            nonlocal inflight_full, seq, full_batches, full_retrievals
+            nonlocal inflight_full, max_inflight, seq, full_batches, \
+                full_retrievals
             batch = [leaders.popleft()
                      for _ in range(min(len(leaders), sc.full_batch))]
             # late re-validation: results ingested while these leaders
@@ -371,20 +412,22 @@ class ContinuousBatchingScheduler:
             embs = np.zeros((sc.full_batch, self.s.world.cfg.d), np.float32)
             for j, r in enumerate(batch):
                 embs[j] = r.q["emb"]
-            # one coalesced matmul retrieves every leader of the dispatch
-            _, ids_full = self._full_batch(self.s.corpus, jnp.asarray(embs))
+            # one coalesced backend dispatch retrieves every leader; the
+            # pool slot stays busy for the modeled service time
+            _, ids_full = self.s.backend.search(jnp.asarray(embs))
             ids_full = np.asarray(ids_full)
-            cloud = rtt_rng.uniform(*lat.cloud_rtt) + self._full_time()
+            cloud = rtt_rng.uniform(*lat.cloud_rtt) + self._full_time(b)
             heapq.heappush(heap, (t + cloud, _FULL_DONE, seq,
                                   (batch, ids_full, cloud)))
             seq += 1
             inflight_full += 1
+            max_inflight = max(max_inflight, inflight_full)
             full_batches += 1
             full_retrievals += b
 
         def try_full(t: float):
             nonlocal timer_armed, seq
-            while inflight_full < sc.max_inflight_full and leaders:
+            while inflight_full < self.n_full_workers and leaders:
                 deadline = leaders[0].t_rejected + sc.full_max_wait_s
                 if len(leaders) < sc.full_batch and t < deadline:
                     if not timer_armed:
@@ -446,7 +489,8 @@ class ContinuousBatchingScheduler:
             cloud_s=np.array([r.cloud_s for r in reqs]),
             channels=np.array([r.channel for r in reqs]),
             full_retrievals=full_retrievals,
-            spec_batches=spec_batches, full_batches=full_batches)
+            spec_batches=spec_batches, full_batches=full_batches,
+            max_inflight_full_batches=max_inflight)
 
 
 # canonical name for the continuous-batching HaS scheduler

@@ -1,0 +1,248 @@
+"""Pluggable full-retrieval backends (retrieval/service.py): sharded-mesh
+parity vs the chunked oracle (incl. the shard<k edge case), worker-pool
+scheduling end-to-end, replica ingest reconciliation, and the
+max_inflight_full deprecation shim.
+
+The CI `distributed-backend` job runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the mesh path
+exercises real multi-shard collectives; on a 1-device tier-1 run the same
+tests pass with a 1-shard mesh (the emulation path covers multi-shard
+math there).
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.has import HasConfig
+from repro.data.synthetic import DATASETS, SyntheticWorld, WorldConfig
+from repro.retrieval.distributed import (distributed_flat_search,
+                                         sharded_topk_reference)
+from repro.retrieval.flat import chunked_flat_search
+from repro.retrieval.service import (FullRetrievalBackend, LocalFlatBackend,
+                                     ReplicaBackend, RetrievalService,
+                                     ShardedMeshBackend)
+from repro.serving.latency import LatencyModel
+from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                     SchedulerConfig)
+
+
+def _unit(rng, n, d):
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def _host_mesh():
+    """Mesh over every available device (8 under the CI distributed job)."""
+    n = jax.device_count()
+    return jax.make_mesh((1, n), ("data", "model")), n
+
+
+@pytest.mark.parametrize("n,k,shards", [
+    (1024, 10, 8),        # plain multi-shard
+    (32, 10, 8),          # shard rows (4) < k (10)
+    (5, 7, 2),            # whole corpus < k -> -1 padded tail
+    (257, 10, 4),         # ragged tail block (emulation pads)
+])
+def test_sharded_reference_matches_chunked(n, k, shards):
+    rng = np.random.default_rng(0)
+    c = jnp.asarray(_unit(rng, n, 16))
+    q = jnp.asarray(_unit(rng, 5, 16))
+    s_ref, i_ref = chunked_flat_search(c, q, k, chunk=64)
+    s_sh, i_sh = sharded_topk_reference(c, q, k, n_shards=shards)
+    assert np.array_equal(np.asarray(i_ref), np.asarray(i_sh))
+    live = np.asarray(i_ref) >= 0
+    assert np.array_equal(np.asarray(s_ref)[live], np.asarray(s_sh)[live])
+
+
+def test_distributed_shard_smaller_than_k():
+    """Regression: a corpus shard with fewer than k rows must pad its local
+    candidates to k (-inf/-1) before the all-gather, so the global merge
+    returns the exact chunked result (and -1 only when the corpus < k)."""
+    mesh, n_dev = _host_mesh()
+    search = distributed_flat_search(mesh, ("data", "model"))
+    rng = np.random.default_rng(1)
+    # rows per shard < k, and (on 1 device) corpus < k
+    n = 4 * n_dev if n_dev > 1 else 5
+    k = 10 if n_dev > 1 else 7
+    c = jnp.asarray(_unit(rng, n, 16))
+    q = jnp.asarray(_unit(rng, 3, 16))
+    s, i = jax.jit(lambda cc, qq: search(cc, qq, k))(c, q)
+    s_ref, i_ref = chunked_flat_search(c, q, k, chunk=8)
+    assert np.array_equal(np.asarray(i), np.asarray(i_ref))
+    live = np.asarray(i_ref) >= 0
+    assert np.array_equal(np.asarray(s)[live], np.asarray(s_ref)[live])
+
+
+def test_sharded_mesh_backend_bit_identical_to_local_flat():
+    """Acceptance: ShardedMeshBackend == LocalFlatBackend on the parity
+    suite, through the real mesh when >1 host devices are forced."""
+    mesh, n_dev = _host_mesh()
+    rng = np.random.default_rng(2)
+    lat = LatencyModel()
+    c = jnp.asarray(_unit(rng, 128 * n_dev, 16))
+    q = jnp.asarray(_unit(rng, 6, 16))
+    flat = LocalFlatBackend(c, 10, lat, chunk=64)
+    shard = ShardedMeshBackend(c, 10, lat, mesh=mesh, n_shards=4)
+    s0, i0 = flat.search(q)
+    s1, i1 = shard.search(q)
+    assert np.array_equal(np.asarray(i0), np.asarray(i1))
+    assert np.array_equal(np.asarray(s0), np.asarray(s1))
+    # shard<k through the same backend pair (>=2 rows per shard: width-1
+    # matmuls may differ from the wide gemm in the last ulp)
+    c2 = jnp.asarray(_unit(rng, max(8, 4 * n_dev), 16))
+    flat2 = LocalFlatBackend(c2, 10, lat, chunk=8)
+    shard2 = ShardedMeshBackend(c2, 10, lat, mesh=mesh, n_shards=4)
+    s0, i0 = flat2.search(q)
+    s1, i1 = shard2.search(q)
+    assert np.array_equal(np.asarray(i0), np.asarray(i1))
+    live = np.asarray(i0) >= 0
+    assert np.array_equal(np.asarray(s0)[live], np.asarray(s1)[live])
+
+
+def test_backend_protocol_and_latency_model():
+    rng = np.random.default_rng(3)
+    lat = LatencyModel()
+    c = jnp.asarray(_unit(rng, 256, 16))
+    flat = LocalFlatBackend(c, 10, lat, chunk=64)
+    shard = ShardedMeshBackend(c, 10, lat, n_shards=8, n_workers=4)
+    assert isinstance(flat, FullRetrievalBackend)
+    assert isinstance(shard, FullRetrievalBackend)
+    assert flat.n_workers == 1 and shard.n_workers == 4
+    # shard_scale: monotone decreasing over realistic shard counts,
+    # and the sharded scan is strictly faster than the flat scan
+    scales = [lat.shard_scale(s) for s in (1, 2, 4, 8, 16)]
+    assert all(a > b for a, b in zip(scales, scales[1:]))
+    assert lat.shard_scale(1) == 1.0
+    assert shard.latency(16) < flat.latency(16)
+
+
+@pytest.fixture(scope="module")
+def world_setup():
+    world = SyntheticWorld(WorldConfig(n_entities=600, seed=0))
+    ds = DATASETS["granola"]
+    qs = world.sample_queries(300, pattern=ds["pattern"], zipf_a=ds["zipf_a"],
+                              p_uncovered=ds["p_uncovered"], seed=1)
+    cfg = HasConfig(k=10, tau=0.2, h_max=600, nprobe=4, n_buckets=256, d=64)
+    return world, qs, cfg
+
+
+def _sched(world, cfg, backend=None, **sched_kw):
+    lat = LatencyModel()
+    if callable(backend):
+        backend = backend(jnp.asarray(world.doc_emb), lat)
+    svc = RetrievalService(world, lat, k=10, chunk=2048, backend=backend)
+    kw = dict(max_spec_batch=16, full_batch=8, full_max_wait_s=0.1)
+    kw.update(sched_kw)
+    return ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(**kw))
+
+
+def test_scheduler_sharded_worker_pool_e2e(world_setup):
+    """End-to-end: a 4-worker sharded backend overlaps full-retrieval
+    batches (pool concurrency > 1), completes every request, and beats the
+    serialized flat backend's saturated throughput."""
+    world, qs, cfg = world_setup
+    flat = _sched(world, cfg)
+    r0 = flat.serve(qs, None, seed=0)
+    sharded = _sched(world, cfg, backend=lambda c, lat: ShardedMeshBackend(
+        c, 10, lat, n_shards=4, n_workers=4))
+    assert sharded.n_full_workers == 4
+    r1 = sharded.serve(qs, None, seed=0)
+    assert np.all(r1.t_done >= 0) and np.all(r1.channels != "pending")
+    assert r1.max_inflight_full_batches >= 2
+    assert r0.max_inflight_full_batches == 1
+    s0, s1 = r0.summary(), r1.summary()
+    assert s1["throughput_qps"] > s0["throughput_qps"]
+    # same stream, same accuracy substrate: doc-hit within a few points
+    assert abs(s1["doc_hit_rate"] - s0["doc_hit_rate"]) < 0.08
+
+
+def test_replica_backend_reconciles_standby_cache(world_setup):
+    """Failover parity: after a served stream, a standby rebuilt from its
+    reconciled delta log holds EXACTLY the cache the scheduler ended with —
+    no single authoritative copy."""
+    from repro.checkpoint import CheckpointManager
+    from repro.serving.replication import WarmStandby
+    world, qs, cfg = world_setup
+    standby = WarmStandby(cfg, CheckpointManager(tempfile.mkdtemp()),
+                          snapshot_every=10**9, max_lag=10**6)
+    sch = _sched(world, cfg, backend=lambda c, lat: ReplicaBackend(
+        LocalFlatBackend(c, 10, lat, chunk=2048), [standby], c))
+    assert sch.n_full_workers == 1
+    sch.serve(qs, None, seed=0)
+    assert len(standby.log) > 0
+    recovered = standby.failover()
+    for a, b in zip(jax.tree.leaves(recovered), jax.tree.leaves(sch.state)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_replica_failover_parity_across_snapshots(world_setup):
+    """Regression: a snapshot cadence boundary landing inside an ingest
+    batch must not double-apply the batch tail — record_batch appends the
+    whole batch before the cadence check, so failover (snapshot + replayed
+    log) still rebuilds the primary's cache bit-exactly."""
+    from repro.checkpoint import CheckpointManager
+    from repro.serving.replication import WarmStandby
+    world, qs, cfg = world_setup
+    standby = WarmStandby(cfg, CheckpointManager(tempfile.mkdtemp()),
+                          snapshot_every=40, max_lag=10**6)
+    sch = _sched(world, cfg, backend=lambda c, lat: ReplicaBackend(
+        LocalFlatBackend(c, 10, lat, chunk=2048), [standby], c))
+    sch.serve(qs, None, seed=0)
+    standby.mgr.wait()                    # drain the async snapshot writer
+    recovered = standby.failover()
+    for a, b in zip(jax.tree.leaves(recovered), jax.tree.leaves(sch.state)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_replica_mirrors_sequential_engine_ingest(world_setup):
+    """The reconciliation contract holds outside the scheduler too: the
+    sequential HasEngine's per-query cache_update also lands on the
+    standby log (launch/serve.py --retrieval-backend replica --engine
+    has)."""
+    from repro.checkpoint import CheckpointManager
+    from repro.serving.engine import HasEngine
+    from repro.serving.replication import WarmStandby
+    world, qs, cfg = world_setup
+    standby = WarmStandby(cfg, CheckpointManager(tempfile.mkdtemp()),
+                          snapshot_every=10**9, max_lag=10**6)
+    lat = LatencyModel()
+    corpus = jnp.asarray(world.doc_emb)
+    svc = RetrievalService(world, lat, k=10, chunk=2048,
+                           backend=ReplicaBackend(
+                               LocalFlatBackend(corpus, 10, lat, chunk=2048),
+                               [standby], corpus))
+    eng = HasEngine(svc, cfg)
+    eng.serve(qs[:80])
+    assert len(standby.log) > 0
+    recovered = standby.failover()
+    for a, b in zip(jax.tree.leaves(recovered), jax.tree.leaves(eng.state)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_max_inflight_full_deprecation_shim(world_setup):
+    """Old configs still load: a non-None max_inflight_full warns and
+    overrides the backend-sized worker pool."""
+    world, qs, cfg = world_setup
+    with pytest.warns(DeprecationWarning):
+        sch = _sched(world, cfg,
+                     backend=lambda c, lat: ShardedMeshBackend(
+                         c, 10, lat, n_shards=4, n_workers=4),
+                     max_inflight_full=1)
+    assert sch.n_full_workers == 1
+    r = sch.serve(qs[:100], None, seed=0)
+    assert r.max_inflight_full_batches == 1
+
+
+def test_service_routes_full_search_through_backend(world_setup):
+    world, qs, cfg = world_setup
+    lat = LatencyModel()
+    svc = RetrievalService(world, lat, k=10, chunk=2048)
+    assert isinstance(svc.backend, LocalFlatBackend)
+    ids, vecs, t = svc.full_search(qs[0]["emb"])
+    assert t == svc.backend.latency(1) == lat.full_scan_time()
+    ids_b, t_b = svc.full_search_batch(np.stack([q["emb"] for q in qs[:4]]))
+    assert np.array_equal(ids_b[0], ids) and t_b == t
+    assert ids.shape == (10,) and vecs.shape == (10, 64)
