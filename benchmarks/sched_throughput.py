@@ -19,7 +19,7 @@ the snapshot ``BatchedHasEngine`` on the same zipf (homology-heavy) stream:
     on TPU; on CPU it runs in interpret mode and is benchmarked by
     ``retrieval_roofline.sweep_backends`` instead).
 
-Two opt-in sweeps ride along (see --help):
+Three opt-in sweeps ride along (see --help):
 
   * ``--sweep-backend-shards`` — the cloud stage as a WORKER POOL over the
     pluggable retrieval backend (retrieval/service.py): full-retrieval
@@ -31,12 +31,23 @@ Two opt-in sweeps ride along (see --help):
     (``share_tau``) across multipliers of the validation tau: follower
     doc-hit degradation vs latency/full-retrieval savings; the sweep sets
     ``repro.serving.scheduler.DEFAULT_SHARE_TAU_MULT``.
+  * ``--sweep-tenants`` — the tenant-partitioned cache under mixed
+    Zipf-per-tenant traffic (each tenant a distinct hot set over a
+    disjoint entity range): per-tenant doc-hit vs a DEDICATED
+    single-tenant scheduler of the same per-tenant capacity (isolation
+    verdict), and a cross-tenant leakage audit of every served draft on a
+    fuzzy-disabled run where drafts can only come from the tenant's own
+    cache partition (no doc id ever served to a tenant that did not pay a
+    full retrieval for it; no shared follower attached to a cross-tenant
+    leader).  Writes ``BENCH_sched_tenants.json``.
 
 Run standalone:  PYTHONPATH=src python -m benchmarks.sched_throughput
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 
 import jax
 import jax.numpy as jnp
@@ -282,6 +293,123 @@ def sweep_share_tau():
     return rows
 
 
+def sweep_tenants(n_tenants: int = 4, out_path: str =
+                  "BENCH_sched_tenants.json"):
+    """Tenant-partitioned cache under mixed Zipf-per-tenant traffic.
+
+    Each tenant gets its own zipf (homology-heavy) stream over a DISJOINT
+    entity range (entity % T == t), so the tenants' hot sets never overlap
+    and leakage is detectable from doc ids.  Verdicts:
+
+    (a) isolation — per-tenant doc-hit in the shared multi-tenant
+        scheduler is no worse than a dedicated single-tenant scheduler of
+        the same per-tenant capacity run on that tenant's stream alone;
+    (b) no leakage — on a fuzzy-disabled run (drafts can only come from
+        the tenant's own cache partition) no served draft contains a doc
+        id the tenant never paid a full retrieval for, and no shared
+        follower is attached to a cross-tenant leader.
+    """
+    rows = []
+    svc = get_service()
+    world = svc.world
+    from repro.data.synthetic import DATASETS
+    ds = DATASETS["granola"]
+    n_per = min(N_QUERIES, 1600) // n_tenants
+    streams = []
+    for t in range(n_tenants):
+        pool = world.sample_queries(
+            8 * n_per, pattern=ds["pattern"], zipf_a=ds["zipf_a"],
+            p_uncovered=ds["p_uncovered"], seed=100 + t)
+        qs_t = [q for q in pool if q["entity"] % n_tenants == t][:n_per]
+        streams.append(qs_t)
+    n_per = min(len(s) for s in streams)
+    streams = [s[:n_per] for s in streams]
+    # round-robin interleave: the mixed open stream the scheduler sees
+    mixed = [streams[t][i] for i in range(n_per) for t in range(n_tenants)]
+    tids = np.array([t for _ in range(n_per) for t in range(n_tenants)],
+                    np.int32)
+    cfg = has_config()
+    sc_kw = dict(max_spec_batch=32, full_batch=16, full_max_wait_s=0.05)
+
+    multi = ContinuousBatchingScheduler(
+        svc, cfg, SchedulerConfig(n_tenants=n_tenants, **sc_kw))
+    r = multi.serve(mixed, None, seed=0, tenant_ids=tids)
+    per = r.per_tenant()
+    s = r.summary()
+    rows.append(row("tenants/multi", s["avg_latency_s"], _fmt(s)))
+
+    # dedicated baselines: one single-tenant scheduler per stream, same
+    # per-tenant capacity (cfg.h_max / cfg.doc_cap are PER TENANT in the
+    # stacked store), sharing the prebuilt fuzzy index
+    # isolation: every tenant within a small band of its dedicated baseline
+    # (batching patterns differ, so individual tenants jitter a few points
+    # either way) AND the aggregate no worse — a broken partition (one
+    # tenant churning another's window) fails both by a wide margin
+    iso_ok, detail, hits_m, hits_d = True, [], [], []
+    for t in range(n_tenants):
+        ded = ContinuousBatchingScheduler(
+            svc, cfg, SchedulerConfig(**sc_kw), index=multi.index)
+        rd = ded.serve(streams[t], None, seed=0)
+        hit_m = per[t]["doc_hit_rate"]
+        hit_d = float(rd.doc_hits.mean())
+        hits_m.append(hit_m)
+        hits_d.append(hit_d)
+        iso_ok &= hit_m >= hit_d - 0.05
+        detail.append(f"t{t}:{hit_m:.4f}/{hit_d:.4f}")
+        rows.append(row(
+            f"tenants/t={t}", per[t]["avg_latency_s"],
+            f"multi_hit={hit_m:.4f};dedicated_hit={hit_d:.4f};"
+            f"dar={per[t]['dar']:.4f};full={per[t]['full_retrievals']};"
+            f"shared={per[t]['shared_accepts']}"))
+    iso_ok &= float(np.mean(hits_m)) >= float(np.mean(hits_d)) - 0.01
+    rows.append(row(
+        "tenants/verdict_isolation", 0.0,
+        f"{'PASS' if iso_ok else 'FAIL'}"
+        f"(mean={np.mean(hits_m):.4f}/{np.mean(hits_d):.4f};"
+        f"{';'.join(detail)})"))
+
+    # leakage audit on a fuzzy-disabled run: every draft id must be a doc
+    # the tenant itself ingested via a full retrieval (the fuzzy channel is
+    # corpus-shared by design, so it is switched off to expose the cache
+    # partition alone)
+    cfg_nf = dataclasses.replace(cfg, use_fuzzy_validation=False,
+                                 use_fuzzy_enhancement=False)
+    leak_sched = ContinuousBatchingScheduler(
+        svc, cfg_nf, SchedulerConfig(n_tenants=n_tenants, **sc_kw),
+        index=multi.index)
+    rl = leak_sched.serve(mixed, None, seed=0, tenant_ids=tids)
+    own_docs = [set() for _ in range(n_tenants)]
+    for i in np.flatnonzero(rl.channels == "full"):
+        own_docs[int(tids[i])].update(
+            int(x) for x in rl.served_ids[i] if x >= 0)
+    leaked = 0
+    accepted = np.isin(rl.channels, ("draft", "reval", "shared"))
+    for i in np.flatnonzero(accepted):
+        t = int(tids[i])
+        leaked += sum(1 for x in rl.served_ids[i]
+                      if x >= 0 and int(x) not in own_docs[t])
+    sh = np.flatnonzero(rl.channels == "shared")
+    cross_followers = int(np.sum(
+        rl.tenant_ids[rl.leader_idx[sh]] != rl.tenant_ids[sh])) \
+        if len(sh) else 0
+    rows.append(row(
+        "tenants/verdict_no_leakage", 0.0,
+        f"{'PASS' if leaked == 0 and cross_followers == 0 else 'FAIL'}"
+        f"(leaked_ids={leaked};cross_followers={cross_followers};"
+        f"audited={int(accepted.sum())})"))
+
+    with open(out_path, "w") as f:
+        json.dump({
+            "n_tenants": n_tenants,
+            "n_queries": len(mixed),
+            "multi": {k: v for k, v in s.items()},
+            "per_tenant": per,
+            "verdicts": {"isolation": bool(iso_ok),
+                         "no_leakage": leaked == 0 and cross_followers == 0},
+        }, f, indent=2)
+    return rows
+
+
 if __name__ == "__main__":
     from benchmarks.common import fmt_rows
     ap = argparse.ArgumentParser(
@@ -298,6 +426,11 @@ if __name__ == "__main__":
                     help="share_tau calibration: follower doc-hit "
                          "degradation vs latency across tau multipliers; "
                          "sets DEFAULT_SHARE_TAU_MULT")
+    ap.add_argument("--sweep-tenants", action="store_true",
+                    help="tenant-partitioned cache under mixed "
+                         "Zipf-per-tenant traffic: per-tenant doc-hit vs "
+                         "dedicated single-tenant baselines + cross-tenant "
+                         "leakage audit; writes BENCH_sched_tenants.json")
     ap.add_argument("--skip-base", action="store_true",
                     help="run only the requested sweeps, not the base "
                          "throughput/DAR/sharing verdicts")
@@ -309,4 +442,6 @@ if __name__ == "__main__":
         rows += sweep_backend_shards()
     if args.sweep_share_tau:
         rows += sweep_share_tau()
+    if args.sweep_tenants:
+        rows += sweep_tenants()
     print(fmt_rows(rows))

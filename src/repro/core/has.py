@@ -44,6 +44,15 @@ host→device program launch):
     ``lax.scan`` — exactly equivalent to a sequential fold of
     ``cache_update`` over the unmasked rows, in one dispatch.
 
+Multi-tenant partitioning: :func:`init_tenant_states` stacks T independent
+stores into one ``[T, ...]`` pytree (per-tenant ``q_ptr``/``d_ptr``), and
+every batch entry point takes an optional ``tenant_ids [B]`` that gathers
+each query's slice / scatters each ingest row inside the SAME single
+jitted program (per-query group masking in the Pallas kernels, a dense
+tenant-compare mask in the XLA oracle).  ``intra_batch_share`` masks its
+pairwise homology matrix by tenant so leaders/followers never cross
+tenants.  T == 1 reduces bit-exactly to the unpartitioned path.
+
 The host-side serving loop (serving/engine.py) sequences these per query
 exactly as Algorithm 1; serving/batched.py and serving/scheduler.py drive
 the batch-native entry points.
@@ -111,6 +120,42 @@ def init_has_state(cfg: HasConfig, dtype=jnp.float32) -> HasState:
         doc_ids=jnp.full((cfg.doc_cap,), -1, jnp.int32),
         d_ptr=jnp.zeros((), jnp.int32),
     )
+
+
+def init_tenant_states(cfg: HasConfig, n_tenants: int,
+                       dtype=jnp.float32) -> HasState:
+    """Tenant-partitioned store: a stacked ``[T, ...]`` :class:`HasState`.
+
+    Every array gains a leading tenant axis (``q_ptr``/``d_ptr`` become
+    ``[T]``), so each tenant owns an independent query cache + doc-store
+    FIFO ring of the full per-tenant capacity (``h_max`` / ``doc_cap``
+    EACH).  One tenant's churn can never evict another's homology window,
+    and the tenant-batched entry points (:func:`speculate_batch` /
+    :func:`cache_update_batched` with ``tenant_ids``) gather/scatter each
+    query's slice inside one jitted program.  ``n_tenants == 1`` is
+    bit-exactly the single-tenant path on a ``[1, ...]`` view.
+    """
+    if n_tenants < 1:
+        raise ValueError(f"n_tenants must be >= 1, got {n_tenants}")
+    return HasState(
+        query_emb=jnp.zeros((n_tenants, cfg.h_max, cfg.d), dtype),
+        query_doc_ids=jnp.full((n_tenants, cfg.h_max, cfg.k), -1, jnp.int32),
+        query_valid=jnp.zeros((n_tenants, cfg.h_max), bool),
+        q_ptr=jnp.zeros((n_tenants,), jnp.int32),
+        doc_emb=jnp.zeros((n_tenants, cfg.doc_cap, cfg.d), dtype),
+        doc_ids=jnp.full((n_tenants, cfg.doc_cap), -1, jnp.int32),
+        d_ptr=jnp.zeros((n_tenants,), jnp.int32),
+    )
+
+
+def tenant_count(state: HasState) -> int:
+    """Number of tenant partitions (1 for an unstacked single-tenant state)."""
+    return state.q_ptr.shape[0] if state.q_ptr.ndim else 1
+
+
+def tenant_slice(state: HasState, t) -> HasState:
+    """View of one tenant's partition as an unstacked single-tenant state."""
+    return jax.tree_util.tree_map(lambda a: a[t], state)
 
 
 def default_backend() -> str:
@@ -248,15 +293,101 @@ def _speculate_batch_impl(cfg: HasConfig, state: HasState, index: IVFIndex,
             "homology": best, "matched_slot": slot}
 
 
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "backend", "interpret", "tile_c"))
+def _speculate_batch_tenant_impl(cfg: HasConfig, state: HasState,
+                                 index: IVFIndex, q_embs: jax.Array,
+                                 tenant_ids: jax.Array, backend: str,
+                                 interpret: bool, tile_c: int):
+    """Tenant-partitioned speculation: one program, per-query cache slices.
+
+    ``state`` is a stacked ``[T, ...]`` store (:func:`init_tenant_states`);
+    ``tenant_ids [B]`` selects each query's partition.  Both channels that
+    hold tenant data — the doc-store cache channel and the query-cache
+    validation table — flatten to ``[T*Dc]`` / ``[T*H]`` rows tagged with
+    their tenant, and the scoring masks rows whose tenant differs from the
+    query's (per-query group masking in the Pallas kernels; a dense
+    tenant-compare mask in the XLA oracle).  The fuzzy channel is the
+    corpus-derived IVF index, shared by construction (it holds no
+    per-tenant state).  T == 1 is bit-exact with the unpartitioned path.
+    """
+    t, dc = state.doc_ids.shape
+    h = state.query_valid.shape[1]
+    d = q_embs.shape[1]
+    nprobe = min(cfg.nprobe, index.n_buckets)
+    doc_emb = state.doc_emb.reshape(t * dc, d)
+    doc_ids = state.doc_ids.reshape(t * dc)
+    doc_tenant = jnp.repeat(jnp.arange(t, dtype=jnp.int32), dc)
+
+    if backend == "pallas":
+        from repro.kernels.homology_score import homology_score
+        from repro.kernels.ivf_scan import ivf_scan
+        from repro.kernels.topk_search import topk_search
+
+        s_c, slots = topk_search(q_embs, doc_emb, cfg.k, tile_c=tile_c,
+                                 valid=doc_ids >= 0, row_group=doc_tenant,
+                                 q_group=tenant_ids, interpret=interpret)
+        i_c = jnp.where(jnp.isfinite(s_c),
+                        doc_ids[jnp.maximum(slots, 0)], -1)
+        cscores = q_embs @ index.centroids.T                 # [B, C]
+        _, probe = jax.lax.top_k(cscores, nprobe)
+        s_f, i_f = ivf_scan(q_embs, probe.astype(jnp.int32),
+                            index.bucket_vecs, index.bucket_ids, cfg.k,
+                            interpret=interpret)
+    elif backend == "xla":
+        sc = q_embs @ doc_emb.T                              # [B, T*Dc]
+        ok = (doc_ids[None, :] >= 0) \
+            & (doc_tenant[None, :] == tenant_ids[:, None])
+        sc = jnp.where(ok, sc, -jnp.inf)
+        s_c, slots = jax.lax.top_k(sc, cfg.k)
+        i_c = jnp.where(jnp.isfinite(s_c), doc_ids[slots], -1)
+        s_f, i_f = ivf_search(index, q_embs, nprobe=cfg.nprobe, k=cfg.k)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    merge = jax.vmap(
+        lambda sa, ia, sb, ib: _dedup_merge(sa, ia, sb, ib, cfg.k))
+    s_val, i_val = merge(s_c, i_c, s_f, i_f) \
+        if cfg.use_fuzzy_validation else (s_c, i_c)
+    s_out, i_out = merge(s_c, i_c, s_f, i_f) \
+        if cfg.use_fuzzy_enhancement else (s_c, i_c)
+
+    qdi = state.query_doc_ids.reshape(t * h, cfg.k)
+    qvalid = state.query_valid.reshape(t * h)
+    row_tenant = jnp.repeat(jnp.arange(t, dtype=jnp.int32), h)
+    if backend == "pallas":
+        scores = homology_score(i_val, qdi, qvalid, row_group=row_tenant,
+                                q_group=tenant_ids, interpret=interpret)
+    else:
+        valid_b = qvalid[None, :] \
+            & (row_tenant[None, :] == tenant_ids[:, None])   # [B, T*H]
+        scores = jax.vmap(homology_scores, in_axes=(0, None, 0))(
+            i_val, qdi, valid_b)
+    # matched_slot is flat over [T*H]: tenant t's slot s is t*h_max + s
+    slot = jnp.argmax(scores, axis=1).astype(jnp.int32)      # [B]
+    best = jnp.take_along_axis(scores, slot[:, None], axis=1)[:, 0]
+    accept = best > jnp.float32(cfg.tau)
+
+    return {"draft_ids": i_out, "draft_scores": s_out,
+            "val_ids": i_val, "accept": accept,
+            "homology": best, "matched_slot": slot}
+
+
 def speculate_batch(cfg: HasConfig, state: HasState, index: IVFIndex,
                     q_embs: jax.Array, backend: str | None = None,
-                    interpret: bool | None = None, tile_c: int = 1024):
+                    interpret: bool | None = None, tile_c: int = 1024,
+                    tenant_ids: jax.Array | None = None):
     """Batch-native speculation: [B, d] queries, one device dispatch.
 
     ``backend=None`` auto-selects (:func:`default_backend`): the Pallas
     kernel pipeline on TPU, the XLA reference on CPU.  ``interpret=None``
     runs the kernels in interpret mode off-TPU.  Returns the same dict as
     :func:`speculate` with a leading batch axis on every entry.
+
+    ``tenant_ids [B]`` (optional) routes each query through its tenant's
+    partition of a stacked :func:`init_tenant_states` store — still one
+    device dispatch per batch; ``matched_slot`` is then flat over ``[T*H]``
+    (tenant t's slot s at ``t * h_max + s``).
     """
     if backend is None:
         backend = default_backend()
@@ -265,9 +396,20 @@ def speculate_batch(cfg: HasConfig, state: HasState, index: IVFIndex,
     elif interpret is None:
         interpret = jax.default_backend() != "tpu"
     dispatch.record("speculate_batch")
-    return _speculate_batch_impl(cfg, state, index, q_embs,
-                                 backend=backend, interpret=interpret,
-                                 tile_c=tile_c)
+    if tenant_ids is None:
+        if state.q_ptr.ndim != 0:
+            raise ValueError(
+                "stacked tenant state requires tenant_ids (or slice one "
+                "tenant out with tenant_slice)")
+        return _speculate_batch_impl(cfg, state, index, q_embs,
+                                     backend=backend, interpret=interpret,
+                                     tile_c=tile_c)
+    if state.q_ptr.ndim != 1:
+        raise ValueError("tenant_ids requires a stacked init_tenant_states "
+                         "state")
+    return _speculate_batch_tenant_impl(
+        cfg, state, index, q_embs, jnp.asarray(tenant_ids, jnp.int32),
+        backend=backend, interpret=interpret, tile_c=tile_c)
 
 
 # ---------------------------------------------------------------------------
@@ -276,7 +418,8 @@ def speculate_batch(cfg: HasConfig, state: HasState, index: IVFIndex,
 
 @jax.jit
 def intra_batch_share(val_ids: jax.Array, rejected: jax.Array,
-                      tau: jax.Array, pending: jax.Array | None = None):
+                      tau: jax.Array, pending: jax.Array | None = None,
+                      tenant_ids: jax.Array | None = None):
     """Greedy leader election among the rejected drafts of a full batch.
 
     The snapshot semantics of micro-batched serving cannot let intra-batch
@@ -299,6 +442,12 @@ def intra_batch_share(val_ids: jax.Array, rejected: jax.Array,
     systematically underestimates the queries' true homology (both sides
     are noisy subsets).
 
+    ``tenant_ids [B]`` (optional) masks the pairwise homology matrix so the
+    election never crosses tenants: a rejected query can only follow a
+    leader of its own tenant (isolation — one tenant's retrieved documents
+    are never served to another's queries), and within each tenant the
+    election is unchanged.
+
     Returns dict(is_leader [B] bool, leader [B] int32, share_score [B]):
     rows neither rejected nor pending keep leader[i] == i with is_leader
     False.
@@ -308,6 +457,11 @@ def intra_batch_share(val_ids: jax.Array, rejected: jax.Array,
         pending = jnp.zeros((b,), bool)
     # pairwise homology: scores[i, j] = s(q_i, q_j), 0 on invalid columns
     scores = homology_scores_batched(val_ids, val_ids, rejected | pending)
+    if tenant_ids is not None:
+        # cross-tenant pairs score -1 < any tau: never elected as leader
+        # for a follower of a different tenant
+        scores = jnp.where(tenant_ids[:, None] == tenant_ids[None, :],
+                           scores, -1.0)
     idx = jnp.arange(b)
     tau = jnp.float32(tau)
 
@@ -366,11 +520,44 @@ _cache_update_jit = functools.partial(
         _cache_update_impl)
 
 
+def _tenant_update(cfg: HasConfig, state: HasState, t, q_emb, full_ids,
+                   full_vecs) -> HasState:
+    """Apply one ``_cache_update_impl`` to tenant t's slice of a stacked
+    store (gather slice -> update -> scatter back; t may be traced)."""
+    sl = jax.tree_util.tree_map(lambda a: a[t], state)
+    sl = _cache_update_impl(cfg, sl, q_emb, full_ids, full_vecs)
+    return jax.tree_util.tree_map(lambda a, b: a.at[t].set(b), state, sl)
+
+
+_cache_update_tenant_jit = functools.partial(
+    jax.jit, static_argnames=("cfg",), donate_argnames=("state",))(
+        _tenant_update)
+
+
 def cache_update(cfg: HasConfig, state: HasState, q_emb: jax.Array,
-                 full_ids: jax.Array, full_vecs: jax.Array) -> HasState:
-    """Insert (q, D_full) into P and the new docs into C_c (FIFO, dedup)."""
+                 full_ids: jax.Array, full_vecs: jax.Array,
+                 tenant_id=None) -> HasState:
+    """Insert (q, D_full) into P and the new docs into C_c (FIFO, dedup).
+
+    ``tenant_id`` (optional) targets one partition of a stacked
+    :func:`init_tenant_states` store; all other partitions are untouched.
+    """
     dispatch.record("cache_update")
-    return _cache_update_jit(cfg, state, q_emb, full_ids, full_vecs)
+    if tenant_id is None:
+        if state.q_ptr.ndim != 0:
+            raise ValueError(
+                "stacked tenant state requires tenant_id (or slice one "
+                "tenant out with tenant_slice)")
+        return _cache_update_jit(cfg, state, q_emb, full_ids, full_vecs)
+    if state.q_ptr.ndim != 1:
+        raise ValueError("tenant_id requires a stacked init_tenant_states "
+                         "state")
+    if not 0 <= int(tenant_id) < state.q_ptr.shape[0]:
+        raise ValueError(
+            f"tenant_id {int(tenant_id)} out of range for "
+            f"{state.q_ptr.shape[0]} tenants")
+    return _cache_update_tenant_jit(cfg, state, jnp.int32(tenant_id),
+                                    q_emb, full_ids, full_vecs)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",),
@@ -390,9 +577,28 @@ def _cache_update_batched_jit(cfg: HasConfig, state: HasState,
     return state
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnames=("state",))
+def _cache_update_batched_tenant_jit(cfg: HasConfig, state: HasState,
+                                     q_embs: jax.Array, full_ids: jax.Array,
+                                     full_vecs: jax.Array, mask: jax.Array,
+                                     tenant_ids: jax.Array) -> HasState:
+    def body(st, xs):
+        q, ids, vecs, on, t = xs
+        st = jax.lax.cond(
+            on, lambda s: _tenant_update(cfg, s, t, q, ids, vecs),
+            lambda s: s, st)
+        return st, None
+
+    state, _ = jax.lax.scan(
+        body, state, (q_embs, full_ids, full_vecs, mask, tenant_ids))
+    return state
+
+
 def cache_update_batched(cfg: HasConfig, state: HasState, q_embs: jax.Array,
                          full_ids: jax.Array, full_vecs: jax.Array,
-                         mask: jax.Array | None = None) -> HasState:
+                         mask: jax.Array | None = None,
+                         tenant_ids: jax.Array | None = None) -> HasState:
     """Fold a whole full-retrieval batch into the cache in ONE dispatch.
 
     q_embs [B,d], full_ids [B,k], full_vecs [B,k,d]; ``mask [B]`` (optional)
@@ -401,32 +607,54 @@ def cache_update_batched(cfg: HasConfig, state: HasState, q_embs: jax.Array,
     batches.  Equivalent to folding :func:`cache_update` sequentially over
     the unmasked rows (a donated-buffer ``lax.scan`` of the same body), but
     costs one device dispatch instead of B.
+
+    ``tenant_ids [B]`` (optional) scatters each row's ingest into its
+    tenant's partition of a stacked :func:`init_tenant_states` store —
+    equivalent to folding :func:`cache_update` with ``tenant_id`` per row,
+    still in one dispatch.
     """
     if mask is None:
         mask = jnp.ones((q_embs.shape[0],), bool)
     dispatch.record("cache_update_batched")
-    return _cache_update_batched_jit(cfg, state, q_embs, full_ids,
-                                     full_vecs, mask)
+    if tenant_ids is None:
+        if state.q_ptr.ndim != 0:
+            raise ValueError(
+                "stacked tenant state requires tenant_ids (or slice one "
+                "tenant out with tenant_slice)")
+        return _cache_update_batched_jit(cfg, state, q_embs, full_ids,
+                                         full_vecs, mask)
+    if state.q_ptr.ndim != 1:
+        raise ValueError("tenant_ids requires a stacked init_tenant_states "
+                         "state")
+    return _cache_update_batched_tenant_jit(
+        cfg, state, q_embs, full_ids, full_vecs, mask,
+        jnp.asarray(tenant_ids, jnp.int32))
 
 
 def cache_update_chunked(cfg: HasConfig, state: HasState, q_embs, full_ids,
-                         full_vecs=None, *, corpus=None,
-                         chunk: int) -> HasState:
+                         full_vecs=None, *, corpus=None, chunk: int,
+                         tenant_ids=None) -> HasState:
     """Fold N host-side update rows through ``cache_update_batched``.
 
     The one pad-to-fixed-shape helper shared by every serving layer
     (scheduler ingest, batched-engine reject ingest, warm-standby delta
-    replay): rows are chunked to ``chunk``, each chunk zero-padded and
-    masked so a single compiled shape serves any N.  ``q_embs [N, d]`` and
-    ``full_ids [N, k]`` are host arrays/lists; pass either ``full_vecs
-    [N, k, d]`` explicitly or a device ``corpus`` to gather them from by
-    id on device (one gather per chunk, no host round-trip).
+    replay): rows are chunked to ``chunk``, and EVERY chunk — including the
+    final partial one — is zero-padded to ``[chunk, ...]`` with masked rows
+    so a single compiled shape serves any N (the tail chunk never jits a
+    second shape; tests assert this via the ``core/dispatch`` probe plus
+    the jit cache size).  ``q_embs [N, d]`` and ``full_ids [N, k]`` are
+    host arrays/lists; pass either ``full_vecs [N, k, d]`` explicitly or a
+    device ``corpus`` to gather them from by id on device (one gather per
+    chunk, no host round-trip).  ``tenant_ids [N]`` (optional) scatters
+    each row into its tenant's partition of a stacked store.
     """
     q_embs = np.asarray(q_embs, np.float32)
     full_ids = np.asarray(full_ids, np.int32)
     n, k, d = len(q_embs), full_ids.shape[1], q_embs.shape[1]
     if full_vecs is not None:
         full_vecs = np.asarray(full_vecs, np.float32)
+    if tenant_ids is not None:
+        tenant_ids = np.asarray(tenant_ids, np.int32)
     for i0 in range(0, n, chunk):
         m = min(chunk, n - i0)
         embs = np.zeros((chunk, d), np.float32)
@@ -442,8 +670,14 @@ def cache_update_chunked(cfg: HasConfig, state: HasState, q_embs, full_ids,
             vecs = np.zeros((chunk, k, d), np.float32)
             vecs[:m] = full_vecs[i0:i0 + m]
             vecs = jnp.asarray(vecs)
+        tids = None
+        if tenant_ids is not None:
+            tids = np.zeros((chunk,), np.int32)     # pad rows: tenant 0,
+            tids[:m] = tenant_ids[i0:i0 + m]        # masked off anyway
+            tids = jnp.asarray(tids)
         state = cache_update_batched(cfg, state, jnp.asarray(embs), ids_j,
-                                     vecs, jnp.asarray(mask))
+                                     vecs, jnp.asarray(mask),
+                                     tenant_ids=tids)
     return state
 
 

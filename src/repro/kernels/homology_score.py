@@ -14,7 +14,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _homology_kernel(draft_ref, cache_ref, valid_ref, out_ref, *, k: int):
+def _homology_kernel(draft_ref, cache_ref, valid_ref, *rest, k: int,
+                     grouped: bool):
+    if grouped:
+        row_group_ref, q_group_ref, out_ref = rest
+    else:
+        (out_ref,), row_group_ref, q_group_ref = rest, None, None
     draft = draft_ref[...]                                 # [B, k]
     cache = cache_ref[...]                                 # [TILE_H, k]
     valid = valid_ref[...]                                 # [TILE_H]
@@ -23,16 +28,33 @@ def _homology_kernel(draft_ref, cache_ref, valid_ref, out_ref, *, k: int):
     eq &= (draft[:, None, :, None] >= 0)
     overlap = jnp.sum(jnp.any(eq, axis=3).astype(jnp.float32), axis=2)
     s = overlap / k
-    out_ref[...] = jnp.where(valid[None, :], s, 0.0)
+    ok = valid[None, :]
+    if grouped:
+        # partitioned table: cached query row i only scores against drafts
+        # of its own group (tenant) — cross-tenant rows read as 0 overlap
+        ok &= row_group_ref[...][None, :] == q_group_ref[...][:, None]
+    out_ref[...] = jnp.where(ok, s, 0.0)
 
 
 @functools.partial(jax.jit, static_argnames=("tile_h", "interpret"))
 def homology_score(draft_ids: jax.Array, cache_doc_ids: jax.Array,
                    cache_valid: jax.Array, tile_h: int = 512,
+                   row_group: jax.Array | None = None,
+                   q_group: jax.Array | None = None,
                    interpret: bool = False):
-    """draft [B,k] int32, cache [H,k] int32, valid [H] -> scores [B,H] f32."""
+    """draft [B,k] int32, cache [H,k] int32, valid [H] -> scores [B,H] f32.
+
+    ``row_group`` ([H] int32) / ``q_group`` ([B] int32, both or neither)
+    partition the cached-query table: row i contributes a non-zero score
+    for draft b only when ``row_group[i] == q_group[b]`` (multi-tenant
+    validation — every tenant's query-cache slice scores in the same
+    kernel launch without cross-tenant re-identification).
+    """
     b, k = draft_ids.shape
     h = cache_doc_ids.shape[0]
+    if (row_group is None) != (q_group is None):
+        raise ValueError("row_group and q_group must be passed together")
+    grouped = row_group is not None
     n_tiles = pl.cdiv(h, tile_h)
     pad = n_tiles * tile_h - h
     if pad:
@@ -40,17 +62,29 @@ def homology_score(draft_ids: jax.Array, cache_doc_ids: jax.Array,
             [cache_doc_ids, jnp.full((pad, k), -2, jnp.int32)], axis=0)
         cache_valid = jnp.concatenate(
             [cache_valid, jnp.zeros((pad,), bool)], axis=0)
+        if grouped:
+            row_group = jnp.concatenate(
+                [row_group, jnp.full((pad,), -1, jnp.int32)])
+
+    in_specs = [
+        pl.BlockSpec((b, k), lambda i: (0, 0)),
+        pl.BlockSpec((tile_h, k), lambda i: (i, 0)),
+        pl.BlockSpec((tile_h,), lambda i: (i,)),
+    ]
+    operands = [draft_ids, cache_doc_ids, cache_valid]
+    if grouped:
+        in_specs += [
+            pl.BlockSpec((tile_h,), lambda i: (i,)),       # row groups
+            pl.BlockSpec((b,), lambda i: (0,)),            # query groups
+        ]
+        operands += [row_group.astype(jnp.int32), q_group.astype(jnp.int32)]
 
     out = pl.pallas_call(
-        functools.partial(_homology_kernel, k=k),
+        functools.partial(_homology_kernel, k=k, grouped=grouped),
         grid=(n_tiles,),
-        in_specs=[
-            pl.BlockSpec((b, k), lambda i: (0, 0)),
-            pl.BlockSpec((tile_h, k), lambda i: (i, 0)),
-            pl.BlockSpec((tile_h,), lambda i: (i,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((b, tile_h), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((b, n_tiles * tile_h), jnp.float32),
         interpret=interpret,
-    )(draft_ids, cache_doc_ids, cache_valid)
+    )(*operands)
     return out[:, :h]

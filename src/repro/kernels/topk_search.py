@@ -22,8 +22,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _topk_kernel(q_ref, c_ref, valid_ref, vals_ref, idx_ref, *, k: int,
-                 tile_c: int, n_corpus: int):
+def _topk_kernel(q_ref, c_ref, valid_ref, *rest, k: int, tile_c: int,
+                 n_corpus: int, grouped: bool):
+    if grouped:
+        row_group_ref, q_group_ref, vals_ref, idx_ref = rest
+    else:
+        (vals_ref, idx_ref), row_group_ref, q_group_ref = rest, None, None
     step = pl.program_id(0)
     b = q_ref.shape[0]
 
@@ -42,8 +46,12 @@ def _topk_kernel(q_ref, c_ref, valid_ref, vals_ref, idx_ref, *, k: int,
     col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
     # mask the tail tile's out-of-range columns and invalid corpus rows
     # (empty doc-store ring slots when scanning a HaS cache channel)
-    scores = jnp.where((base + col < n_corpus) & valid[None, :],
-                       scores, -jnp.inf)
+    ok = (base + col < n_corpus) & valid[None, :]
+    if grouped:
+        # partitioned scan: row i may only win for queries of its group
+        # (tenant) — one extra [B, TILE_C] int compare per tile
+        ok &= row_group_ref[...][None, :] == q_group_ref[...][:, None]
+    scores = jnp.where(ok, scores, -jnp.inf)
     kcol = jax.lax.broadcasted_iota(jnp.int32, (b, k), 1)
 
     def merge(i, carry):
@@ -68,15 +76,28 @@ def _topk_kernel(q_ref, c_ref, valid_ref, vals_ref, idx_ref, *, k: int,
 @functools.partial(jax.jit, static_argnames=("k", "tile_c", "interpret"))
 def topk_search(queries: jax.Array, corpus: jax.Array, k: int,
                 tile_c: int = 1024, valid: jax.Array | None = None,
+                row_group: jax.Array | None = None,
+                q_group: jax.Array | None = None,
                 interpret: bool = False):
     """queries [B,d], corpus [N,d] -> (vals [B,k] desc-sorted, idx [B,k]).
 
     ``valid`` ([N] bool, optional) masks corpus rows out of the result —
     used by the HaS cache channel, whose doc-store ring contains empty
     slots (doc_ids < 0) that must never win a top-k position.
+
+    ``row_group`` ([N] int32) / ``q_group`` ([B] int32, both or neither)
+    partition the scan: corpus row i may only win a top-k position for
+    query b when ``row_group[i] == q_group[b]`` — the multi-tenant cache
+    channel, where every tenant's doc-store slice scans in the SAME kernel
+    launch but rows never cross tenants.  The group ids stream with the
+    corpus tiles, so the partitioned scan stays one program launch with one
+    extra [B, TILE_C] compare per tile.
     """
     n, d = corpus.shape
     b = queries.shape[0]
+    if (row_group is None) != (q_group is None):
+        raise ValueError("row_group and q_group must be passed together")
+    grouped = row_group is not None
     if valid is None:
         valid = jnp.ones((n,), bool)
     n_tiles = pl.cdiv(n, tile_c)
@@ -85,15 +106,28 @@ def topk_search(queries: jax.Array, corpus: jax.Array, k: int,
         corpus = jnp.concatenate(
             [corpus, jnp.zeros((pad, d), corpus.dtype)], axis=0)
         valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
+        if grouped:
+            row_group = jnp.concatenate(
+                [row_group, jnp.full((pad,), -1, jnp.int32)])
+
+    in_specs = [
+        pl.BlockSpec((b, d), lambda i: (0, 0)),        # queries resident
+        pl.BlockSpec((tile_c, d), lambda i: (i, 0)),   # corpus stream
+        pl.BlockSpec((tile_c,), lambda i: (i,)),       # validity stream
+    ]
+    operands = [queries, corpus, valid]
+    if grouped:
+        in_specs += [
+            pl.BlockSpec((tile_c,), lambda i: (i,)),   # row groups stream
+            pl.BlockSpec((b,), lambda i: (0,)),        # query groups resident
+        ]
+        operands += [row_group.astype(jnp.int32), q_group.astype(jnp.int32)]
 
     vals, idx = pl.pallas_call(
-        functools.partial(_topk_kernel, k=k, tile_c=tile_c, n_corpus=n),
+        functools.partial(_topk_kernel, k=k, tile_c=tile_c, n_corpus=n,
+                          grouped=grouped),
         grid=(n_tiles,),
-        in_specs=[
-            pl.BlockSpec((b, d), lambda i: (0, 0)),        # queries resident
-            pl.BlockSpec((tile_c, d), lambda i: (i, 0)),   # corpus stream
-            pl.BlockSpec((tile_c,), lambda i: (i,)),       # validity stream
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((b, k), lambda i: (0, 0)),        # running top-k
             pl.BlockSpec((b, k), lambda i: (0, 0)),
@@ -101,7 +135,7 @@ def topk_search(queries: jax.Array, corpus: jax.Array, k: int,
         out_shape=[jax.ShapeDtypeStruct((b, k), jnp.float32),
                    jax.ShapeDtypeStruct((b, k), jnp.int32)],
         interpret=interpret,
-    )(queries, corpus, valid)
+    )(*operands)
     # final K-element sort outside the kernel
     order = jnp.argsort(-vals, axis=1)
     return jnp.take_along_axis(vals, order, axis=1), \

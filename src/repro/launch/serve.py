@@ -9,6 +9,13 @@ row-shards the corpus over ``--shards`` mesh workers
 dispatch slots for the scheduler's worker pool), ``replica`` routes through
 ``--workers`` warm standbys whose delta logs are reconciled on every cache
 ingest.
+
+Multi-tenant serving: ``--tenants N`` partitions the HaS cache into N
+tenant slices (core/has.py::init_tenant_states; per-tenant capacity
+``--h-max`` EACH) and assigns each query a tenant drawn from a Zipf
+popularity law over tenants (``--tenant-zipf A``; 0 = uniform) — the
+mixed-traffic shape the partitioning isolates.  Supported by the ``has``
+and ``crag`` engines (the baselines have no per-tenant cache state).
 """
 from __future__ import annotations
 
@@ -16,7 +23,7 @@ import argparse
 import tempfile
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--queries", type=int, default=2000)
     ap.add_argument("--dataset", default="granola",
@@ -31,17 +38,43 @@ def main() -> None:
                          "scan, or warm-standby replicas")
     ap.add_argument("--shards", type=int, default=4,
                     help="corpus shards for --retrieval-backend sharded")
-    ap.add_argument("--workers", type=int, default=2,
+    ap.add_argument("--workers", type=int, default=None,
                     help="concurrent cloud dispatch slots (sharded) / "
-                         "standby replicas (replica)")
+                         "standby replicas (replica); default 2.  Only "
+                         "meaningful with a non-flat --retrieval-backend")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="tenant partitions of the HaS cache (--h-max "
+                         "capacity EACH); queries are tagged per tenant")
+    ap.add_argument("--tenant-zipf", type=float, default=1.1,
+                    help="Zipf exponent of the tenant popularity law "
+                         "(0 = uniform traffic across tenants)")
     ap.add_argument("--tau", type=float, default=0.2)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--h-max", type=int, default=5000)
     ap.add_argument("--entities", type=int, default=20000)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
+
+    # fail fast on invalid combinations instead of a downstream shape error
+    if args.shards < 1:
+        ap.error(f"--shards must be >= 1 (got {args.shards})")
+    if args.workers is not None and args.workers < 1:
+        ap.error(f"--workers must be >= 1 (got {args.workers})")
+    if args.workers is not None and args.retrieval_backend == "flat":
+        ap.error("--workers only applies to --retrieval-backend "
+                 "sharded|replica (the flat backend is one in-process "
+                 "worker by definition)")
+    if args.tenants < 1:
+        ap.error(f"--tenants must be >= 1 (got {args.tenants})")
+    if args.tenant_zipf < 0:
+        ap.error(f"--tenant-zipf must be >= 0 (got {args.tenant_zipf})")
+    if args.tenants > 1 and args.engine not in ("has", "crag"):
+        ap.error(f"--tenants requires --engine has|crag (the "
+                 f"'{args.engine}' engine has no per-tenant cache state)")
+    workers = 2 if args.workers is None else args.workers
 
     import jax.numpy as jnp
+    import numpy as np
 
     from repro.core.has import HasConfig
     from repro.data.synthetic import DATASETS, SyntheticWorld, WorldConfig
@@ -59,7 +92,7 @@ def main() -> None:
     if args.retrieval_backend == "sharded":
         backend = ShardedMeshBackend(corpus, args.k, latency,
                                      n_shards=args.shards,
-                                     n_workers=args.workers)
+                                     n_workers=workers)
     elif args.retrieval_backend == "replica":
         from repro.checkpoint import CheckpointManager
         from repro.serving.replication import WarmStandby
@@ -68,8 +101,8 @@ def main() -> None:
         standbys = [
             WarmStandby(cfg0, CheckpointManager(tempfile.mkdtemp(
                 prefix=f"has-standby{i}-")), snapshot_every=10_000,
-                max_lag=50_000)
-            for i in range(max(1, args.workers))]
+                max_lag=50_000, n_tenants=args.tenants)
+            for i in range(workers)]
         backend = ReplicaBackend(
             LocalFlatBackend(corpus, args.k, latency), standbys, corpus)
     else:
@@ -80,10 +113,21 @@ def main() -> None:
         args.queries, pattern=ds["pattern"], zipf_a=ds["zipf_a"],
         p_uncovered=ds["p_uncovered"], seed=args.seed + 1)
 
+    if args.tenants > 1:
+        # tenant popularity ~ Zipf over tenant ranks (0 -> uniform traffic)
+        ranks = np.arange(1, args.tenants + 1, dtype=np.float64)
+        p = ranks ** -args.tenant_zipf
+        p /= p.sum()
+        trng = np.random.default_rng(args.seed + 2)
+        tenant_of = trng.choice(args.tenants, size=len(queries), p=p)
+        for q, t in zip(queries, tenant_of):
+            q["tenant"] = int(t)
+
     if args.engine == "has":
         engine = HasEngine(svc, HasConfig(
             k=args.k, tau=args.tau, h_max=args.h_max,
-            nprobe=16, n_buckets=2048, d=world.cfg.d))
+            nprobe=16, n_buckets=2048, d=world.cfg.d),
+            n_tenants=args.tenants)
     elif args.engine == "full":
         engine = FullRetrievalEngine(svc)
     elif args.engine in ("proximity", "saferadius", "mincache"):
@@ -91,16 +135,27 @@ def main() -> None:
     elif args.engine == "crag":
         engine = CRAGEngine(svc, HasConfig(
             k=args.k, tau=args.tau, h_max=args.h_max,
-            nprobe=16, n_buckets=2048, d=world.cfg.d))
+            nprobe=16, n_buckets=2048, d=world.cfg.d),
+            n_tenants=args.tenants)
     else:
         engine = ANNSEngine(svc, method=args.engine)
 
     result = engine.serve(queries, dataset=args.dataset, seed=args.seed)
     print(f"[serve] engine={args.engine} dataset={args.dataset} "
           f"retrieval-backend={args.retrieval_backend} "
-          f"(n_workers={svc.backend.n_workers})")
+          f"(n_workers={svc.backend.n_workers}) tenants={args.tenants}")
     for k, v in result.summary().items():
         print(f"  {k:20s} {v:.4f}")
+    if args.tenants > 1:
+        tids = np.array([q["tenant"] for q in queries])
+        print(f"  tenant histogram     "
+              f"{np.bincount(tids, minlength=args.tenants).tolist()}")
+        for t in range(args.tenants):
+            m = tids == t
+            if m.any():
+                print(f"  tenant[{t}] n={int(m.sum()):5d} "
+                      f"dar={float(result.accepts[m].mean()):.4f} "
+                      f"doc_hit={float(result.doc_hits[m].mean()):.4f}")
 
 
 if __name__ == "__main__":

@@ -65,8 +65,13 @@ class FullRetrievalBackend(Protocol):
         ...
 
     def on_ingest(self, q_embs: np.ndarray, full_ids: np.ndarray,
-                  state) -> None:
-        """Cache-ingest notification (rows just folded into the HaS cache)."""
+                  state, tenant_ids: np.ndarray | None = None) -> None:
+        """Cache-ingest notification (rows just folded into the HaS cache).
+
+        ``tenant_ids [N]`` (optional) tags each row with its tenant
+        partition so replica-style backends keep per-tenant delta logs
+        (None == the single-tenant path).
+        """
         ...
 
 
@@ -75,7 +80,7 @@ class _BackendBase:
 
     n_workers: int = 1
 
-    def on_ingest(self, q_embs, full_ids, state) -> None:
+    def on_ingest(self, q_embs, full_ids, state, tenant_ids=None) -> None:
         return None
 
 
@@ -169,12 +174,13 @@ class ReplicaBackend(_BackendBase):
     def latency(self, batch: int) -> float:
         return self.inner.latency(batch)
 
-    def on_ingest(self, q_embs, full_ids, state) -> None:
+    def on_ingest(self, q_embs, full_ids, state, tenant_ids=None) -> None:
         q_embs = np.asarray(q_embs, np.float32)
         full_ids = np.asarray(full_ids, np.int32)
         vecs = self._corpus_np[full_ids]                  # [N, k, d]
         for sb in self.standbys:
-            sb.record_batch(q_embs, full_ids, vecs, state)
+            sb.record_batch(q_embs, full_ids, vecs, state,
+                            tenant_ids=tenant_ids)
 
 
 class RetrievalService:

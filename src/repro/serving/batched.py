@@ -34,34 +34,45 @@ import numpy as np
 
 from repro.core.has import (HasConfig, cache_update_batched,
                             cache_update_chunked, init_has_state,
-                            speculate_batch)
+                            init_tenant_states, speculate_batch)
 from repro.retrieval.ivf import build_ivf
 from repro.serving.engine import RetrievalService, ServeLoop, fuzzy_scope
 
 
 class BatchedHasEngine(ServeLoop):
+    """``n_tenants > 1`` partitions the snapshot cache: each micro-batch row
+    speculates against and ingests into its own tenant's slice (queries
+    carry a ``"tenant"`` key), all still in the same three fused dispatches
+    per micro-batch.  ``n_tenants == 1`` is the historical path."""
+
     def __init__(self, service: RetrievalService, cfg: HasConfig | None = None,
                  batch_size: int = 32, seed: int = 0,
-                 backend: str | None = None):
+                 backend: str | None = None, n_tenants: int = 1):
         super().__init__(service)
         self.cfg = cfg or HasConfig(k=service.k, d=service.world.cfg.d)
-        self.state = init_has_state(self.cfg)
+        self.n_tenants = max(1, int(n_tenants))
+        self.state = (init_has_state(self.cfg) if self.n_tenants == 1
+                      else init_tenant_states(self.cfg, self.n_tenants))
         self.index = build_ivf(service.corpus, self.cfg.n_buckets, seed=seed)
         self.batch_size = batch_size
         self.backend = backend                  # None -> auto per platform
         self.fuzzy_scope = fuzzy_scope(self.cfg, self.index)
         # warmup the fused programs at the shapes the loop uses
         z = jnp.zeros((batch_size, self.s.world.cfg.d))
+        warm_tids = (None if self.n_tenants == 1
+                     else jnp.zeros((batch_size,), jnp.int32))
         jax.block_until_ready(
             speculate_batch(self.cfg, self.state, self.index, z,
-                            backend=backend))
+                            backend=backend, tenant_ids=warm_tids))
         service.backend.search(z)[0].block_until_ready()
-        scratch = init_has_state(self.cfg)      # donated, then discarded
+        scratch = (init_has_state(self.cfg) if self.n_tenants == 1
+                   else init_tenant_states(self.cfg, self.n_tenants))
         jax.block_until_ready(cache_update_batched(
             self.cfg, scratch, z,
             jnp.zeros((batch_size, self.cfg.k), jnp.int32),
             jnp.zeros((batch_size, self.cfg.k, self.s.world.cfg.d)),
-            jnp.zeros((batch_size,), bool)).q_ptr)
+            jnp.zeros((batch_size,), bool),
+            tenant_ids=warm_tids).q_ptr)        # donated, then discarded
 
     def _step_batch(self, group, rng, dataset):
         lat_model = self.s.latency
@@ -70,9 +81,21 @@ class BatchedHasEngine(ServeLoop):
         if len(group) < bs:                           # pad the tail batch
             pad = np.zeros((bs - len(group), embs.shape[1]), np.float32)
             embs = np.concatenate([embs, pad])
+        if self.n_tenants == 1:
+            tids, spec_tids = None, None
+        else:
+            tags = [int(q.get("tenant", 0)) for q in group]
+            if any(not 0 <= t < self.n_tenants for t in tags):
+                raise ValueError(
+                    f"tenant tags {sorted(set(tags))} out of range for "
+                    f"n_tenants={self.n_tenants}")
+            tids = np.zeros(bs, np.int32)             # pad rows: tenant 0
+            tids[:len(group)] = tags
+            spec_tids = jnp.asarray(tids)
         t0 = time.perf_counter()
         out = speculate_batch(self.cfg, self.state, self.index,
-                              jnp.asarray(embs), backend=self.backend)
+                              jnp.asarray(embs), backend=self.backend,
+                              tenant_ids=spec_tids)
         jax.block_until_ready(out)
         t_spec = (time.perf_counter() - t0) / max(len(group), 1)
         accepts = np.asarray(out["accept"])[:len(group)]
@@ -85,13 +108,15 @@ class BatchedHasEngine(ServeLoop):
             # one coalesced dispatch on the pluggable full-retrieval backend
             ids_full, t_full = self.s.full_search_batch(embs[rej])
             # fold the whole rejected batch into the cache in ONE dispatch
-            # (padded to the compiled batch_size shape; mask drops the pad)
+            # (padded to the compiled batch_size shape; mask drops the pad),
+            # each row scattered into its tenant's partition
+            rej_tids = None if tids is None else tids[rej]
             self.state = cache_update_chunked(
                 self.cfg, self.state, embs[rej], ids_full.astype(np.int32),
-                corpus=self.s.corpus, chunk=bs)
+                corpus=self.s.corpus, chunk=bs, tenant_ids=rej_tids)
             # replica-style backends mirror the ingest onto standby logs
             self.s.backend.on_ingest(embs[rej], ids_full.astype(np.int32),
-                                     self.state)
+                                     self.state, tenant_ids=rej_tids)
 
         fuzzy_t = lat_model.scan_time(
             lat_model.target_corpus * self.fuzzy_scope * 2.0)

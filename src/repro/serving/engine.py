@@ -37,7 +37,7 @@ from repro.core.baselines import (CRAGEvaluator, ReuseState, init_reuse_state,
                                   proximity_match, reuse_insert,
                                   saferadius_match)
 from repro.core.has import (HasConfig, cache_update, init_has_state,
-                            speculate_batch)
+                            init_tenant_states, speculate_batch)
 from repro.data.synthetic import SyntheticWorld, simulate_response_accuracy
 from repro.retrieval.ivf import (IVFIndex, build_ivf, ivf_search,
                                  subset_index)
@@ -215,15 +215,24 @@ class ANNSEngine(ServeLoop):
 
 
 class HasEngine(ServeLoop):
-    """The paper's system (Algorithm 1) with optional ANNS fallback (♦)."""
+    """The paper's system (Algorithm 1) with optional ANNS fallback (♦).
+
+    ``n_tenants > 1`` partitions the cache (``init_tenant_states``): each
+    query routes through its tenant's slice (``step(..., tenant=t)``, or a
+    ``"tenant"`` key on the query dict), rejects ingest only into that
+    partition, and replica backends receive the tenant tag on every
+    ingest.  ``n_tenants == 1`` is the historical unpartitioned path.
+    """
 
     def __init__(self, service: RetrievalService, cfg: HasConfig | None = None,
                  fallback: ANNSEngine | None = None,
                  fuzzy_fraction: float = 1.0, seed: int = 0,
-                 backend: str | None = None):
+                 backend: str | None = None, n_tenants: int = 1):
         super().__init__(service)
         self.cfg = cfg or HasConfig(k=service.k, d=service.world.cfg.d)
-        self.state = init_has_state(self.cfg)
+        self.n_tenants = max(1, int(n_tenants))
+        self.state = (init_has_state(self.cfg) if self.n_tenants == 1
+                      else init_tenant_states(self.cfg, self.n_tenants))
         index = build_ivf(service.corpus, self.cfg.n_buckets, seed=seed)
         self.index = subset_index(index, fuzzy_fraction)
         self.fallback = fallback
@@ -232,8 +241,20 @@ class HasEngine(ServeLoop):
         # warmup the fused speculation program at the sequential shape B=1
         z = jnp.zeros((1, self.s.world.cfg.d))
         out = speculate_batch(self.cfg, self.state, self.index, z,
-                              backend=backend)
+                              backend=backend,
+                              tenant_ids=self._tids(0))
         jax.block_until_ready(out)
+
+    def _tids(self, tenant: int):
+        """tenant_ids for a B=1 speculation (None on the legacy path);
+        rejects out-of-range tags up front — a silently-dropped scatter
+        would otherwise leave the tenant's cache forever cold."""
+        if not 0 <= tenant < self.n_tenants:
+            raise ValueError(
+                f"tenant {tenant} out of range for n_tenants="
+                f"{self.n_tenants}")
+        return (None if self.n_tenants == 1
+                else jnp.full((1,), tenant, jnp.int32))
 
     def _fuzzy_time(self) -> float:
         """Analytic fuzzy-channel scan time at the target corpus scale."""
@@ -241,12 +262,13 @@ class HasEngine(ServeLoop):
         return lat.scan_time(lat.target_corpus * self.fuzzy_scope * 2.0
                              + self.cfg.n_buckets)
 
-    def step(self, q_emb: np.ndarray):
+    def step(self, q_emb: np.ndarray, tenant: int = 0):
         """Returns (ids, accept, latency_s, homology)."""
         lat = self.s.latency.sample_edge()
         t0 = time.perf_counter()
         out = speculate_batch(self.cfg, self.state, self.index,
-                              jnp.asarray(q_emb)[None], backend=self.backend)
+                              jnp.asarray(q_emb)[None], backend=self.backend,
+                              tenant_ids=self._tids(tenant))
         jax.block_until_ready(out)
         # measured edge compute (cache channel + validation at true scale)
         # + analytic fuzzy scan extrapolated to the target corpus
@@ -266,16 +288,21 @@ class HasEngine(ServeLoop):
         t0 = time.perf_counter()
         self.state = cache_update(self.cfg, self.state, jnp.asarray(q_emb),
                                   jnp.asarray(ids.astype(np.int32)),
-                                  jnp.asarray(vecs))
+                                  jnp.asarray(vecs),
+                                  tenant_id=(None if self.n_tenants == 1
+                                             else tenant))
         jax.block_until_ready(self.state.q_ptr)
         lat += time.perf_counter() - t0
         # replica-style backends mirror the ingest onto standby delta logs
-        self.s.backend.on_ingest(np.asarray(q_emb)[None],
-                                 ids.astype(np.int32)[None], self.state)
+        self.s.backend.on_ingest(
+            np.asarray(q_emb)[None], ids.astype(np.int32)[None], self.state,
+            tenant_ids=(None if self.n_tenants == 1
+                        else np.array([tenant], np.int32)))
         return ids, False, lat, float(out["homology"][0])
 
     def _step(self, q, rng, dataset):
-        ids, accept, lat, _ = self.step(q["emb"])
+        ids, accept, lat, _ = self.step(q["emb"],
+                                        tenant=int(q.get("tenant", 0)))
         return ids, accept, lat
 
 
@@ -328,16 +355,19 @@ class CRAGEngine(HasEngine):
     """HaS pipeline with homology validation replaced by an LLM evaluator."""
 
     def __init__(self, service: RetrievalService, cfg: HasConfig | None = None,
-                 evaluator: CRAGEvaluator | None = None, seed: int = 0):
-        super().__init__(service, cfg, seed=seed)
+                 evaluator: CRAGEvaluator | None = None, seed: int = 0,
+                 n_tenants: int = 1):
+        super().__init__(service, cfg, seed=seed, n_tenants=n_tenants)
         self.evaluator = evaluator or CRAGEvaluator()
 
     def _step(self, q, rng, dataset):
+        tenant = int(q.get("tenant", 0))
         lat = self.s.latency.sample_edge()
         t0 = time.perf_counter()
         out = speculate_batch(self.cfg, self.state, self.index,
                               jnp.asarray(q["emb"])[None],
-                              backend=self.backend)
+                              backend=self.backend,
+                              tenant_ids=self._tids(tenant))
         jax.block_until_ready(out)
         lat += (time.perf_counter() - t0) + self._fuzzy_time()
         draft = np.asarray(out["draft_ids"][0])
@@ -350,7 +380,11 @@ class CRAGEngine(HasEngine):
         lat += self.s.latency.sample_cloud() + t
         self.state = cache_update(
             self.cfg, self.state, jnp.asarray(q["emb"]),
-            jnp.asarray(ids.astype(np.int32)), jnp.asarray(vecs))
-        self.s.backend.on_ingest(np.asarray(q["emb"])[None],
-                                 ids.astype(np.int32)[None], self.state)
+            jnp.asarray(ids.astype(np.int32)), jnp.asarray(vecs),
+            tenant_id=(None if self.n_tenants == 1 else tenant))
+        self.s.backend.on_ingest(
+            np.asarray(q["emb"])[None], ids.astype(np.int32)[None],
+            self.state,
+            tenant_ids=(None if self.n_tenants == 1
+                        else np.array([tenant], np.int32)))
         return ids, False, lat

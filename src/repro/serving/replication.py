@@ -34,7 +34,7 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.core.has import (HasConfig, HasState, cache_update_chunked,
-                            init_has_state)
+                            init_has_state, init_tenant_states)
 
 
 def snapshot(mgr: CheckpointManager, step: int, state: HasState,
@@ -46,8 +46,10 @@ def snapshot(mgr: CheckpointManager, step: int, state: HasState,
     mgr.save(step, tree, blocking=blocking)
 
 
-def restore(mgr: CheckpointManager, cfg: HasConfig) -> tuple[int, HasState] | None:
-    template = init_has_state(cfg)
+def restore(mgr: CheckpointManager, cfg: HasConfig,
+            n_tenants: int = 1) -> tuple[int, HasState] | None:
+    template = (init_has_state(cfg) if n_tenants == 1
+                else init_tenant_states(cfg, n_tenants))
     tree = {"query_emb": template.query_emb,
             "query_doc_ids": template.query_doc_ids,
             "query_valid": template.query_valid, "q_ptr": template.q_ptr,
@@ -69,60 +71,114 @@ def restore(mgr: CheckpointManager, cfg: HasConfig) -> tuple[int, HasState] | No
 
 @dataclasses.dataclass
 class WarmStandby:
-    """Delta-log replication for a standby HaS engine."""
+    """Delta-log replication for a standby HaS engine.
+
+    ``n_tenants > 1`` replicates a tenant-partitioned primary
+    (``core/has.py::init_tenant_states``): the delta log is PER TENANT
+    (one deque each, so ``max_lag`` bounds every tenant's acceptance-rate
+    loss independently — a chatty tenant cannot push a quiet tenant's
+    deltas out of the replay window), and ``failover`` replays each
+    tenant's log into its own partition, rebuilding every partition
+    bit-exactly.  ``n_tenants == 1`` is the historical single-log path
+    (``self.log``).
+    """
     cfg: HasConfig
     mgr: CheckpointManager
     snapshot_every: int = 500
     max_lag: int = 1000
     replay_batch: int = 64         # delta entries folded per device dispatch
+    n_tenants: int = 1
 
     def __post_init__(self):
-        self.log: deque = deque(maxlen=self.max_lag)
+        self.logs: list[deque] = [deque(maxlen=self.max_lag)
+                                  for _ in range(self.n_tenants)]
         self._since_snapshot = 0
         self._step = 0
 
+    @property
+    def log(self) -> deque:
+        """Tenant-0 delta log (the whole log when ``n_tenants == 1``)."""
+        return self.logs[0]
+
     def record_update(self, q_emb: np.ndarray, full_ids: np.ndarray,
-                      full_vecs: np.ndarray, state: HasState) -> None:
+                      full_vecs: np.ndarray, state: HasState,
+                      tenant_id: int = 0) -> None:
         """Call after every primary cache_update."""
         self.record_batch(np.asarray(q_emb)[None], np.asarray(full_ids)[None],
-                          np.asarray(full_vecs)[None], state)
+                          np.asarray(full_vecs)[None], state,
+                          tenant_ids=np.array([tenant_id], np.int32))
 
     def record_batch(self, q_embs: np.ndarray, full_ids: np.ndarray,
-                     full_vecs: np.ndarray, state: HasState) -> None:
+                     full_vecs: np.ndarray, state: HasState,
+                     tenant_ids: np.ndarray | None = None) -> None:
         """Append a whole ingest batch, then apply the snapshot cadence ONCE.
 
         ``state`` must be the post-batch primary state.  The cadence check
         runs after ALL rows are appended: snapshotting mid-batch would
         clear the log while the batch tail still gets appended, and a
         failover would then replay rows the snapshot already contains
-        (double-applying them into the FIFO rings).
+        (double-applying them into the FIFO rings).  An exactly-full batch
+        (rows landing precisely on ``snapshot_every``) therefore snapshots
+        once, after the last row, with an empty log left behind.
+
+        ``tenant_ids [N]`` routes each row to its tenant's delta log and is
+        REQUIRED when ``n_tenants > 1`` (rows must match the partition the
+        primary folded them into — silently defaulting would funnel every
+        delta into tenant 0 and diverge the replica from the primary).
         """
-        for q, ids, vecs in zip(q_embs, full_ids, full_vecs):
-            self.log.append((np.asarray(q), np.asarray(ids),
-                             np.asarray(vecs)))
+        if tenant_ids is None:
+            if self.n_tenants > 1:
+                raise ValueError(
+                    f"record_batch on a {self.n_tenants}-tenant standby "
+                    "requires tenant_ids — the rows' partition cannot be "
+                    "inferred")
+            tenant_ids = np.zeros(len(q_embs), np.int32)
+        else:
+            tenant_ids = np.asarray(tenant_ids, np.int32)
+            if len(tenant_ids) and not (0 <= tenant_ids.min()
+                                        and tenant_ids.max()
+                                        < self.n_tenants):
+                raise ValueError(
+                    f"tenant ids [{tenant_ids.min()}, {tenant_ids.max()}] "
+                    f"out of range for n_tenants={self.n_tenants}")
+        for q, ids, vecs, t in zip(q_embs, full_ids, full_vecs, tenant_ids):
+            self.logs[int(t)].append((np.asarray(q), np.asarray(ids),
+                                      np.asarray(vecs)))
         self._since_snapshot += len(q_embs)
         self._step += len(q_embs)
         if self._since_snapshot >= self.snapshot_every:
             snapshot(self.mgr, self._step, state, blocking=False)
             self._since_snapshot = 0
-            self.log.clear()
+            for log in self.logs:
+                log.clear()
 
     def failover(self) -> HasState:
         """Rebuild the freshest possible state on the standby.
 
-        The delta log replays through ``cache_update_chunked`` — one fused
-        donated-buffer scan per ``replay_batch`` chunk (padded, masked)
-        instead of a per-entry dispatch loop, so recovery time is dominated
-        by the scan itself rather than host round-trips.
+        Each tenant's delta log replays into its own partition through
+        ``cache_update_chunked`` — one fused donated-buffer scan per
+        ``replay_batch`` chunk (padded, masked) instead of a per-entry
+        dispatch loop, so recovery time is dominated by the scan itself
+        rather than host round-trips.  With no snapshot and empty logs
+        this is a cold start (fresh state).
         """
-        out = restore(self.mgr, self.cfg)
-        state = out[1] if out is not None else init_has_state(self.cfg)
-        log = list(self.log)
-        if not log:
-            return state
-        return cache_update_chunked(
-            self.cfg, state,
-            np.stack([q for q, _, _ in log]),
-            np.stack([ids for _, ids, _ in log]).astype(np.int32),
-            np.stack([vecs for _, _, vecs in log]),
-            chunk=self.replay_batch)
+        out = restore(self.mgr, self.cfg, n_tenants=self.n_tenants)
+        if out is not None:
+            state = out[1]
+        elif self.n_tenants == 1:
+            state = init_has_state(self.cfg)
+        else:
+            state = init_tenant_states(self.cfg, self.n_tenants)
+        for t, log_t in enumerate(self.logs):
+            log = list(log_t)
+            if not log:
+                continue
+            state = cache_update_chunked(
+                self.cfg, state,
+                np.stack([q for q, _, _ in log]),
+                np.stack([ids for _, ids, _ in log]).astype(np.int32),
+                np.stack([vecs for _, _, vecs in log]),
+                chunk=self.replay_batch,
+                tenant_ids=(None if self.n_tenants == 1
+                            else np.full(len(log), t, np.int32)))
+        return state

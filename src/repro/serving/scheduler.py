@@ -39,6 +39,19 @@ standbys, whose cache ingests the loop reconciles via
 count as accepted (only ``full`` pays for its own full retrieval; only
 ``full`` and ``shared`` wait on the cloud).
 
+Multi-tenancy (``SchedulerConfig.n_tenants > 1``): the cache is a
+tenant-partitioned stacked store (``core/has.py::init_tenant_states``) and
+every request carries a tenant tag (``serve(tenant_ids=...)`` or a
+``"tenant"`` key on the query).  Admission and the full-retrieval queue
+are per-tenant FIFOs drained by weighted-fair selection
+(``SchedulerConfig.tenant_weights``, optional per-batch admission quota
+``tenant_quota``), speculation/ingest route each row through its tenant's
+partition inside the same fused programs, and the sharing election masks
+cross-tenant pairs — one tenant's churn can neither evict another's
+homology window nor leak retrieved documents into another's drafts.
+``SchedResult.per_tenant()`` slices every metric by tenant.  T == 1 is
+the historical single-tenant path, bit-exactly.
+
 Latency accounting: every component is *modeled* — sampled RTTs from the
 scheduler's own per-serve rng plus analytic bandwidth-bound scan times
 (serving/latency.py) — so a run is a pure function of
@@ -63,7 +76,8 @@ import warnings
 
 from repro.core.has import (HasConfig, cache_update_batched,
                             cache_update_chunked, init_has_state,
-                            intra_batch_share, speculate_batch)
+                            init_tenant_states, intra_batch_share,
+                            speculate_batch)
 from repro.core.homology import reidentify
 from repro.retrieval.ivf import build_ivf
 from repro.serving.engine import (LLMS, RetrievalService, ServeResult,
@@ -103,6 +117,14 @@ class SchedulerConfig:
     ingest_followers: bool = True  # followers' (q, shared D_full) also cached
     ingest_batch: int = 32         # fused cache-ingest chunk (compiled shape)
     backend: str | None = None     # speculation backend; None -> platform auto
+    # -- multi-tenant partitioning (core/has.py::init_tenant_states) -------
+    n_tenants: int = 1             # tenant partitions; 1 == the historical
+    #                                single-tenant layout, bit-exactly
+    tenant_quota: int | None = None  # admission quota: max rows one tenant
+    #                                  may occupy in one speculation batch
+    #                                  (None -> work-conserving fairness only)
+    tenant_weights: tuple[float, ...] | None = None  # weighted-fair shares
+    #                                  per tenant; None -> equal weights
 
 
 @dataclasses.dataclass
@@ -116,6 +138,29 @@ class SchedResult(ServeResult):
     spec_batches: int
     full_batches: int
     max_inflight_full_batches: int = 1  # worker-pool concurrency high-water
+    tenant_ids: np.ndarray | None = None   # per-request tenant partition
+    leader_idx: np.ndarray | None = None   # shared-channel leader request
+    #                                        index (-1 for non-followers)
+    served_ids: np.ndarray | None = None   # [n, k] doc ids actually served
+
+    def per_tenant(self) -> dict[int, dict[str, float]]:
+        """Per-tenant metric slices (empty when served without tenants)."""
+        if self.tenant_ids is None:
+            return {}
+        out = {}
+        for t in np.unique(self.tenant_ids):
+            m = self.tenant_ids == t
+            lat = self.latencies[m]
+            out[int(t)] = {
+                "n": int(m.sum()),
+                "dar": float(self.accepts[m].mean()),
+                "doc_hit_rate": float(self.doc_hits[m].mean()),
+                "avg_latency_s": float(lat.mean()),
+                "p95_latency_s": float(np.percentile(lat, 95)),
+                "full_retrievals": int(np.sum((self.channels == "full") & m)),
+                "shared_accepts": int(np.sum((self.channels == "shared") & m)),
+            }
+        return out
 
     def summary(self) -> dict[str, float]:
         out = super().summary()
@@ -142,6 +187,7 @@ class _Request:
     idx: int
     q: dict
     t_arrive: float
+    tenant: int = 0                        # tenant partition of this request
     edge_rtt: float = 0.0
     t_rejected: float = 0.0
     val_ids: np.ndarray | None = None
@@ -151,6 +197,7 @@ class _Request:
     t_done: float = -1.0
     cloud_s: float = 0.0
     slot: int = -1                         # leader-registry slot
+    leader_idx: int = -1                   # leader request idx (followers)
     followers: list = dataclasses.field(default_factory=list)
 
 
@@ -173,7 +220,22 @@ class ContinuousBatchingScheduler:
         self.s = service
         self.cfg = cfg or HasConfig(k=service.k, d=service.world.cfg.d)
         self.sched = sched or SchedulerConfig()
-        self.state = init_has_state(self.cfg)
+        # tenant-partitioned cache: T == 1 keeps the historical unstacked
+        # layout (bit-exact legacy path); T > 1 stacks [T, ...] partitions
+        # with per-tenant capacity cfg.h_max / cfg.doc_cap EACH
+        self.n_tenants = max(1, int(self.sched.n_tenants))
+        if self.sched.tenant_weights is not None:
+            if len(self.sched.tenant_weights) != self.n_tenants:
+                raise ValueError(
+                    f"tenant_weights needs {self.n_tenants} entries, got "
+                    f"{len(self.sched.tenant_weights)}")
+            if any(w <= 0 for w in self.sched.tenant_weights):
+                raise ValueError("tenant_weights must be positive")
+            self.tenant_weights = tuple(
+                float(w) for w in self.sched.tenant_weights)
+        else:
+            self.tenant_weights = (1.0,) * self.n_tenants
+        self.state = self._init_state()
         self.index = index if index is not None else build_ivf(
             service.corpus, self.cfg.n_buckets, seed=seed)
         self.fuzzy_scope = _fuzzy_scope(self.cfg, self.index)
@@ -193,45 +255,67 @@ class ContinuousBatchingScheduler:
         else:
             self.n_full_workers = max(1, int(service.backend.n_workers))
         # late re-validation: homology re-check of queued validation drafts
-        # against the updated query cache (no fuzzy scan needed)
-        self._revalidate = jax.jit(jax.vmap(
-            reidentify, in_axes=(0, None, None, None)))
+        # against the updated query cache (no fuzzy scan needed); tenant
+        # mode gathers each row's partition table inside the same program
+        if self.n_tenants == 1:
+            self._revalidate = jax.jit(jax.vmap(
+                reidentify, in_axes=(0, None, None, None)))
+        else:
+            self._revalidate = jax.jit(jax.vmap(
+                lambda v, t, qdi, qv, tau: reidentify(v, qdi[t], qv[t], tau),
+                in_axes=(0, 0, None, None, None)))
         # warmup: pre-compile the fused programs at BOTH device shapes the
         # loop uses — the [max_spec_batch, d] speculation program and the
         # [ingest_batch, ...] fused cache ingest — plus the full-search and
         # re-validation programs, so first-request latency is never billed
         # to compilation
         sc, d, k = self.sched, service.world.cfg.d, self.cfg.k
+        spec_tids = (None if self.n_tenants == 1
+                     else jnp.zeros((sc.max_spec_batch,), jnp.int32))
         jax.block_until_ready(speculate_batch(
             self.cfg, self.state, self.index,
-            jnp.zeros((sc.max_spec_batch, d)), backend=sc.backend))
-        scratch = init_has_state(self.cfg)      # donated, then discarded
+            jnp.zeros((sc.max_spec_batch, d)), backend=sc.backend,
+            tenant_ids=spec_tids))
+        scratch = self._init_state()            # donated, then discarded
         jax.block_until_ready(cache_update_batched(
             self.cfg, scratch, jnp.zeros((sc.ingest_batch, d)),
             jnp.zeros((sc.ingest_batch, k), jnp.int32),
             jnp.zeros((sc.ingest_batch, k, d)),
-            jnp.zeros((sc.ingest_batch,), bool)).q_ptr)
+            jnp.zeros((sc.ingest_batch,), bool),
+            tenant_ids=(None if self.n_tenants == 1
+                        else jnp.zeros((sc.ingest_batch,), jnp.int32))).q_ptr)
         service.backend.search(
             jnp.zeros((sc.full_batch, d)))[0].block_until_ready()
+        reval_args = ((jnp.zeros((sc.full_batch, k), jnp.int32),)
+                      if self.n_tenants == 1
+                      else (jnp.zeros((sc.full_batch, k), jnp.int32),
+                            jnp.zeros((sc.full_batch,), jnp.int32)))
         jax.block_until_ready(self._revalidate(
-            jnp.zeros((sc.full_batch, k), jnp.int32),
-            self.state.query_doc_ids, self.state.query_valid,
+            *reval_args, self.state.query_doc_ids, self.state.query_valid,
             jnp.float32(self.cfg.tau)))
         nrows = sc.max_pending_leaders + sc.max_spec_batch
         jax.block_until_ready(intra_batch_share(
             jnp.full((nrows, k), -1, jnp.int32), jnp.zeros((nrows,), bool),
-            jnp.float32(self._share_tau), jnp.zeros((nrows,), bool)))
+            jnp.float32(self._share_tau), jnp.zeros((nrows,), bool),
+            None if self.n_tenants == 1
+            else jnp.zeros((nrows,), jnp.int32)))
+
+    def _init_state(self):
+        return (init_has_state(self.cfg) if self.n_tenants == 1
+                else init_tenant_states(self.cfg, self.n_tenants))
 
     # -- modeled service times (bandwidth-bound coalesced scans) -----------
 
     def _spec_time(self, b: int) -> float:
         """Edge time for one speculation batch of b queries: the cache
-        channel streams the doc store once; the fuzzy channel streams the
-        union of probed buckets (capped at the whole index)."""
+        channel streams the doc store once (all T tenant partitions — the
+        partitioned scan is one fused program over the stacked store); the
+        fuzzy channel streams the union of probed buckets (capped at the
+        whole index)."""
         lat = self.s.latency
         fuzzy = lat.scan_time(min(b * self.fuzzy_scope, 1.0)
                               * lat.target_corpus * 2.0 + self.cfg.n_buckets)
-        return fuzzy + lat.scan_time(self.cfg.doc_cap)
+        return fuzzy + lat.scan_time(self.cfg.doc_cap * self.n_tenants)
 
     def _full_time(self, b: int) -> float:
         """Modeled cloud compute of one coalesced backend dispatch."""
@@ -254,28 +338,48 @@ class ContinuousBatchingScheduler:
                 rows.extend(r.followers)
         q_embs = np.stack([r.q["emb"] for r in rows])
         full_ids = np.stack([r.ids for r in rows])
+        tids = (None if self.n_tenants == 1
+                else np.array([r.tenant for r in rows], np.int32))
         self.state = cache_update_chunked(
             self.cfg, self.state, q_embs, full_ids,
-            corpus=self.s.corpus, chunk=self.sched.ingest_batch)
-        self.s.backend.on_ingest(q_embs, full_ids, self.state)
+            corpus=self.s.corpus, chunk=self.sched.ingest_batch,
+            tenant_ids=tids)
+        self.s.backend.on_ingest(q_embs, full_ids, self.state,
+                                 tenant_ids=tids)
 
     # -- event loop --------------------------------------------------------
 
     def serve(self, queries, arrivals: np.ndarray | None = None,
-              dataset: str = "granola", llms=LLMS, seed: int = 0) -> SchedResult:
+              dataset: str = "granola", llms=LLMS, seed: int = 0,
+              tenant_ids: np.ndarray | None = None) -> SchedResult:
         sc = self.sched
         cap = sc.max_pending_leaders
+        T = self.n_tenants
         n = len(queries)
         if arrivals is None:                     # fully saturated admission
             arrivals = np.zeros(n)
         arrivals = np.asarray(arrivals, np.float64)
         assert arrivals.shape == (n,)
+        # tenant resolution: explicit array wins, else the queries' own
+        # "tenant" tags, else everyone in partition 0
+        if tenant_ids is None:
+            tids = np.array([int(q.get("tenant", 0)) for q in queries],
+                            np.int32)
+        else:
+            tids = np.asarray(tenant_ids, np.int32)
+            assert tids.shape == (n,)
+        if n and (tids.min() < 0 or tids.max() >= T):
+            raise ValueError(
+                f"tenant ids must be in [0, {T}); got range "
+                f"[{tids.min()}, {tids.max()}] — raise "
+                f"SchedulerConfig.n_tenants")
 
-        self.state = init_has_state(self.cfg)    # independent stream
+        self.state = self._init_state()          # independent stream
         rtt_rng = np.random.default_rng(seed)    # scheduler-owned RTT stream
         lat = self.s.latency
 
-        reqs = [_Request(idx=i, q=q, t_arrive=float(arrivals[i]))
+        reqs = [_Request(idx=i, q=q, t_arrive=float(arrivals[i]),
+                         tenant=int(tids[i]))
                 for i, q in enumerate(queries)]
         heap: list[tuple[float, int, int, Any]] = []
         seq = 0
@@ -283,18 +387,48 @@ class ContinuousBatchingScheduler:
             heapq.heappush(heap, (r.t_arrive, _ARRIVE, seq, r))
             seq += 1
 
-        admission: collections.deque[_Request] = collections.deque()
-        leaders: collections.deque[_Request] = collections.deque()  # queued
+        # per-tenant FIFO queues; batches are assembled by weighted-fair
+        # selection across them (lowest served/weight first), so one
+        # tenant's burst cannot monopolize the edge or the cloud stage.
+        # T == 1 degenerates to the historical single FIFO, bit-exactly.
+        admission = [collections.deque() for _ in range(T)]
+        leaders = [collections.deque() for _ in range(T)]    # queued leaders
+        spec_served = [0.0] * T        # weighted-fair virtual service
+        full_served = [0.0] * T
         edge_busy = False
         inflight_full = 0              # busy cloud-pool workers
         max_inflight = 0               # pool-concurrency high-water mark
         timer_armed = False
         spec_batches = full_batches = full_retrievals = 0
 
+        def fair_pick(queues, served, limit, quota=None):
+            """Pop up to ``limit`` requests across per-tenant FIFO queues:
+            repeatedly take from the non-empty tenant with the lowest
+            weighted virtual service (ties -> lowest tenant id), bumping
+            its counter by 1/weight.  ``quota`` caps one tenant's rows per
+            call (admission quota — strict isolation knob)."""
+            picked, taken = [], [0] * T
+            while len(picked) < limit:
+                best, best_key = -1, None
+                for u in range(T):
+                    if not queues[u] or (quota is not None
+                                         and taken[u] >= quota):
+                        continue
+                    key = served[u]
+                    if best_key is None or key < best_key:
+                        best, best_key = u, key
+                if best < 0:
+                    break
+                picked.append(queues[best].popleft())
+                served[best] += 1.0 / self.tenant_weights[best]
+                taken[best] += 1
+            return picked
+
         # fixed-shape sharing registry over ALL pending (queued + in-flight)
         # leaders; new rejects are scored against it in one device call
         reg_vals = np.full((cap, self.cfg.k), -1, np.int32)
         reg_valid = np.zeros(cap, bool)
+        reg_tenant = np.zeros(cap, np.int32)
         reg_req: list[_Request | None] = [None] * cap
         free_slots = list(range(cap - 1, -1, -1))          # pop() -> lowest
 
@@ -304,6 +438,7 @@ class ContinuousBatchingScheduler:
             slot = free_slots.pop()
             reg_vals[slot] = r.val_ids
             reg_valid[slot] = True
+            reg_tenant[slot] = r.tenant
             reg_req[slot] = r
             r.slot = slot
 
@@ -325,15 +460,25 @@ class ContinuousBatchingScheduler:
             rejected[cap:cap + g] = True
             pending = np.concatenate(
                 [reg_valid, np.zeros(sc.max_spec_batch, bool)])
+            if T == 1:
+                share_tids = None
+            else:
+                # tenant tags for registry rows + the group + inert padding:
+                # the election masks cross-tenant pairs, so a follower can
+                # only attach to a leader of its own partition
+                share_tids = jnp.asarray(np.concatenate([
+                    reg_tenant,
+                    np.array([r.tenant for r in group], np.int32),
+                    np.zeros(sc.max_spec_batch - g, np.int32)]))
             out = intra_batch_share(jnp.asarray(vals), jnp.asarray(rejected),
                                     jnp.float32(self._share_tau),
-                                    jnp.asarray(pending))
+                                    jnp.asarray(pending), share_tids)
             leader_of = np.asarray(out["leader"])
             is_leader = np.asarray(out["is_leader"])
             for j, r in enumerate(group):
                 row = cap + j
                 if is_leader[row]:
-                    leaders.append(r)
+                    leaders[r.tenant].append(r)
                     registry_add(r)
                 else:
                     li = leader_of[row]
@@ -345,7 +490,7 @@ class ContinuousBatchingScheduler:
             pending-leader registry + each other (admission order)."""
             if not sc.share:
                 for r in group:
-                    leaders.append(r)
+                    leaders[r.tenant].append(r)
                     registry_add(r)
                 return
             for i in range(0, len(group), sc.max_spec_batch):
@@ -353,15 +498,23 @@ class ContinuousBatchingScheduler:
 
         def dispatch_spec(t: float):
             nonlocal edge_busy, seq, spec_batches
-            batch = [admission.popleft()
-                     for _ in range(min(len(admission), sc.max_spec_batch))]
+            batch = fair_pick(admission, spec_served, sc.max_spec_batch,
+                              sc.tenant_quota)
             embs = np.zeros((sc.max_spec_batch, self.s.world.cfg.d),
                             np.float32)
             for j, r in enumerate(batch):
                 embs[j] = r.q["emb"]
                 r.edge_rtt = rtt_rng.uniform(*lat.edge_rtt)
+            if T == 1:
+                spec_tids = None
+            else:
+                batch_tids = np.zeros(sc.max_spec_batch, np.int32)
+                for j, r in enumerate(batch):
+                    batch_tids[j] = r.tenant
+                spec_tids = jnp.asarray(batch_tids)
             out = speculate_batch(self.cfg, self.state, self.index,
-                                  jnp.asarray(embs), backend=sc.backend)
+                                  jnp.asarray(embs), backend=sc.backend,
+                                  tenant_ids=spec_tids)
             accepts = np.asarray(out["accept"])
             drafts = np.asarray(out["draft_ids"])
             val_ids = np.asarray(out["val_ids"])
@@ -377,22 +530,28 @@ class ContinuousBatchingScheduler:
             spec_batches += 1
 
         def try_spec(t: float):
-            if not edge_busy and admission:
+            if not edge_busy and any(admission):
                 dispatch_spec(t)
 
         def dispatch_full(t: float):
             nonlocal inflight_full, max_inflight, seq, full_batches, \
                 full_retrievals
-            batch = [leaders.popleft()
-                     for _ in range(min(len(leaders), sc.full_batch))]
+            batch = fair_pick(leaders, full_served, sc.full_batch)
             # late re-validation: results ingested while these leaders
             # queued may re-identify them now — no cloud work needed
             if sc.revalidate:
                 vids = np.full((sc.full_batch, self.cfg.k), -1, np.int32)
                 for j, r in enumerate(batch):
                     vids[j] = r.val_ids
+                if T == 1:
+                    reval_args = (jnp.asarray(vids),)
+                else:
+                    vtids = np.zeros(sc.full_batch, np.int32)
+                    for j, r in enumerate(batch):
+                        vtids[j] = r.tenant
+                    reval_args = (jnp.asarray(vids), jnp.asarray(vtids))
                 acc = np.asarray(self._revalidate(
-                    jnp.asarray(vids), self.state.query_doc_ids,
+                    *reval_args, self.state.query_doc_ids,
                     self.state.query_valid, jnp.float32(self.cfg.tau))[0])
                 survivors = []
                 for j, r in enumerate(batch):
@@ -427,9 +586,11 @@ class ContinuousBatchingScheduler:
 
         def try_full(t: float):
             nonlocal timer_armed, seq
-            while inflight_full < self.n_full_workers and leaders:
-                deadline = leaders[0].t_rejected + sc.full_max_wait_s
-                if len(leaders) < sc.full_batch and t < deadline:
+            while inflight_full < self.n_full_workers and any(leaders):
+                n_lead = sum(len(q) for q in leaders)
+                oldest = min(q[0].t_rejected for q in leaders if q)
+                deadline = oldest + sc.full_max_wait_s
+                if n_lead < sc.full_batch and t < deadline:
                     if not timer_armed:
                         heapq.heappush(heap, (deadline, _FULL_TIMER, seq,
                                               None))
@@ -441,7 +602,7 @@ class ContinuousBatchingScheduler:
         while heap:
             t, kind, _, payload = heapq.heappop(heap)
             if kind == _ARRIVE:
-                admission.append(payload)
+                admission[payload.tenant].append(payload)
                 try_spec(t)
             elif kind == _SPEC_DONE:
                 edge_busy = False
@@ -468,6 +629,7 @@ class ContinuousBatchingScheduler:
                         f.ids, f.channel = r.ids, "shared"
                         f.cloud_s = cloud
                         f.t_done = t + f.edge_rtt
+                        f.leader_idx = r.idx
                 self._ingest(batch)
                 try_full(t)
             else:                                  # _FULL_TIMER
@@ -490,7 +652,11 @@ class ContinuousBatchingScheduler:
             channels=np.array([r.channel for r in reqs]),
             full_retrievals=full_retrievals,
             spec_batches=spec_batches, full_batches=full_batches,
-            max_inflight_full_batches=max_inflight)
+            max_inflight_full_batches=max_inflight,
+            tenant_ids=tids,
+            leader_idx=np.array([r.leader_idx for r in reqs], np.int32),
+            served_ids=np.stack([np.asarray(r.ids, np.int32)
+                                 for r in reqs]) if reqs else None)
 
 
 # canonical name for the continuous-batching HaS scheduler

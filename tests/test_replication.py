@@ -61,3 +61,95 @@ def test_failover_cold_start_when_no_snapshot(tmp_path):
     standby = WarmStandby(cfg, CheckpointManager(str(tmp_path)))
     state = standby.failover()
     assert int(state.q_ptr) == 0
+
+
+def test_failover_with_empty_delta_log_after_snapshot(tmp_path):
+    """A snapshot cadence hit leaves the delta log EMPTY; failover must then
+    return exactly the snapshot (no replay, no crash on the empty log)."""
+    cfg = HasConfig(k=4, h_max=16, doc_capacity=128, d=8)
+    standby = WarmStandby(cfg, CheckpointManager(str(tmp_path)),
+                          snapshot_every=6)
+    primary = init_has_state(cfg)
+    rng = np.random.default_rng(4)
+    for _ in range(6):                       # lands exactly on the cadence
+        q = rng.normal(size=(cfg.d,)).astype(np.float32)
+        ids = rng.integers(0, 200, cfg.k).astype(np.int32)
+        vecs = rng.normal(size=(cfg.k, cfg.d)).astype(np.float32)
+        primary = cache_update(cfg, primary, jnp.asarray(q),
+                               jnp.asarray(ids), jnp.asarray(vecs))
+        standby.record_update(q, ids, vecs, primary)
+    standby.mgr.wait()
+    assert len(standby.log) == 0             # cleared by the snapshot
+    recovered = standby.failover()
+    np.testing.assert_array_equal(np.asarray(primary.query_doc_ids),
+                                  np.asarray(recovered.query_doc_ids))
+    np.testing.assert_array_equal(np.asarray(primary.doc_ids),
+                                  np.asarray(recovered.doc_ids))
+    assert int(recovered.q_ptr) == int(primary.q_ptr)
+
+
+def test_record_batch_cadence_boundary_at_exactly_full_batch(tmp_path):
+    """One record_batch whose row count lands EXACTLY on snapshot_every:
+    the cadence fires once, after the whole batch (empty log left), and a
+    later partial batch replays on top of that snapshot bit-exactly."""
+    cfg = HasConfig(k=4, h_max=16, doc_capacity=128, d=8)
+    standby = WarmStandby(cfg, CheckpointManager(str(tmp_path)),
+                          snapshot_every=8)
+    rng = np.random.default_rng(7)
+
+    def batch(n):
+        return (rng.normal(size=(n, cfg.d)).astype(np.float32),
+                rng.integers(0, 200, size=(n, cfg.k)).astype(np.int32),
+                rng.normal(size=(n, cfg.k, cfg.d)).astype(np.float32))
+
+    primary = init_has_state(cfg)
+    qs, ids, vecs = batch(8)                 # exactly-full batch
+    for i in range(8):
+        primary = cache_update(cfg, primary, jnp.asarray(qs[i]),
+                               jnp.asarray(ids[i]), jnp.asarray(vecs[i]))
+    standby.record_batch(qs, ids, vecs, primary)
+    standby.mgr.wait()
+    assert len(standby.log) == 0             # snapshot AFTER the whole batch
+    assert standby._since_snapshot == 0
+    # partial follow-up batch: snapshot + 3-entry delta replay
+    qs2, ids2, vecs2 = batch(3)
+    for i in range(3):
+        primary = cache_update(cfg, primary, jnp.asarray(qs2[i]),
+                               jnp.asarray(ids2[i]), jnp.asarray(vecs2[i]))
+    standby.record_batch(qs2, ids2, vecs2, primary)
+    assert len(standby.log) == 3
+    recovered = standby.failover()
+    for f in ("query_emb", "query_doc_ids", "query_valid", "q_ptr",
+              "doc_emb", "doc_ids", "d_ptr"):
+        np.testing.assert_array_equal(np.asarray(getattr(primary, f)),
+                                      np.asarray(getattr(recovered, f)),
+                                      err_msg=f)
+
+
+def test_multi_tenant_failover_rebuilds_each_partition(tmp_path):
+    """Per-tenant delta logs: a stacked 3-tenant primary rebuilds
+    bit-exactly, partition by partition — including one tenant whose log
+    is empty (it saw no ingests since the snapshot)."""
+    from repro.core.has import cache_update_batched, init_tenant_states
+    cfg = HasConfig(k=4, h_max=8, doc_capacity=32, d=8)
+    T = 3
+    standby = WarmStandby(cfg, CheckpointManager(str(tmp_path)),
+                          snapshot_every=10**9, n_tenants=T)
+    primary = init_tenant_states(cfg, T)
+    rng = np.random.default_rng(11)
+    # tenants 0 and 2 ingest; tenant 1 stays quiet (empty log)
+    tids = np.array([0, 2, 0, 2, 2], np.int32)
+    qs = rng.normal(size=(5, cfg.d)).astype(np.float32)
+    ids = rng.integers(0, 60, size=(5, cfg.k)).astype(np.int32)
+    vecs = rng.normal(size=(5, cfg.k, cfg.d)).astype(np.float32)
+    primary = cache_update_batched(cfg, primary, jnp.asarray(qs),
+                                   jnp.asarray(ids), jnp.asarray(vecs),
+                                   tenant_ids=jnp.asarray(tids))
+    standby.record_batch(qs, ids, vecs, primary, tenant_ids=tids)
+    assert [len(log) for log in standby.logs] == [2, 0, 3]
+    recovered = standby.failover()
+    for f in ("query_emb", "query_doc_ids", "query_valid", "q_ptr",
+              "doc_emb", "doc_ids", "d_ptr"):
+        np.testing.assert_array_equal(np.asarray(getattr(primary, f)),
+                                      np.asarray(getattr(recovered, f)),
+                                      err_msg=f)
