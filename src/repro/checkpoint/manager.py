@@ -50,10 +50,18 @@ class CheckpointManager:
     # -- save ---------------------------------------------------------------
 
     def save(self, step: int, tree: Any, blocking: bool = True) -> None:
-        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
         if blocking:
+            host_tree = jax.tree.map(
+                lambda x: np.asarray(jax.device_get(x)), tree)
             self._write(step, host_tree)
         else:
+            # np.array COPIES where np.asarray may not: on CPU,
+            # device_get of a jax array can be a zero-copy VIEW of the
+            # live device buffer, which the caller's next donated step
+            # (train step_fn, cache_update_batched) overwrites in place
+            # while the writer thread is still serializing it
+            host_tree = jax.tree.map(
+                lambda x: np.array(jax.device_get(x)), tree)
             self.wait()
             self._thread = threading.Thread(
                 target=self._write, args=(step, host_tree), daemon=True)

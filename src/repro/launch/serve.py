@@ -14,8 +14,17 @@ Multi-tenant serving: ``--tenants N`` partitions the HaS cache into N
 tenant slices (core/has.py::init_tenant_states; per-tenant capacity
 ``--h-max`` EACH) and assigns each query a tenant drawn from a Zipf
 popularity law over tenants (``--tenant-zipf A``; 0 = uniform) — the
-mixed-traffic shape the partitioning isolates.  Supported by the ``has``
-and ``crag`` engines (the baselines have no per-tenant cache state).
+mixed-traffic shape the partitioning isolates.  Supported by the ``has``,
+``crag`` and ``sched`` engines (the baselines have no per-tenant cache
+state).
+
+``--engine sched`` runs the continuous-batching scheduler
+(serving/scheduler.py) over an open-loop Poisson arrival stream
+(``--qps``; omit for fully saturated admission).  Its edge speculation
+stage is a REPLICA POOL (serving/edge_pool.py): ``--edge-replicas R``
+cache replicas each take speculation batches concurrently, kept within
+``--edge-sync-every`` ingested rows of the primary by bounded-lag delta
+replay.  R == 1 is the historical single-edge scheduler bit-exactly.
 """
 from __future__ import annotations
 
@@ -30,7 +39,7 @@ def main(argv=None) -> None:
                     choices=["granola", "popqa", "triviaqa", "squad"])
     ap.add_argument("--engine", default="has",
                     choices=["has", "full", "proximity", "saferadius",
-                             "mincache", "crag", "ivf", "scann"])
+                             "mincache", "crag", "ivf", "scann", "sched"])
     ap.add_argument("--retrieval-backend", default="flat",
                     choices=["flat", "sharded", "replica"],
                     help="full-retrieval backend (retrieval/service.py): "
@@ -48,6 +57,17 @@ def main(argv=None) -> None:
     ap.add_argument("--tenant-zipf", type=float, default=1.1,
                     help="Zipf exponent of the tenant popularity law "
                          "(0 = uniform traffic across tenants)")
+    ap.add_argument("--edge-replicas", type=int, default=1,
+                    help="edge speculation cache replicas for --engine "
+                         "sched (serving/edge_pool.py); 1 == the "
+                         "historical single-edge scheduler")
+    ap.add_argument("--edge-sync-every", type=int, default=None,
+                    help="bounded-lag replay cadence: an edge replica this "
+                         "many ingested rows behind the primary replays "
+                         "its missing delta rows (default 32)")
+    ap.add_argument("--qps", type=float, default=None,
+                    help="open-loop Poisson arrival rate for --engine "
+                         "sched (omit for fully saturated admission)")
     ap.add_argument("--tau", type=float, default=0.2)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--h-max", type=int, default=5000)
@@ -68,9 +88,26 @@ def main(argv=None) -> None:
         ap.error(f"--tenants must be >= 1 (got {args.tenants})")
     if args.tenant_zipf < 0:
         ap.error(f"--tenant-zipf must be >= 0 (got {args.tenant_zipf})")
-    if args.tenants > 1 and args.engine not in ("has", "crag"):
-        ap.error(f"--tenants requires --engine has|crag (the "
+    if args.tenants > 1 and args.engine not in ("has", "crag", "sched"):
+        ap.error(f"--tenants requires --engine has|crag|sched (the "
                  f"'{args.engine}' engine has no per-tenant cache state)")
+    if args.edge_replicas < 1:
+        ap.error(f"--edge-replicas must be >= 1 (got {args.edge_replicas})")
+    if args.edge_sync_every is not None and args.edge_sync_every < 1:
+        ap.error(f"--edge-sync-every must be >= 1 "
+                 f"(got {args.edge_sync_every})")
+    if args.edge_replicas > 1 and args.engine != "sched":
+        ap.error("--edge-replicas only applies to --engine sched (the "
+                 "sequential engines speculate against one cache by "
+                 "definition)")
+    if args.edge_sync_every is not None and args.engine != "sched":
+        ap.error("--edge-sync-every only applies to --engine sched "
+                 "(it paces the scheduler's edge replica pool)")
+    if args.qps is not None and args.qps <= 0:
+        ap.error(f"--qps must be > 0 (got {args.qps})")
+    if args.qps is not None and args.engine != "sched":
+        ap.error("--qps only applies to --engine sched (the other engines "
+                 "serve a closed loop)")
     workers = 2 if args.workers is None else args.workers
 
     import jax.numpy as jnp
@@ -137,13 +174,35 @@ def main(argv=None) -> None:
             k=args.k, tau=args.tau, h_max=args.h_max,
             nprobe=16, n_buckets=2048, d=world.cfg.d),
             n_tenants=args.tenants)
+    elif args.engine == "sched":
+        from repro.serving.edge_pool import DEFAULT_EDGE_SYNC_EVERY
+        from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                             SchedulerConfig,
+                                             poisson_arrivals)
+        engine = ContinuousBatchingScheduler(
+            svc, HasConfig(k=args.k, tau=args.tau, h_max=args.h_max,
+                           nprobe=16, n_buckets=2048, d=world.cfg.d),
+            SchedulerConfig(
+                n_tenants=args.tenants, edge_replicas=args.edge_replicas,
+                edge_sync_every=(DEFAULT_EDGE_SYNC_EVERY
+                                 if args.edge_sync_every is None
+                                 else args.edge_sync_every)))
     else:
         engine = ANNSEngine(svc, method=args.engine)
 
-    result = engine.serve(queries, dataset=args.dataset, seed=args.seed)
+    if args.engine == "sched":
+        arrivals = (None if args.qps is None else poisson_arrivals(
+            len(queries), qps=args.qps, seed=args.seed + 3))
+        result = engine.serve(queries, arrivals, dataset=args.dataset,
+                              seed=args.seed)
+    else:
+        result = engine.serve(queries, dataset=args.dataset, seed=args.seed)
     print(f"[serve] engine={args.engine} dataset={args.dataset} "
           f"retrieval-backend={args.retrieval_backend} "
-          f"(n_workers={svc.backend.n_workers}) tenants={args.tenants}")
+          f"(n_workers={svc.backend.n_workers}) tenants={args.tenants}"
+          + (f" edge-replicas={args.edge_replicas}"
+             f" sync-every={engine.sched.edge_sync_every}"
+             if args.engine == "sched" else ""))
     for k, v in result.summary().items():
         print(f"  {k:20s} {v:.4f}")
     if args.tenants > 1:

@@ -154,10 +154,19 @@ class ReplicaBackend(_BackendBase):
 
     Wraps an inner backend for the actual scan and models one concurrent
     dispatch slot per standby replica.  ``on_ingest`` mirrors every row the
-    serving loop folds into the authoritative cache onto each standby's
-    delta log (``WarmStandby.record_update``), so a failover resumes with
-    exactly the cache the primary had — the serving loop no longer owns the
-    only authoritative copy.
+    serving loop folds into the authoritative cache onto each member's
+    delta log via the shared ``record_batch`` sink protocol
+    (serving/replication.py) — members are cloud ``WarmStandby`` replicas
+    and/or an edge ``EdgeReplicaPool`` (serving/edge_pool.py), so both
+    replication tiers reconcile off ONE ingest notification.  A standby
+    failover then resumes with exactly the cache the primary had — the
+    serving loop no longer owns the only authoritative copy.
+
+    Padded (``-1``) doc ids — emitted by the sharded search paths when the
+    corpus holds fewer than k rows — gather ZERO vectors into the delta
+    logs (:func:`~repro.serving.replication.gather_doc_vecs`); a raw
+    ``corpus[full_ids]`` would wrap them to the LAST corpus row and
+    silently corrupt every member's log.
     """
 
     def __init__(self, inner: FullRetrievalBackend, standbys: Sequence,
@@ -175,9 +184,10 @@ class ReplicaBackend(_BackendBase):
         return self.inner.latency(batch)
 
     def on_ingest(self, q_embs, full_ids, state, tenant_ids=None) -> None:
+        from repro.serving.replication import gather_doc_vecs
         q_embs = np.asarray(q_embs, np.float32)
         full_ids = np.asarray(full_ids, np.int32)
-        vecs = self._corpus_np[full_ids]                  # [N, k, d]
+        vecs = gather_doc_vecs(self._corpus_np, full_ids)  # [N, k, d]
         for sb in self.standbys:
             sb.record_batch(q_embs, full_ids, vecs, state,
                             tenant_ids=tenant_ids)

@@ -1,2 +1,4 @@
 """RAG serving: engines (HaS / baselines), latency model, batched serving,
-and the event-driven continuous-batching scheduler (scheduler.py)."""
+the event-driven continuous-batching scheduler (scheduler.py), and cache
+replication — the delta-log substrate + cloud warm standbys
+(replication.py) and the edge speculation replica pool (edge_pool.py)."""

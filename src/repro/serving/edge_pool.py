@@ -1,0 +1,189 @@
+"""Edge speculation replica pool: R cache replicas behind one delta log.
+
+PR 3 gave the *full-retrieval* stage a replica-backed worker pool, but the
+paper's speculation stage still ran against one authoritative cache — the
+edge was the serving system's hot single point (throughput capped at one
+speculation batch in flight, and a failover served cold drafts).
+:class:`EdgeReplicaPool` closes that gap: R warm cache replicas, each an
+independent :class:`~repro.core.has.HasState` fed from ONE shared
+:class:`~repro.serving.replication.DeltaLog` by bounded-lag delta-cursor
+replay, so the scheduler (serving/scheduler.py) can overlap speculation
+batches of later admissions on *different* replicas the way full
+retrievals already overlap on cloud workers.
+
+Consistency model (staleness-aware, no phantom accepts):
+
+  * every cache ingest lands on the PRIMARY (the scheduler's authoritative
+    state) and is appended to the pool's delta log via ``record_batch`` —
+    the same sink protocol ``WarmStandby`` speaks, so
+    ``retrieval/service.py::ReplicaBackend`` can fan one ``on_ingest``
+    out to cloud standbys and this pool alike;
+  * a replica replays its missing rows when it falls ``sync_every`` or
+    more rows behind (``record_batch`` cadence) and before dispatch when
+    the scheduler asks (``sync``), so its lag is bounded;
+  * a speculation batch dispatched to replica r is validated against
+    r's OWN cache version (``states[r]`` / ``version(r)``) — an accept
+    can only reference documents that replica actually holds, never
+    documents only the primary has seen (no phantom accepts on a stale
+    replica);
+  * ``promote(r)`` syncs replica r to the log head and hands its state
+    over as the new primary, so a failover mid-stream continues the
+    request trace with the cache the primary would have had.
+
+Replay is exactly the primary's ingest fold (``cache_update_chunked``
+row order), so a replica synced to sequence s is bit-identical to the
+primary after its first s ingest rows — tests/test_edge_pool.py asserts
+this prefix parity and audits served drafts against replica versions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.core.has import (HasConfig, HasState, cache_update_chunked,
+                            init_has_state, init_tenant_states)
+from repro.serving.replication import DeltaLog, validate_ingest_batch
+
+#: bounded-lag default: replicas replay once they fall this many ingested
+#: rows behind the primary (calibrated by ``benchmarks/sched_throughput.py
+#: --sweep-edge-replicas``: DAR within 2 points of the zero-lag R == 1 path
+#: while replay stays off the per-batch critical path)
+DEFAULT_EDGE_SYNC_EVERY = 32
+
+
+@dataclasses.dataclass
+class EdgeReplicaPool:
+    """R speculation cache replicas over one shared delta log.
+
+    ``n_tenants > 1`` replicates a tenant-partitioned primary: delta rows
+    carry their tenant tag and replay scatters each row into its tenant's
+    partition (the same ``cache_update_chunked`` contract the scheduler's
+    own ingest uses).  ``compact=False`` retains the full log (audits /
+    tests that fold version prefixes); the default drops rows every
+    replica has replayed.
+    """
+    cfg: HasConfig
+    n_replicas: int
+    sync_every: int = DEFAULT_EDGE_SYNC_EVERY
+    n_tenants: int = 1
+    replay_batch: int = 64         # delta rows folded per device dispatch
+    compact: bool = True
+
+    def __post_init__(self):
+        if self.n_replicas < 1:
+            raise ValueError(
+                f"n_replicas must be >= 1, got {self.n_replicas}")
+        if self.sync_every < 1:
+            raise ValueError(
+                f"sync_every must be >= 1, got {self.sync_every}")
+        self.log = DeltaLog()
+        self.states: list[HasState] = [self._init_state()
+                                       for _ in range(self.n_replicas)]
+        self.cursors = [0] * self.n_replicas
+        self.replays = 0               # replay events (stat)
+
+    def _init_state(self) -> HasState:
+        return (init_has_state(self.cfg) if self.n_tenants == 1
+                else init_tenant_states(self.cfg, self.n_tenants))
+
+    # -- replica views -----------------------------------------------------
+
+    def version(self, r: int) -> int:
+        """Cache version of replica r == primary ingest rows it has
+        replayed (the delta-log sequence its cursor sits at)."""
+        return self.cursors[r]
+
+    def lag(self, r: int) -> int:
+        """Ingested rows replica r is behind the primary."""
+        return self.log.head - self.cursors[r]
+
+    def freshest(self, candidates) -> int:
+        """Staleness-aware pick: the candidate replica with the highest
+        cache version (lowest lag); ties break to the lowest replica id
+        (deterministic)."""
+        return max(candidates, key=lambda r: (self.cursors[r], -r))
+
+    # -- ingest propagation (the WarmStandby record_batch sink protocol) ---
+
+    def record_batch(self, q_embs, full_ids, full_vecs, state: Any = None,
+                     tenant_ids=None) -> None:
+        """Append one primary ingest batch, then apply the sync cadence.
+
+        ``state`` (the post-batch primary) is accepted for sink-protocol
+        compatibility with ``WarmStandby.record_batch`` and unused — the
+        pool rebuilds replica caches from delta rows alone.  Rows with
+        padded (``-1``) ids keep zeroed doc vectors (defensively re-zeroed
+        here; replay drops them anyway).
+        """
+        q_embs = np.asarray(q_embs, np.float32)
+        full_ids = np.asarray(full_ids, np.int32)
+        full_vecs = np.asarray(full_vecs, np.float32)
+        validate_ingest_batch(q_embs, full_ids, full_vecs, tenant_ids)
+        pad = full_ids < 0
+        if pad.any() and full_vecs[pad].any():
+            # only copy when a padded slot actually carries data — the
+            # scheduler and ReplicaBackend hand over gather_doc_vecs
+            # output, already zeroed
+            full_vecs = full_vecs.copy()
+            full_vecs[pad] = 0.0
+        if tenant_ids is None:
+            if self.n_tenants > 1:
+                raise ValueError(
+                    f"record_batch on a {self.n_tenants}-tenant pool "
+                    "requires tenant_ids — the rows' partition cannot be "
+                    "inferred")
+            tids = np.zeros(len(q_embs), np.int32)
+        else:
+            tids = np.asarray(tenant_ids, np.int32)
+            if len(tids) and not (0 <= tids.min()
+                                  and tids.max() < self.n_tenants):
+                raise ValueError(
+                    f"tenant ids [{tids.min()}, {tids.max()}] out of range "
+                    f"for n_tenants={self.n_tenants}")
+        for i in range(len(q_embs)):
+            self.log.append((q_embs[i], full_ids[i], full_vecs[i],
+                             int(tids[i])))
+        for r in range(self.n_replicas):
+            if self.lag(r) >= self.sync_every:
+                self.sync(r)
+        if self.compact:
+            self.log.compact_below(min(self.cursors))
+
+    # -- bounded-lag delta replay ------------------------------------------
+
+    def sync(self, r: int) -> int:
+        """Replay replica r's missing delta rows (cursor -> log head).
+
+        One fused ``cache_update_chunked`` fold per ``replay_batch`` rows,
+        in primary ingest order — after the call, replica r is
+        bit-identical to the primary's state after its first ``head``
+        ingest rows.  Returns the number of rows replayed.
+        """
+        rows = self.log.since(self.cursors[r])
+        if not rows:
+            return 0
+        self.states[r] = cache_update_chunked(
+            self.cfg, self.states[r],
+            np.stack([q for q, _, _, _ in rows]),
+            np.stack([ids for _, ids, _, _ in rows]).astype(np.int32),
+            np.stack([vecs for _, _, vecs, _ in rows]),
+            chunk=self.replay_batch,
+            tenant_ids=(None if self.n_tenants == 1 else
+                        np.array([t for _, _, _, t in rows], np.int32)))
+        self.cursors[r] = self.log.head
+        self.replays += 1
+        return len(rows)
+
+    def sync_all(self) -> None:
+        for r in range(self.n_replicas):
+            self.sync(r)
+
+    def promote(self, r: int) -> HasState:
+        """Failover: bring replica r fully up to date and hand its state
+        over as the new primary — the request trace continues on exactly
+        the cache the lost primary would have had (bit-exact, because
+        replay is the primary's own ingest fold)."""
+        self.sync(r)
+        return self.states[r]

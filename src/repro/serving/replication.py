@@ -1,4 +1,4 @@
-"""HaS edge-cache replication: snapshot, warm standby, failover.
+"""HaS edge-cache replication: delta log, snapshot, warm standby, failover.
 
 The paper deploys HaS as an edge component; in production the edge node is
 the new single point of failure for the latency win (losing the cache means
@@ -6,29 +6,38 @@ every query pays the cloud round-trip until the cache re-warms — minutes of
 degraded P99).  This module gives the HaS state the same durability story
 the training stack has:
 
+  * ``DeltaLog``: the ONE replication substrate — an append-only log of
+    cache_update inputs with monotone global sequence numbers.  Cloud warm
+    standbys (``WarmStandby``) consume it clear-on-snapshot style (failover
+    replays everything currently held; a snapshot clears it), and the edge
+    speculation replica pool (``serving/edge_pool.py::EdgeReplicaPool``)
+    consumes it delta-cursor style: each replica keeps the sequence number
+    it has replayed up to and ``since(cursor)`` hands it exactly the rows
+    it is missing without mutating the log.
   * ``snapshot`` / ``restore``: the HasState pytree (query cache, doc store,
-    ring pointers) serializes through the checkpoint manager (atomic +
-    validated) — the fuzzy-channel IVF index is rebuilt from the corpus, not
-    checkpointed (it is derived state).
-  * ``WarmStandby``: holds a delta log of cache_update inputs since the last
-    snapshot and can replay them onto a restored snapshot, so a standby
-    engine resumes with at most ``max_lag`` queries of acceptance-rate loss.
+    ring pointers, tenant layout) serializes through the checkpoint manager
+    (atomic + validated) — the fuzzy-channel IVF index is rebuilt from the
+    corpus, not checkpointed (it is derived state).
+  * ``WarmStandby``: per-tenant delta logs since the last snapshot, replayed
+    onto the restored snapshot at ``failover()`` so a standby engine resumes
+    with at most ``max_lag`` queries of acceptance-rate loss.
 
 Serving integration: ``retrieval/service.py::ReplicaBackend`` routes the
 scheduler's full-retrieval worker pool through warm standbys and mirrors
-every cache ingest onto each standby's delta log (``record_update``) via
+every cache ingest onto each member's delta log (``record_batch``) via
 the backend's ``on_ingest`` hook — with zero lag, ``failover()`` rebuilds
 EXACTLY the primary's cache (tests/test_retrieval_backends.py asserts
 bit-equality), so the scheduler no longer holds the only authoritative
-copy.
+copy.  ``EdgeReplicaPool`` implements the same ``record_batch`` sink
+protocol, so cloud standbys and edge speculation replicas ride one
+reconciliation path.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from collections import deque
-from typing import Any
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -37,17 +46,153 @@ from repro.core.has import (HasConfig, HasState, cache_update_chunked,
                             init_has_state, init_tenant_states)
 
 
+def validate_ingest_batch(q_embs, full_ids, full_vecs,
+                          tenant_ids=None) -> None:
+    """All leading dimensions of one ingest batch must agree.
+
+    The recording loops iterate the four arrays in lockstep; a bare
+    ``zip`` would silently DROP tail rows when one argument is shorter
+    (diverging the replica from the primary with no error), so every
+    recorder validates up front and raises instead.
+    """
+    lens = {"q_embs": len(q_embs), "full_ids": len(full_ids),
+            "full_vecs": len(full_vecs)}
+    if tenant_ids is not None:
+        lens["tenant_ids"] = len(tenant_ids)
+    if len(set(lens.values())) > 1:
+        raise ValueError(
+            "ingest batch leading dimensions disagree ("
+            + ", ".join(f"{k}={v}" for k, v in lens.items())
+            + ") — a zip over them would silently drop tail rows")
+
+
+def gather_doc_vecs(corpus_np: np.ndarray,
+                    full_ids: np.ndarray) -> np.ndarray:
+    """Gather ``[..., k]`` doc ids -> ``[..., k, d]`` corpus rows, with
+    padded (``-1``) ids ZEROED.
+
+    ``distributed_flat_search`` / ``sharded_topk_reference`` emit ``-1``
+    ids when the corpus holds fewer than k rows; a raw
+    ``corpus_np[full_ids]`` wraps those pythonically and silently gathers
+    the LAST corpus row into every padded slot, corrupting replica delta
+    logs.  Zero vectors are inert on replay (``cache_update`` drops
+    ``id < 0`` rows before they touch the doc store).
+    """
+    full_ids = np.asarray(full_ids)
+    vecs = np.asarray(corpus_np)[np.maximum(full_ids, 0)]
+    vecs = vecs.astype(np.float32, copy=True)
+    vecs[full_ids < 0] = 0.0
+    return vecs
+
+
+class DeltaLog:
+    """Append-only ingest log with monotone global sequence numbers.
+
+    Row ``i`` (0-based since the log's creation) has sequence number ``i``
+    forever, even after eviction/compaction: ``base`` is the sequence of
+    the oldest retained row and ``head`` is one past the newest.  Two
+    consumption styles share it:
+
+    * clear-on-snapshot (``WarmStandby``): ``clear()`` after a snapshot —
+      ``failover`` replays whatever is currently held.
+    * delta-cursor (``EdgeReplicaPool``): each replica remembers the
+      sequence it has replayed up to and asks ``since(cursor)`` for the
+      rows it is missing; nothing is cleared, and ``compact_below`` drops
+      rows every cursor has passed.
+
+    ``maxlen`` bounds memory the deque way: appending to a full log
+    evicts the oldest row and advances ``base``, so a cursor that has
+    fallen behind ``base`` detects (``LookupError``) that it must full
+    resync rather than silently skipping rows.
+    """
+
+    def __init__(self, maxlen: int | None = None):
+        self._rows: deque = deque(maxlen=maxlen)
+        self._base = 0
+
+    @property
+    def base(self) -> int:
+        return self._base
+
+    @property
+    def head(self) -> int:
+        return self._base + len(self._rows)
+
+    def append(self, row) -> None:
+        if (self._rows.maxlen is not None
+                and len(self._rows) == self._rows.maxlen):
+            self._base += 1                 # deque evicts the oldest row
+        self._rows.append(row)
+
+    def clear(self) -> None:
+        self._base += len(self._rows)
+        self._rows.clear()
+
+    def since(self, cursor: int) -> list:
+        """Rows with sequence >= cursor (the delta a consumer is missing)."""
+        if cursor < self._base:
+            raise LookupError(
+                f"cursor {cursor} has fallen behind the log base "
+                f"{self._base} (rows were evicted) — the consumer must "
+                "full-resync from a snapshot")
+        return list(itertools.islice(self._rows, cursor - self._base, None))
+
+    def compact_below(self, cursor: int) -> None:
+        """Drop rows every consumer has replayed (min cursor over them)."""
+        while self._rows and self._base < cursor:
+            self._rows.popleft()
+            self._base += 1
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def __iter__(self):
+        return iter(self._rows)
+
+
+def _tenant_stamp(state: HasState) -> int:
+    """Layout stamp persisted with a snapshot: 0 == the historical
+    unstacked single-tenant layout; T >= 1 == a stacked
+    ``init_tenant_states`` store with T partitions (a stacked ``[1, ...]``
+    store stamps 1, distinguishing it from the unstacked layout whose
+    array shapes may otherwise be compatible)."""
+    return int(state.q_ptr.shape[0]) if state.q_ptr.ndim else 0
+
+
+def _stamp_name(stamp: int) -> str:
+    return ("the historical unstacked single-tenant layout" if stamp == 0
+            else f"a stacked {stamp}-tenant store")
+
+
 def snapshot(mgr: CheckpointManager, step: int, state: HasState,
              blocking: bool = True) -> None:
+    """Persist the HasState pytree (+ its tenant-layout stamp).
+
+    Safe to call with ``blocking=False`` right before donation churn: the
+    checkpoint manager COPIES the tree to host before the writer thread
+    sees it (on CPU its host view could otherwise alias the device
+    buffers, which the next donated ``cache_update_batched`` overwrites in
+    place mid-save — see ``CheckpointManager.save``).
+    """
     tree = {"query_emb": state.query_emb, "query_doc_ids": state.query_doc_ids,
             "query_valid": state.query_valid, "q_ptr": state.q_ptr,
             "doc_emb": state.doc_emb, "doc_ids": state.doc_ids,
-            "d_ptr": state.d_ptr}
+            "d_ptr": state.d_ptr,
+            "n_tenants": np.int32(_tenant_stamp(state))}
     mgr.save(step, tree, blocking=blocking)
 
 
 def restore(mgr: CheckpointManager, cfg: HasConfig,
             n_tenants: int = 1) -> tuple[int, HasState] | None:
+    """Restore the latest snapshot, validating its tenant layout.
+
+    The checkpoint records the layout it was saved with
+    (:func:`_tenant_stamp`); restoring with a different ``n_tenants``
+    raises a clear ``ValueError`` instead of an opaque downstream shape
+    mismatch — or, worse, a silent misread between the unstacked T == 1
+    layout and a stacked store of compatible shapes.  Pre-stamp
+    checkpoints (no ``n_tenants`` leaf) restore without validation.
+    """
     template = (init_has_state(cfg) if n_tenants == 1
                 else init_tenant_states(cfg, n_tenants))
     tree = {"query_emb": template.query_emb,
@@ -55,10 +200,23 @@ def restore(mgr: CheckpointManager, cfg: HasConfig,
             "query_valid": template.query_valid, "q_ptr": template.q_ptr,
             "doc_emb": template.doc_emb, "doc_ids": template.doc_ids,
             "d_ptr": template.d_ptr}
-    out = mgr.restore_latest(tree)
+    try:
+        out = mgr.restore_latest({**tree,
+                                  "n_tenants": np.zeros((), np.int32)})
+        stamp = None if out is None else int(out[1].pop("n_tenants"))
+    except KeyError:                   # pre-stamp checkpoint: no layout leaf
+        out = mgr.restore_latest(dict(tree))
+        stamp = None
     if out is None:
         return None
     step, t = out
+    expected = 0 if n_tenants == 1 else n_tenants
+    if stamp is not None and stamp != expected:
+        raise ValueError(
+            f"checkpoint at step {step} holds {_stamp_name(stamp)} but "
+            f"restore requested n_tenants={n_tenants} "
+            f"({_stamp_name(expected)}) — pass the tenant count the state "
+            "was snapshotted with")
     return step, HasState(
         query_emb=jnp.asarray(t["query_emb"]),
         query_doc_ids=jnp.asarray(t["query_doc_ids"]),
@@ -90,13 +248,13 @@ class WarmStandby:
     n_tenants: int = 1
 
     def __post_init__(self):
-        self.logs: list[deque] = [deque(maxlen=self.max_lag)
-                                  for _ in range(self.n_tenants)]
+        self.logs: list[DeltaLog] = [DeltaLog(maxlen=self.max_lag)
+                                     for _ in range(self.n_tenants)]
         self._since_snapshot = 0
         self._step = 0
 
     @property
-    def log(self) -> deque:
+    def log(self) -> DeltaLog:
         """Tenant-0 delta log (the whole log when ``n_tenants == 1``)."""
         return self.logs[0]
 
@@ -126,6 +284,7 @@ class WarmStandby:
         primary folded them into — silently defaulting would funnel every
         delta into tenant 0 and diverge the replica from the primary).
         """
+        validate_ingest_batch(q_embs, full_ids, full_vecs, tenant_ids)
         if tenant_ids is None:
             if self.n_tenants > 1:
                 raise ValueError(

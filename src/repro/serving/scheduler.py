@@ -39,6 +39,20 @@ standbys, whose cache ingests the loop reconciles via
 count as accepted (only ``full`` pays for its own full retrieval; only
 ``full`` and ``shared`` wait on the cloud).
 
+The EDGE is a replica pool too (``SchedulerConfig.edge_replicas = R``,
+serving/edge_pool.py): R speculation dispatch slots, each backed by its
+own warm cache replica fed from the primary's ingest stream by
+bounded-lag delta replay (``edge_sync_every``).  Admission is
+staleness-aware — a batch goes to the freshest free replica — and its
+acceptance decisions are validated against THAT replica's own cache
+version, so an accept can only reference documents the serving replica
+actually holds (no phantom accepts on a stale cache).  Ingests still land
+on the primary alone; late re-validation at cloud-dispatch time checks
+the primary (the authoritative cache, where those ingests live).
+``R == 1`` is the historical single-edge path bit-exactly: the lone slot
+IS the primary (zero lag, no pool), mirroring how ``n_tenants == 1``
+keeps the unstacked store.
+
 Multi-tenancy (``SchedulerConfig.n_tenants > 1``): the cache is a
 tenant-partitioned stacked store (``core/has.py::init_tenant_states``) and
 every request carries a tenant tag (``serve(tenant_ids=...)`` or a
@@ -80,8 +94,10 @@ from repro.core.has import (HasConfig, cache_update_batched,
                             speculate_batch)
 from repro.core.homology import reidentify
 from repro.retrieval.ivf import build_ivf
+from repro.serving.edge_pool import DEFAULT_EDGE_SYNC_EVERY, EdgeReplicaPool
 from repro.serving.engine import (LLMS, RetrievalService, ServeResult,
                                   _metrics_init, _record)
+from repro.serving.replication import gather_doc_vecs
 from repro.serving.engine import fuzzy_scope as _fuzzy_scope
 
 # Sharing-threshold default as a multiple of the validation threshold
@@ -125,6 +141,15 @@ class SchedulerConfig:
     #                                  (None -> work-conserving fairness only)
     tenant_weights: tuple[float, ...] | None = None  # weighted-fair shares
     #                                  per tenant; None -> equal weights
+    # -- edge speculation replica pool (serving/edge_pool.py) --------------
+    edge_replicas: int = 1         # speculation cache replicas / dispatch
+    #                                slots; 1 == the historical single-edge
+    #                                path (the slot IS the primary),
+    #                                bit-exactly
+    edge_sync_every: int = DEFAULT_EDGE_SYNC_EVERY  # bounded-lag replay
+    #                                cadence: a replica this many ingested
+    #                                rows behind the primary replays its
+    #                                missing delta rows
 
 
 @dataclasses.dataclass
@@ -142,6 +167,14 @@ class SchedResult(ServeResult):
     leader_idx: np.ndarray | None = None   # shared-channel leader request
     #                                        index (-1 for non-followers)
     served_ids: np.ndarray | None = None   # [n, k] doc ids actually served
+    max_inflight_spec_batches: int = 1     # edge-pool concurrency high-water
+    edge_replays: int = 0                  # bounded-lag delta replay events
+    replica_ids: np.ndarray | None = None  # edge replica that speculated
+    #                                        each request (-1: never
+    #                                        speculated / R == 1 primary)
+    cache_versions: np.ndarray | None = None  # serving replica's cache
+    #                                        version (delta-log seq) at its
+    #                                        speculation dispatch (-1: R==1)
 
     def per_tenant(self) -> dict[int, dict[str, float]]:
         """Per-tenant metric slices (empty when served without tenants)."""
@@ -178,6 +211,8 @@ class SchedResult(ServeResult):
             "spec_batches": int(self.spec_batches),
             "full_batches": int(self.full_batches),
             "max_inflight_full_batches": int(self.max_inflight_full_batches),
+            "max_inflight_spec_batches": int(self.max_inflight_spec_batches),
+            "edge_replays": int(self.edge_replays),
         })
         return out
 
@@ -199,6 +234,9 @@ class _Request:
     slot: int = -1                         # leader-registry slot
     leader_idx: int = -1                   # leader request idx (followers)
     followers: list = dataclasses.field(default_factory=list)
+    replica: int = -1                      # edge replica that speculated it
+    cache_version: int = -1                # that replica's version at
+    #                                        dispatch (-1: R == 1 primary)
 
 
 # event-kind priorities at equal timestamps: full results ingest before a
@@ -235,6 +273,12 @@ class ContinuousBatchingScheduler:
                 float(w) for w in self.sched.tenant_weights)
         else:
             self.tenant_weights = (1.0,) * self.n_tenants
+        if self.sched.tenant_quota is not None and self.sched.tenant_quota < 1:
+            # quota 0 would livelock the loop: fair_pick could never drain
+            # the admission queues, yet they would keep the edge dispatching
+            raise ValueError(
+                f"tenant_quota must be >= 1 (or None), got "
+                f"{self.sched.tenant_quota}")
         self.state = self._init_state()
         self.index = index if index is not None else build_ivf(
             service.corpus, self.cfg.n_buckets, seed=seed)
@@ -254,6 +298,22 @@ class ContinuousBatchingScheduler:
             self.n_full_workers = max(1, int(self.sched.max_inflight_full))
         else:
             self.n_full_workers = max(1, int(service.backend.n_workers))
+        # edge speculation replica pool: R dispatch slots, each a warm cache
+        # replica fed by bounded-lag delta replay (serving/edge_pool.py);
+        # R == 1 keeps the historical single-edge path (the slot IS the
+        # primary state — zero lag, no pool object) bit-exactly
+        if self.sched.edge_replicas < 1:
+            raise ValueError(
+                f"edge_replicas must be >= 1, got {self.sched.edge_replicas}")
+        if self.sched.edge_sync_every < 1:
+            raise ValueError(
+                f"edge_sync_every must be >= 1, got "
+                f"{self.sched.edge_sync_every}")
+        self.n_edge_replicas = int(self.sched.edge_replicas)
+        self.edge_pool: EdgeReplicaPool | None = None   # built per serve()
+        self._keep_edge_log = False    # audits/tests: retain the delta log
+        if self.n_edge_replicas > 1:
+            self._corpus_np = np.asarray(service.corpus)  # pool delta vecs
         # late re-validation: homology re-check of queued validation drafts
         # against the updated query cache (no fuzzy scan needed); tenant
         # mode gathers each row's partition table inside the same program
@@ -330,7 +390,10 @@ class ContinuousBatchingScheduler:
         per ``ingest_batch`` chunk instead of one per request.  Row order
         matches the old per-request loop, so the final state is identical.
         The backend is then notified (``on_ingest``) so replica-style
-        backends can reconcile standby caches with the same rows."""
+        backends can reconcile standby caches, and the same rows are
+        appended to the edge pool's delta log (bounded-lag replay keeps
+        the speculation replicas within ``edge_sync_every`` rows of this
+        primary)."""
         rows = []
         for r in batch:
             rows.append(r)
@@ -346,6 +409,10 @@ class ContinuousBatchingScheduler:
             tenant_ids=tids)
         self.s.backend.on_ingest(q_embs, full_ids, self.state,
                                  tenant_ids=tids)
+        if self.edge_pool is not None:
+            self.edge_pool.record_batch(
+                q_embs, full_ids, gather_doc_vecs(self._corpus_np, full_ids),
+                self.state, tenant_ids=tids)
 
     # -- event loop --------------------------------------------------------
 
@@ -375,6 +442,14 @@ class ContinuousBatchingScheduler:
                 f"SchedulerConfig.n_tenants")
 
         self.state = self._init_state()          # independent stream
+        # edge replica pool: fresh replicas + delta log per stream (R == 1
+        # keeps the historical single-slot path — the slot IS the primary)
+        R = self.n_edge_replicas
+        self.edge_pool = None if R == 1 else EdgeReplicaPool(
+            self.cfg, R, sync_every=sc.edge_sync_every, n_tenants=T,
+            replay_batch=sc.ingest_batch,       # reuse the warmed-up shape
+            compact=not self._keep_edge_log)
+        pool = self.edge_pool
         rtt_rng = np.random.default_rng(seed)    # scheduler-owned RTT stream
         lat = self.s.latency
 
@@ -395,7 +470,8 @@ class ContinuousBatchingScheduler:
         leaders = [collections.deque() for _ in range(T)]    # queued leaders
         spec_served = [0.0] * T        # weighted-fair virtual service
         full_served = [0.0] * T
-        edge_busy = False
+        edge_free = list(range(R))     # free speculation dispatch slots
+        max_inflight_spec = 0          # edge-pool concurrency high-water
         inflight_full = 0              # busy cloud-pool workers
         max_inflight = 0               # pool-concurrency high-water mark
         timer_armed = False
@@ -497,7 +573,14 @@ class ContinuousBatchingScheduler:
                 _admit_chunk(group[i:i + sc.max_spec_batch])
 
         def dispatch_spec(t: float):
-            nonlocal edge_busy, seq, spec_batches
+            nonlocal seq, spec_batches, max_inflight_spec
+            # staleness-aware admission: the batch goes to the freshest
+            # free replica (highest cache version); R == 1 — the lone slot
+            # is the primary itself (zero lag, the historical path)
+            r_id = edge_free[0] if pool is None else pool.freshest(edge_free)
+            edge_free.remove(r_id)
+            spec_state = self.state if pool is None else pool.states[r_id]
+            version = -1 if pool is None else pool.version(r_id)
             batch = fair_pick(admission, spec_served, sc.max_spec_batch,
                               sc.tenant_quota)
             embs = np.zeros((sc.max_spec_batch, self.s.world.cfg.d),
@@ -512,25 +595,31 @@ class ContinuousBatchingScheduler:
                 for j, r in enumerate(batch):
                     batch_tids[j] = r.tenant
                 spec_tids = jnp.asarray(batch_tids)
-            out = speculate_batch(self.cfg, self.state, self.index,
+            # acceptance is decided against the SERVING replica's own cache
+            # version — a stale replica can only accept drafts its cache
+            # actually supports (no phantom accepts)
+            out = speculate_batch(self.cfg, spec_state, self.index,
                                   jnp.asarray(embs), backend=sc.backend,
                                   tenant_ids=spec_tids)
             accepts = np.asarray(out["accept"])
             drafts = np.asarray(out["draft_ids"])
             val_ids = np.asarray(out["val_ids"])
             for j, r in enumerate(batch):
+                r.replica, r.cache_version = r_id, version
                 if accepts[j]:
                     r.ids, r.channel = drafts[j], "draft"
                 else:
                     r.val_ids, r.draft_ids = val_ids[j], drafts[j]
             t_done = t + self._spec_time(len(batch))
-            heapq.heappush(heap, (t_done, _SPEC_DONE, seq, batch))
+            heapq.heappush(heap, (t_done, _SPEC_DONE, seq, (batch, r_id)))
             seq += 1
-            edge_busy = True
+            max_inflight_spec = max(max_inflight_spec, R - len(edge_free))
             spec_batches += 1
 
         def try_spec(t: float):
-            if not edge_busy and any(admission):
+            # speculation batches of later admissions overlap on DIFFERENT
+            # replicas, the way full retrievals overlap on cloud workers
+            while edge_free and any(admission):
                 dispatch_spec(t)
 
         def dispatch_full(t: float):
@@ -605,7 +694,8 @@ class ContinuousBatchingScheduler:
                 admission[payload.tenant].append(payload)
                 try_spec(t)
             elif kind == _SPEC_DONE:
-                edge_busy = False
+                payload, r_id = payload
+                edge_free.append(r_id)
                 rejected = []
                 for r in payload:
                     if r.channel == "draft":
@@ -653,6 +743,11 @@ class ContinuousBatchingScheduler:
             full_retrievals=full_retrievals,
             spec_batches=spec_batches, full_batches=full_batches,
             max_inflight_full_batches=max_inflight,
+            max_inflight_spec_batches=max(1, max_inflight_spec),
+            edge_replays=0 if pool is None else pool.replays,
+            replica_ids=np.array([r.replica for r in reqs], np.int32),
+            cache_versions=np.array([r.cache_version for r in reqs],
+                                    np.int64),
             tenant_ids=tids,
             leader_idx=np.array([r.leader_idx for r in reqs], np.int32),
             served_ids=np.stack([np.asarray(r.ids, np.int32)

@@ -1,0 +1,412 @@
+"""Edge speculation replica pool (serving/edge_pool.py + scheduler slots).
+
+Covers the PR's tentpole contracts:
+
+  * R == 1 stays bit-exact with the PRE-PR scheduler (golden trace
+    hashes generated from the historical code), on both speculation
+    backends;
+  * the delta-log substrate: sequence numbering, clear-on-snapshot vs
+    delta-cursor consumption, maxlen eviction detection, compaction;
+  * bounded-lag replay parity: a replica synced to version s is
+    bit-identical to the primary's state after its first s ingest rows;
+  * stale-accept audit: no accepted draft references a doc absent from
+    the serving replica's cache version (fuzzy channel disabled so drafts
+    can only come from the replica's own cache);
+  * failover mid-stream: promoting a replica continues the ingest trace
+    bit-exactly;
+  * ReplicaBackend unification: cloud standbys and the edge pool
+    reconcile off one ``on_ingest`` fan-out.
+"""
+import hashlib
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.has import (HasConfig, cache_update_chunked, init_has_state,
+                            init_tenant_states)
+from repro.data.synthetic import DATASETS, SyntheticWorld, WorldConfig
+from repro.serving.edge_pool import DEFAULT_EDGE_SYNC_EVERY, EdgeReplicaPool
+from repro.serving.engine import RetrievalService
+from repro.serving.latency import LatencyModel
+from repro.serving.replication import DeltaLog
+from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                     SchedulerConfig, poisson_arrivals)
+
+
+# ---------------------------------------------------------------------------
+# DeltaLog substrate
+# ---------------------------------------------------------------------------
+
+def test_delta_log_sequence_and_cursors():
+    log = DeltaLog()
+    for i in range(5):
+        log.append(i)
+    assert (log.base, log.head, len(log)) == (0, 5, 5)
+    assert log.since(0) == [0, 1, 2, 3, 4]
+    assert log.since(3) == [3, 4]
+    assert log.since(5) == []
+    log.compact_below(3)                     # min cursor over consumers
+    assert (log.base, log.head, len(log)) == (3, 5, 2)
+    assert log.since(3) == [3, 4]
+    with pytest.raises(LookupError):         # evicted rows are detectable
+        log.since(1)
+    log.clear()                              # clear-on-snapshot style
+    assert (log.base, log.head, len(log)) == (5, 5, 0)
+    log.append(9)
+    assert log.since(5) == [9]
+
+
+def test_delta_log_maxlen_eviction_advances_base():
+    log = DeltaLog(maxlen=3)
+    for i in range(5):
+        log.append(i)
+    assert (log.base, log.head, len(log)) == (2, 5, 3)
+    assert list(log) == [2, 3, 4]
+    with pytest.raises(LookupError):
+        log.since(0)                         # fell behind: must full-resync
+
+
+# ---------------------------------------------------------------------------
+# Pool-level replay parity + failover
+# ---------------------------------------------------------------------------
+
+def _rows(rng, n, cfg, hi=200):
+    qs = rng.normal(size=(n, cfg.d)).astype(np.float32)
+    ids = rng.integers(0, hi, size=(n, cfg.k)).astype(np.int32)
+    vecs = rng.normal(size=(n, cfg.k, cfg.d)).astype(np.float32)
+    return qs, ids, vecs
+
+
+def _fold(cfg, qs, ids, vecs, n_tenants=1, tids=None):
+    state = (init_has_state(cfg) if n_tenants == 1
+             else init_tenant_states(cfg, n_tenants))
+    if len(qs) == 0:
+        return state
+    return cache_update_chunked(cfg, state, qs, ids, vecs, chunk=16,
+                                tenant_ids=tids)
+
+
+def _assert_states_equal(a, b, msg=""):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=msg)
+
+
+def test_bounded_lag_replay_parity():
+    """After every record_batch, lag stays < sync_every; after a sync, the
+    replica equals the primary PREFIX fold at its cursor, bit-exactly."""
+    cfg = HasConfig(k=4, h_max=16, doc_capacity=64, d=8)
+    pool = EdgeReplicaPool(cfg, n_replicas=3, sync_every=5, compact=False)
+    rng = np.random.default_rng(0)
+    qs, ids, vecs = _rows(rng, 23, cfg)
+    for i0 in range(0, 23, 3):
+        pool.record_batch(qs[i0:i0 + 3], ids[i0:i0 + 3], vecs[i0:i0 + 3])
+        for r in range(3):
+            assert pool.lag(r) < pool.sync_every
+    for r in range(3):
+        v = pool.version(r)
+        _assert_states_equal(
+            pool.states[r], _fold(cfg, qs[:v], ids[:v], vecs[:v]),
+            msg=f"replica {r} at version {v}")
+    pool.sync_all()
+    for r in range(3):
+        assert pool.version(r) == 23
+        _assert_states_equal(pool.states[r], _fold(cfg, qs, ids, vecs))
+
+
+def test_pool_compaction_drops_fully_replayed_rows():
+    cfg = HasConfig(k=4, h_max=16, doc_capacity=64, d=8)
+    pool = EdgeReplicaPool(cfg, n_replicas=2, sync_every=4)   # compact=True
+    rng = np.random.default_rng(1)
+    qs, ids, vecs = _rows(rng, 12, cfg)
+    pool.record_batch(qs, ids, vecs)
+    # one 12-row batch trips the cadence for both replicas -> cursors at
+    # head -> everything compacted away
+    assert pool.version(0) == pool.version(1) == 12
+    assert len(pool.log) == 0 and pool.log.base == 12
+    # the NEXT delta still replays correctly from the compacted log
+    qs2, ids2, vecs2 = _rows(rng, 2, cfg)
+    pool.record_batch(qs2, ids2, vecs2)
+    pool.sync_all()
+    full = (np.concatenate([qs, qs2]), np.concatenate([ids, ids2]),
+            np.concatenate([vecs, vecs2]))
+    _assert_states_equal(pool.states[0], _fold(cfg, *full))
+
+
+def test_failover_midstream_continues_trace_bit_exactly():
+    """Primary dies mid-stream: promote() must hand over exactly the cache
+    the primary had, and continuing the ingest trace on the promoted state
+    matches an uninterrupted run."""
+    cfg = HasConfig(k=4, h_max=16, doc_capacity=64, d=8)
+    pool = EdgeReplicaPool(cfg, n_replicas=2, sync_every=7, compact=False)
+    rng = np.random.default_rng(2)
+    qs, ids, vecs = _rows(rng, 20, cfg)
+    m = 11                                   # rows ingested before the loss
+    for i in range(m):
+        pool.record_batch(qs[i:i + 1], ids[i:i + 1], vecs[i:i + 1])
+    assert pool.lag(1) > 0                   # genuinely stale at failover
+    promoted = pool.promote(1)
+    _assert_states_equal(promoted, _fold(cfg, qs[:m], ids[:m], vecs[:m]),
+                         msg="promoted replica != primary at failover")
+    # the trace continues on the promoted state
+    cont = cache_update_chunked(cfg, promoted, qs[m:], ids[m:], vecs[m:],
+                                chunk=16)
+    _assert_states_equal(cont, _fold(cfg, qs, ids, vecs),
+                         msg="continued trace diverged after failover")
+
+
+def test_pool_multi_tenant_replay_routes_partitions():
+    cfg = HasConfig(k=4, h_max=8, doc_capacity=32, d=8)
+    pool = EdgeReplicaPool(cfg, n_replicas=2, sync_every=3, n_tenants=3,
+                           compact=False)
+    rng = np.random.default_rng(3)
+    qs, ids, vecs = _rows(rng, 9, cfg, hi=60)
+    tids = np.array([0, 2, 0, 2, 2, 1, 0, 1, 2], np.int32)
+    pool.record_batch(qs, ids, vecs, tenant_ids=tids)
+    pool.sync_all()
+    _assert_states_equal(pool.states[0],
+                         _fold(cfg, qs, ids, vecs, n_tenants=3, tids=tids))
+    with pytest.raises(ValueError):          # tenant_ids required at T > 1
+        pool.record_batch(qs[:1], ids[:1], vecs[:1])
+
+
+def test_pool_validation():
+    cfg = HasConfig(k=4, h_max=8, doc_capacity=32, d=8)
+    with pytest.raises(ValueError):
+        EdgeReplicaPool(cfg, n_replicas=0)
+    with pytest.raises(ValueError):
+        EdgeReplicaPool(cfg, n_replicas=2, sync_every=0)
+    pool = EdgeReplicaPool(cfg, n_replicas=1)
+    rng = np.random.default_rng(4)
+    qs, ids, vecs = _rows(rng, 4, cfg)
+    with pytest.raises(ValueError):          # zip-truncation guard
+        pool.record_batch(qs, ids[:3], vecs)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler integration
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    world = SyntheticWorld(WorldConfig(n_entities=400, seed=0))
+    svc = RetrievalService(world, LatencyModel(), k=10, chunk=2048)
+    ds = DATASETS["granola"]
+    qs = world.sample_queries(160, pattern=ds["pattern"],
+                              zipf_a=ds["zipf_a"],
+                              p_uncovered=ds["p_uncovered"], seed=1)
+    cfg = HasConfig(k=10, tau=0.2, h_max=400, nprobe=4, n_buckets=256, d=64)
+    sched = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(
+        max_spec_batch=16, full_batch=8, full_max_wait_s=0.1))
+    return svc, qs, cfg, sched
+
+
+# Golden trace of the PRE-PR scheduler (generated from the historical code
+# before the edge-pool generalization, same setup as the fixture above:
+# poisson_arrivals(160, qps=30.0, seed=5), serve(seed=3) and the fully
+# saturated serve(None, seed=3)).  R == 1 must keep producing EXACTLY these
+# channels / completion times / served ids.
+_GOLDEN_POISSON = ("ee529472ed19175fb3b357b75a2348a1",
+                   "5acffd0fe97094942a39198f7ebbfb7f",
+                   "9e600796f5efd958709178a8aaf970cf")
+_GOLDEN_SATURATED = ("818904a0aba858b52dc05f954ac76e94",
+                     "b8f7083aa5617849da4d9f642d60d88d",
+                     "161545ea8e39fc12bcb43e7987d6a07a")
+
+
+def _trace_hashes(r):
+    return (hashlib.md5(",".join(r.channels).encode()).hexdigest(),
+            hashlib.md5(np.round(r.t_done, 9).tobytes()).hexdigest(),
+            hashlib.md5(r.served_ids.tobytes()).hexdigest())
+
+
+def test_r1_bit_exact_vs_pre_pr_golden_trace(setup):
+    _, qs, _, sched = setup
+    arr = poisson_arrivals(len(qs), qps=30.0, seed=5)
+    assert _trace_hashes(sched.serve(qs, arr, seed=3)) == _GOLDEN_POISSON
+    assert _trace_hashes(sched.serve(qs, None, seed=3)) == _GOLDEN_SATURATED
+
+
+def test_r1_inert_sync_knob_and_backends(setup):
+    """At R == 1 the lone slot IS the primary: edge_sync_every is inert,
+    and the xla / pallas(interpret) speculation backends stay bit-equal
+    through the pool-generalized loop (their parity is kernel-level,
+    tests/test_speculate_batch.py)."""
+    svc, qs, cfg, sched = setup
+    arr = poisson_arrivals(len(qs), qps=30.0, seed=5)
+    base = sched.serve(qs[:64], arr[:64], seed=3)
+    alt = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(
+        max_spec_batch=16, full_batch=8, full_max_wait_s=0.1,
+        edge_sync_every=1), index=sched.index)
+    r_alt = alt.serve(qs[:64], arr[:64], seed=3)
+    assert np.array_equal(base.t_done, r_alt.t_done)
+    assert np.array_equal(base.channels, r_alt.channels)
+    pal = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(
+        max_spec_batch=16, full_batch=8, full_max_wait_s=0.1,
+        backend="pallas"), index=sched.index)
+    r_pal = pal.serve(qs[:64], arr[:64], seed=3)
+    assert np.array_equal(base.channels, r_pal.channels)
+    assert np.array_equal(base.served_ids, r_pal.served_ids)
+
+
+def test_scheduler_edge_pool_overlaps_and_completes(setup):
+    svc, qs, cfg, sched = setup
+    arr = poisson_arrivals(len(qs), qps=60.0, seed=5)
+    pooled = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(
+        max_spec_batch=16, full_batch=8, full_max_wait_s=0.1,
+        edge_replicas=3, edge_sync_every=16), index=sched.index)
+    r = pooled.serve(qs, arr, seed=3)
+    assert np.all(r.channels != "pending") and np.all(r.t_done >= 0)
+    s = r.summary()
+    assert s["max_inflight_spec_batches"] >= 2      # genuine overlap
+    assert s["edge_replays"] > 0                    # bounded-lag replay ran
+    assert set(r.replica_ids.tolist()) == {0, 1, 2}
+    # versions are monotone along each replica's dispatch order
+    assert r.cache_versions.min() >= 0
+    # the pool beats the single-edge scheduler's saturated makespan
+    r1 = sched.serve(qs, arr, seed=3)
+    assert s["throughput_qps"] > r1.summary()["throughput_qps"]
+    # staleness at a tight sync cadence costs at most a few DAR points
+    assert s["dar"] >= r1.summary()["dar"] - 0.05
+    # determinism of the pooled path
+    r2 = pooled.serve(qs, arr, seed=3)
+    assert np.array_equal(r.t_done, r2.t_done)
+    assert np.array_equal(r.replica_ids, r2.replica_ids)
+
+
+def test_stale_accept_audit_no_phantom_accepts(setup):
+    """With the fuzzy channel off, a draft can only contain docs from the
+    SERVING replica's cache — fold the delta-log prefix at each accept's
+    recorded cache version and assert every served id was in it."""
+    svc, qs, _, sched = setup
+    cfg_nf = HasConfig(k=10, tau=0.2, h_max=400, nprobe=4, n_buckets=256,
+                       d=64, use_fuzzy_validation=False,
+                       use_fuzzy_enhancement=False)
+    pooled = ContinuousBatchingScheduler(svc, cfg_nf, SchedulerConfig(
+        max_spec_batch=16, full_batch=8, full_max_wait_s=0.1,
+        edge_replicas=3, edge_sync_every=8), index=sched.index)
+    pooled._keep_edge_log = True                  # retain rows for the audit
+    # paced arrivals: the cache must warm (and replicas sync) while the
+    # stream is still running, or nothing can accept with the fuzzy
+    # channel off
+    r = pooled.serve(qs, poisson_arrivals(len(qs), qps=15.0, seed=5),
+                     seed=3)
+    pool = pooled.edge_pool
+    rows = pool.log.since(0)
+    drafts = np.flatnonzero(r.channels == "draft")
+    assert len(drafts) > 0
+    audited = 0
+    by_version = {}
+    for i in drafts:
+        by_version.setdefault(int(r.cache_versions[i]), []).append(i)
+    for v, idxs in by_version.items():
+        if v == 0:
+            docs = set()
+        else:
+            st = _fold(cfg_nf,
+                       np.stack([q for q, _, _, _ in rows[:v]]),
+                       np.stack([d for _, d, _, _ in rows[:v]]),
+                       np.stack([x for _, _, x, _ in rows[:v]]))
+            docs = {int(x) for x in np.asarray(st.doc_ids) if x >= 0}
+        for i in idxs:
+            served = [int(x) for x in r.served_ids[i] if x >= 0]
+            assert set(served) <= docs, (
+                f"request {i} accepted on replica {r.replica_ids[i]} at "
+                f"version {v} references docs outside that cache version")
+            audited += 1
+    assert audited == len(drafts)
+
+
+def test_pool_as_replica_backend_member(setup):
+    """Unification: one ReplicaBackend.on_ingest fan-out feeds a cloud
+    WarmStandby AND an EdgeReplicaPool — failover/promote both rebuild the
+    scheduler's final cache bit-exactly."""
+    from repro.checkpoint import CheckpointManager
+    from repro.retrieval.service import LocalFlatBackend, ReplicaBackend
+    from repro.serving.replication import WarmStandby
+    world = setup[0].world
+    qs, cfg = setup[1], setup[2]
+    standby = WarmStandby(cfg, CheckpointManager(tempfile.mkdtemp()),
+                          snapshot_every=10**9, max_lag=10**6)
+    pool = EdgeReplicaPool(cfg, n_replicas=2, sync_every=50, compact=False)
+    lat = LatencyModel()
+    corpus = jnp.asarray(world.doc_emb)
+    svc = RetrievalService(world, lat, k=10, chunk=2048,
+                           backend=ReplicaBackend(
+                               LocalFlatBackend(corpus, 10, lat, chunk=2048),
+                               [standby, pool], corpus))
+    sch = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(
+        max_spec_batch=16, full_batch=8, full_max_wait_s=0.1))
+    sch.serve(qs[:120], None, seed=0)
+    assert len(standby.log) > 0 and pool.log.head > 0
+    _assert_states_equal(standby.failover(), sch.state,
+                         msg="cloud standby diverged")
+    _assert_states_equal(pool.promote(0), sch.state,
+                         msg="edge replica diverged")
+
+
+def test_edge_pool_composes_with_tenant_partitioning(setup):
+    """R > 1 and T > 1 together: replica states are stacked per-tenant
+    stores, delta rows carry tenant tags through replay, and the stream
+    completes deterministically with no cross-tenant leakage in the
+    sharing channel."""
+    svc, qs, cfg, sched = setup
+    T = 2
+    tids = np.array([i % T for i in range(len(qs))], np.int32)
+    pooled = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(
+        max_spec_batch=16, full_batch=8, full_max_wait_s=0.1,
+        n_tenants=T, edge_replicas=2, edge_sync_every=16),
+        index=sched.index)
+    pooled._keep_edge_log = True
+    arr = poisson_arrivals(len(qs), qps=60.0, seed=5)
+    r = pooled.serve(qs, arr, seed=3, tenant_ids=tids)
+    assert np.all(r.channels != "pending")
+    assert r.summary()["max_inflight_spec_batches"] >= 2
+    # replica replay routed rows into the right partitions: a synced
+    # replica equals the primary (stacked) state prefix at the log head
+    pool = pooled.edge_pool
+    rows = pool.log.since(0)
+    pool.sync_all()
+    _assert_states_equal(
+        pool.states[0],
+        _fold(cfg, np.stack([q for q, _, _, _ in rows]),
+              np.stack([d for _, d, _, _ in rows]),
+              np.stack([v for _, _, v, _ in rows]), n_tenants=T,
+              tids=np.array([t for _, _, _, t in rows], np.int32)))
+    _assert_states_equal(pool.states[0], pooled.state)
+    # followers never cross tenants even when batches land on replicas
+    sh = np.flatnonzero(r.channels == "shared")
+    if len(sh):
+        assert np.all(r.tenant_ids[r.leader_idx[sh]] == r.tenant_ids[sh])
+    r2 = pooled.serve(qs, arr, seed=3, tenant_ids=tids)
+    assert np.array_equal(r.t_done, r2.t_done)
+
+
+def test_scheduler_config_validation(setup):
+    svc, _, cfg, _ = setup
+    with pytest.raises(ValueError):
+        ContinuousBatchingScheduler(svc, cfg,
+                                    SchedulerConfig(edge_replicas=0))
+    with pytest.raises(ValueError):
+        ContinuousBatchingScheduler(svc, cfg,
+                                    SchedulerConfig(edge_sync_every=0))
+    with pytest.raises(ValueError):       # quota 0 would livelock the loop
+        ContinuousBatchingScheduler(svc, cfg,
+                                    SchedulerConfig(tenant_quota=0))
+
+
+@pytest.mark.parametrize("argv", [
+    ["--edge-replicas", "0"],
+    ["--edge-sync-every", "0", "--engine", "sched"],
+    ["--edge-replicas", "2", "--engine", "has"],
+    ["--edge-sync-every", "16", "--engine", "has"],
+    ["--qps", "10", "--engine", "has"],
+    ["--qps", "-1", "--engine", "sched"],
+])
+def test_serve_cli_rejects_invalid_edge_args(argv):
+    from repro.launch.serve import main
+    with pytest.raises(SystemExit):
+        main(argv)

@@ -1,10 +1,13 @@
 """HaS edge-cache snapshot/restore + warm-standby failover."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint import CheckpointManager
-from repro.core.has import HasConfig, cache_update, init_has_state
-from repro.serving.replication import WarmStandby, restore, snapshot
+from repro.core.has import (HasConfig, cache_update, cache_update_batched,
+                            init_has_state, init_tenant_states)
+from repro.serving.replication import (WarmStandby, gather_doc_vecs,
+                                       restore, snapshot)
 
 
 def _updated_state(cfg, n, seed=0):
@@ -124,6 +127,123 @@ def test_record_batch_cadence_boundary_at_exactly_full_batch(tmp_path):
         np.testing.assert_array_equal(np.asarray(getattr(primary, f)),
                                       np.asarray(getattr(recovered, f)),
                                       err_msg=f)
+
+
+def test_record_batch_rejects_mismatched_leading_dims(tmp_path):
+    """Regression: the recording loop used a bare zip over
+    (q_embs, full_ids, full_vecs, tenant_ids), which silently DROPPED tail
+    rows when one argument was shorter — the standby then diverged from
+    the primary with no error.  Mismatches must raise instead."""
+    cfg = HasConfig(k=4, h_max=8, doc_capacity=32, d=8)
+    standby = WarmStandby(cfg, CheckpointManager(str(tmp_path)))
+    rng = np.random.default_rng(0)
+    qs = rng.normal(size=(4, cfg.d)).astype(np.float32)
+    ids = rng.integers(0, 50, size=(4, cfg.k)).astype(np.int32)
+    vecs = rng.normal(size=(4, cfg.k, cfg.d)).astype(np.float32)
+    state = init_has_state(cfg)
+    for bad in [(qs[:3], ids, vecs, None), (qs, ids[:2], vecs, None),
+                (qs, ids, vecs[:1], None),
+                (qs, ids, vecs, np.zeros(3, np.int32))]:
+        with pytest.raises(ValueError, match="leading dimensions"):
+            standby.record_batch(bad[0], bad[1], bad[2], state,
+                                 tenant_ids=bad[3])
+    assert len(standby.log) == 0             # nothing partially recorded
+    standby.record_batch(qs, ids, vecs, state)   # matching dims still fine
+    assert len(standby.log) == 4
+
+
+def test_gather_doc_vecs_zeroes_padded_ids():
+    """Regression: corpus[full_ids] wraps -1 pythonically and gathers the
+    LAST corpus row into padded slots (corpus < k searches emit -1)."""
+    corpus = np.arange(5 * 3, dtype=np.float32).reshape(5, 3)
+    ids = np.array([[0, 4, -1], [-1, 2, -1]], np.int32)
+    vecs = gather_doc_vecs(corpus, ids)
+    np.testing.assert_array_equal(vecs[0, 0], corpus[0])
+    np.testing.assert_array_equal(vecs[0, 1], corpus[4])
+    np.testing.assert_array_equal(vecs[0, 2], 0.0)   # NOT corpus[-1]
+    np.testing.assert_array_equal(vecs[1, 0], 0.0)
+    np.testing.assert_array_equal(vecs[1, 2], 0.0)
+
+
+def test_async_snapshot_immune_to_donating_ingest_churn(tmp_path):
+    """Regression: snapshot(..., blocking=False) handed the checkpoint
+    writer a host view that can ALIAS the device buffers on CPU; the next
+    donated cache_update_batched overwrote them mid-save, corrupting the
+    checkpoint (same class of bug for train.py's donated step_fn).  The
+    WRITER THREAD must receive a host copy (asserted via np.shares_memory
+    at the _write boundary — deterministic, unlike the race itself) and
+    the restored value must match the state at call time regardless of
+    immediately-following donation churn."""
+    cfg = HasConfig(k=8, h_max=256, doc_capacity=4096, d=64)
+    captured = {}
+
+    class SpyMgr(CheckpointManager):
+        def _write(self, step, host_tree):
+            captured["tree"] = host_tree
+            super()._write(step, host_tree)
+
+    mgr = SpyMgr(str(tmp_path))
+    rng = np.random.default_rng(5)
+
+    def batch(n):
+        return (jnp.asarray(rng.normal(size=(n, cfg.d)), jnp.float32),
+                jnp.asarray(rng.integers(0, 5000, size=(n, cfg.k)),
+                            jnp.int32),
+                jnp.asarray(rng.normal(size=(n, cfg.k, cfg.d)), jnp.float32))
+
+    state = init_has_state(cfg)
+    state = cache_update_batched(cfg, state, *batch(32))   # warm + compile
+    expect = {f: np.array(getattr(state, f)) for f in
+              ("query_emb", "query_doc_ids", "query_valid", "q_ptr",
+               "doc_emb", "doc_ids", "d_ptr")}
+    snapshot(mgr, 1, state, blocking=False)
+    mgr.wait()                     # writer done; captured["tree"] is set
+    # the writer thread's tree must not alias the live device buffers (on
+    # CPU, device_get of a jax array can be a zero-copy view — handing
+    # THAT to the background thread is the bug)
+    for f in ("doc_emb", "query_emb", "doc_ids"):
+        assert not np.shares_memory(np.asarray(captured["tree"][f]),
+                                    np.asarray(getattr(state, f))), f
+    # donation churn: each call recycles the previous state's buffers in
+    # place — the checkpoint on disk must still hold the pre-churn values
+    for _ in range(8):
+        state = cache_update_batched(cfg, state, *batch(32))
+    mgr.wait()
+    _, restored = restore(mgr, cfg)
+    for f, v in expect.items():
+        np.testing.assert_array_equal(np.asarray(getattr(restored, f)), v,
+                                      err_msg=f)
+
+
+def test_restore_validates_tenant_count(tmp_path):
+    """Regression: snapshots recorded no tenant layout, so a wrong-T
+    restore surfaced as an opaque downstream shape mismatch (or a silent
+    misread between the unstacked T == 1 layout and a stacked store)."""
+    cfg = HasConfig(k=4, h_max=8, doc_capacity=32, d=8)
+    mgr = CheckpointManager(str(tmp_path))
+    snapshot(mgr, 3, init_tenant_states(cfg, 3))
+    with pytest.raises(ValueError, match="3-tenant"):
+        restore(mgr, cfg, n_tenants=2)
+    with pytest.raises(ValueError, match="3-tenant"):
+        restore(mgr, cfg, n_tenants=1)
+    step, state = restore(mgr, cfg, n_tenants=3)    # the right count loads
+    assert step == 3 and state.q_ptr.shape == (3,)
+
+
+def test_restore_distinguishes_stacked_one_tenant_from_unstacked(tmp_path):
+    """A stacked [1, ...] store has shapes a template can silently misread
+    against the unstacked layout — the layout stamp must catch it."""
+    cfg = HasConfig(k=4, h_max=8, doc_capacity=32, d=8)
+    mgr = CheckpointManager(str(tmp_path))
+    snapshot(mgr, 1, init_tenant_states(cfg, 1))    # stacked, T == 1
+    with pytest.raises(ValueError, match="stacked 1-tenant"):
+        restore(mgr, cfg, n_tenants=1)              # unstacked template
+    mgr2 = CheckpointManager(str(tmp_path / "unstacked"))
+    snapshot(mgr2, 1, init_has_state(cfg))          # historical layout
+    with pytest.raises(ValueError, match="unstacked"):
+        restore(mgr2, cfg, n_tenants=2)
+    step, state = restore(mgr2, cfg, n_tenants=1)
+    assert step == 1 and state.q_ptr.ndim == 0
 
 
 def test_multi_tenant_failover_rebuilds_each_partition(tmp_path):

@@ -222,6 +222,78 @@ def test_replica_mirrors_sequential_engine_ingest(world_setup):
         assert np.array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_replica_on_ingest_masks_padded_ids_corpus_smaller_than_k():
+    """Regression: corpus < k searches emit -1 padded ids, and
+    ReplicaBackend.on_ingest gathered corpus[-1] (the LAST corpus row)
+    into every padded slot of the standby delta logs.  Padded rows must
+    record ZERO vectors, and failover must still rebuild the primary's
+    cache bit-exactly."""
+    import tempfile
+
+    from repro.checkpoint import CheckpointManager
+    from repro.core.has import cache_update_chunked, init_has_state
+    from repro.serving.replication import WarmStandby
+    rng = np.random.default_rng(7)
+    n, k, d = 5, 7, 16                       # whole corpus < k
+    corpus = jnp.asarray(_unit(rng, n, d))
+    lat = LatencyModel()
+    cfg = HasConfig(k=k, tau=0.2, h_max=16, doc_capacity=64, d=d)
+    standby = WarmStandby(cfg, CheckpointManager(tempfile.mkdtemp()),
+                          snapshot_every=10**9, max_lag=10**6)
+    backend = ReplicaBackend(
+        ShardedMeshBackend(corpus, k, lat, n_shards=2), [standby], corpus)
+    qs = np.asarray(_unit(rng, 6, d), np.float32)
+    _, ids = backend.search(jnp.asarray(qs))
+    ids = np.asarray(ids, np.int32)
+    assert (ids < 0).any()                   # the padded-tail case is live
+    # primary folds the same rows the way the scheduler does (device-side
+    # corpus gather); the backend mirrors them onto the standby log
+    primary = cache_update_chunked(cfg, init_has_state(cfg), qs, ids,
+                                   corpus=corpus, chunk=4)
+    backend.on_ingest(qs, ids, primary)
+    last_row = np.asarray(corpus[-1])
+    for q, row_ids, vecs in standby.log:
+        pad = row_ids < 0
+        assert pad.any()
+        assert np.all(vecs[pad] == 0.0), "padded slot gathered corpus[-1]"
+        assert not np.any([np.array_equal(v, last_row)
+                           for v in vecs[pad]])
+    recovered = standby.failover()
+    for a, b in zip(jax.tree.leaves(recovered), jax.tree.leaves(primary)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_scheduler_replica_failover_bit_equal_corpus_smaller_than_k():
+    """End-to-end corpus < k: the scheduler served over a ReplicaBackend
+    whose every search pads with -1 — standby failover must equal the
+    scheduler's final cache bit-for-bit."""
+    import tempfile
+
+    from repro.checkpoint import CheckpointManager
+    from repro.data.synthetic import SyntheticWorld, WorldConfig
+    from repro.serving.replication import WarmStandby
+    world = SyntheticWorld(WorldConfig(n_entities=2, seed=0))
+    corpus = jnp.asarray(world.doc_emb[:6])  # 6 rows < k = 10
+    lat = LatencyModel()
+    cfg = HasConfig(k=10, tau=0.2, h_max=32, doc_capacity=128, nprobe=2,
+                    n_buckets=4, d=world.cfg.d)
+    standby = WarmStandby(cfg, CheckpointManager(tempfile.mkdtemp()),
+                          snapshot_every=10**9, max_lag=10**6)
+    backend = ReplicaBackend(
+        LocalFlatBackend(corpus, 10, lat, chunk=4), [standby], corpus)
+    svc = RetrievalService(world, lat, k=10, chunk=4, backend=backend)
+    qs = world.sample_queries(40, pattern="scattered", p_uncovered=0.9,
+                              seed=3)
+    sch = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(
+        max_spec_batch=8, full_batch=4, full_max_wait_s=0.1))
+    r = sch.serve(qs, None, seed=0)
+    full = np.flatnonzero(r.channels == "full")
+    assert len(full) and (r.served_ids[full] < 0).any()   # -1s were served
+    recovered = standby.failover()
+    for a, b in zip(jax.tree.leaves(recovered), jax.tree.leaves(sch.state)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_max_inflight_full_deprecation_shim(world_setup):
     """Old configs still load: a non-None max_inflight_full warns and
     overrides the backend-sized worker pool."""
