@@ -49,6 +49,12 @@ Three opt-in sweeps ride along (see --help):
     R = 4.  Verdicts: throughput scales monotonically with R, and DAR at
     the default sync cadence stays within 2 points of the zero-lag
     R = 1 path.  Writes ``BENCH_edge_replicas.json``.
+  * ``--sweep-overload`` — SLO-aware overload control at 4x edge
+    saturation: admitted-request p99 and goodput under
+    ``overload_policy`` shed / degrade vs the uncontrolled baseline,
+    plus the tracing zero-cost verdict (compat accounting with tracing
+    off reproduces the pre-PR golden traces bit-exactly).  Writes
+    ``BENCH_overload.json``.
 
 Run standalone:  PYTHONPATH=src python -m benchmarks.sched_throughput
 """
@@ -529,6 +535,151 @@ def sweep_edge_replicas(out_path: str = "BENCH_edge_replicas.json"):
     return rows
 
 
+def sweep_overload(out_path: str = "BENCH_overload.json"):
+    """SLO-aware overload control at 4x saturation + tracing zero-cost.
+
+    Drives a Poisson arrival stream at 4x the edge speculation service
+    rate (open loop: without control the admission queue grows without
+    bound and p99 is meaningless) and compares overload_policy
+    none / shed / degrade at an SLO of 2.5x the unloaded reject-path
+    latency.  Verdicts:
+
+    (a) bounded p99 — admitted-request p99 under ``shed`` stays within
+        SLO + one unloaded reject-path service pass, while the
+        uncontrolled run blows far past it;
+    (b) goodput — ``shed`` completes at least as many within-SLO results
+        per second as the uncontrolled run (it stops burning the cloud
+        stage on requests that are already doomed);
+    (c) tracing zero-cost — on the pinned golden fixture
+        (tests/test_edge_pool.py), the compat accounting point
+        (free_ingest_replay=True, follower_score_weighted=False) with
+        tracing DISABLED reproduces the pre-PR golden trace hashes
+        bit-exactly, and enabling tracing changes nothing — the span
+        bookkeeping never advances the virtual clock.
+    """
+    import hashlib
+
+    from repro.core.has import HasConfig
+    from repro.data.synthetic import DATASETS, SyntheticWorld, WorldConfig
+    rows = []
+    svc = get_service()
+    n = min(N_QUERIES, 1500)
+    qs = list(get_queries("granola", n=n))
+    cfg = has_config()
+    base_kw = dict(max_spec_batch=32, full_batch=16, full_max_wait_s=0.05)
+    base = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(**base_kw))
+
+    # 4x saturation of the edge stage; SLO = 2.5x the unloaded reject path
+    # (one speculation pass + one cloud pass, mean RTTs)
+    lat = svc.latency
+    spec_svc = base._spec_time(base.sched.max_spec_batch)
+    full_svc = base._full_time(base.sched.full_batch)
+    reject_path = (spec_svc + 0.5 * (lat.edge_rtt[0] + lat.edge_rtt[1])
+                   + full_svc + 0.5 * (lat.cloud_rtt[0] + lat.cloud_rtt[1]))
+    slo = 2.5 * reject_path
+    edge_rate = base.sched.max_spec_batch / spec_svc
+    qps = 4.0 * edge_rate
+    arrivals = poisson_arrivals(n, qps=qps, seed=11)
+
+    summaries = {}
+    for policy in ("none", "shed", "degrade"):
+        sched = base if policy == "none" else ContinuousBatchingScheduler(
+            svc, cfg, SchedulerConfig(
+                **base_kw, slo_deadline_s=slo, overload_policy=policy),
+            index=base.index)
+        if policy == "none":
+            # the uncontrolled baseline still reports goodput vs the SLO
+            r = sched.serve(qs, arrivals, seed=0)
+            r.slo_deadline_s = slo
+        else:
+            r = sched.serve(qs, arrivals, seed=0)
+        s = r.summary()
+        summaries[policy] = s
+        if policy == "shed":
+            shed_breakdown = r.trace.stage_breakdown()
+        rows.append(row(
+            f"overload/{policy}", s["avg_latency_s"],
+            f"p99={s['p99_latency_s']:.2f}s;"
+            f"p99_adm={s['p99_admitted_latency_s']:.2f}s;"
+            f"goodput={s['goodput_qps']:.2f}qps;shed={s['shed']};"
+            f"degraded={s['degraded']};dar={s['dar']:.4f};"
+            f"makespan={s['makespan_s']:.1f}s"))
+
+    # (c) tracing zero-cost on the pinned golden fixture (small and FIXED —
+    # independent of BENCH_FAST, matching tests/test_edge_pool.py)
+    gworld = SyntheticWorld(WorldConfig(n_entities=400, seed=0))
+    gsvc = RetrievalService(gworld, LatencyModel(), k=10, chunk=2048)
+    ds = DATASETS["granola"]
+    gqs = gworld.sample_queries(160, pattern=ds["pattern"],
+                                zipf_a=ds["zipf_a"],
+                                p_uncovered=ds["p_uncovered"], seed=1)
+    gcfg = HasConfig(k=10, tau=0.2, h_max=400, nprobe=4, n_buckets=256,
+                     d=64)
+    garr = poisson_arrivals(160, qps=30.0, seed=5)
+    compat_kw = dict(max_spec_batch=16, full_batch=8, full_max_wait_s=0.1,
+                     free_ingest_replay=True, follower_score_weighted=False)
+
+    def hashes(r):
+        return (hashlib.md5(",".join(r.channels).encode()).hexdigest(),
+                hashlib.md5(np.round(r.t_done, 9).tobytes()).hexdigest(),
+                hashlib.md5(r.served_ids.tobytes()).hexdigest())
+
+    # pre-PR golden trace hashes (tests/test_edge_pool.py::_GOLDEN_POISSON,
+    # generated from the historical scheduler before tracing existed)
+    golden = ("ee529472ed19175fb3b357b75a2348a1",
+              "5acffd0fe97094942a39198f7ebbfb7f",
+              "9e600796f5efd958709178a8aaf970cf")
+    off = ContinuousBatchingScheduler(
+        gsvc, gcfg, SchedulerConfig(**compat_kw, trace=False))
+    r_off = off.serve(gqs, garr, seed=3)
+    on = ContinuousBatchingScheduler(
+        gsvc, gcfg, SchedulerConfig(**compat_kw, trace=True),
+        index=off.index)
+    r_on = on.serve(gqs, garr, seed=3)
+    zero_ok = (hashes(r_off) == golden and hashes(r_on) == golden
+               and r_off.trace is None and r_on.trace is not None)
+    rows.append(row(
+        "overload/verdict_tracing_zero_cost", 0.0,
+        f"{'PASS' if zero_ok else 'FAIL'}"
+        f"(compat_off={'==' if hashes(r_off) == golden else '!='}golden;"
+        f"compat_on={'==' if hashes(r_on) == golden else '!='}golden)"))
+
+    # (a) bounded p99 for admitted requests under shed
+    p99_bound = slo + reject_path
+    s_none, s_shed = summaries["none"], summaries["shed"]
+    p99_ok = (s_shed["shed"] > 0
+              and s_shed["p99_admitted_latency_s"] <= p99_bound
+              and s_none["p99_latency_s"] > p99_bound)
+    rows.append(row(
+        "overload/verdict_shed_p99", 0.0,
+        f"{'PASS' if p99_ok else 'FAIL'}"
+        f"(p99_adm_shed={s_shed['p99_admitted_latency_s']:.2f}s;"
+        f"bound={p99_bound:.2f}s;p99_none={s_none['p99_latency_s']:.2f}s)"))
+    # (b) goodput no worse than the uncontrolled baseline
+    good_ok = s_shed["goodput_qps"] >= s_none["goodput_qps"]
+    rows.append(row(
+        "overload/verdict_goodput", 0.0,
+        f"{'PASS' if good_ok else 'FAIL'}"
+        f"(shed={s_shed['goodput_qps']:.2f}qps;"
+        f"none={s_none['goodput_qps']:.2f}qps;"
+        f"degrade={summaries['degrade']['goodput_qps']:.2f}qps)"))
+
+    with open(out_path, "w") as f:
+        json.dump({
+            "n_queries": n,
+            "arrival_qps": qps,
+            "edge_rate_qps": edge_rate,
+            "slo_deadline_s": slo,
+            "p99_bound_s": p99_bound,
+            "policies": summaries,
+            "shed_stage_breakdown": shed_breakdown,
+            "verdicts": {"shed_p99": bool(p99_ok),
+                         "goodput": bool(good_ok),
+                         "tracing_zero_cost": bool(zero_ok)},
+        }, f, indent=2)
+    return rows
+
+
 if __name__ == "__main__":
     from benchmarks.common import fmt_rows
     ap = argparse.ArgumentParser(
@@ -555,6 +706,11 @@ if __name__ == "__main__":
                          "throughput R=1→4 at fixed arrival rate + DAR vs "
                          "edge_sync_every staleness at R=4; writes "
                          "BENCH_edge_replicas.json")
+    ap.add_argument("--sweep-overload", action="store_true",
+                    help="SLO-aware overload control at 4x saturation: "
+                         "shed/degrade vs uncontrolled p99 + goodput, and "
+                         "the tracing zero-cost golden-trace verdict; "
+                         "writes BENCH_overload.json")
     ap.add_argument("--skip-base", action="store_true",
                     help="run only the requested sweeps, not the base "
                          "throughput/DAR/sharing verdicts")
@@ -570,4 +726,6 @@ if __name__ == "__main__":
         rows += sweep_tenants()
     if args.sweep_edge_replicas:
         rows += sweep_edge_replicas()
+    if args.sweep_overload:
+        rows += sweep_overload()
     print(fmt_rows(rows))

@@ -25,6 +25,14 @@ stage is a REPLICA POOL (serving/edge_pool.py): ``--edge-replicas R``
 cache replicas each take speculation batches concurrently, kept within
 ``--edge-sync-every`` ingested rows of the primary by bounded-lag delta
 replay.  R == 1 is the historical single-edge scheduler bit-exactly.
+
+SLO-aware overload control (``--engine sched`` only): ``--slo-deadline S``
+reports goodput against an end-to-end latency SLO, and
+``--overload-policy shed|degrade`` keeps admitted-request p99 bounded past
+saturation — shed rejects at admission, degrade serves speculation-only
+drafts.  The result's per-stage virtual-clock breakdown (queue wait /
+replay / spec / edge RTT / reval / cloud queue / cloud / ingest) is
+printed after the summary.
 """
 from __future__ import annotations
 
@@ -68,6 +76,17 @@ def main(argv=None) -> None:
     ap.add_argument("--qps", type=float, default=None,
                     help="open-loop Poisson arrival rate for --engine "
                          "sched (omit for fully saturated admission)")
+    ap.add_argument("--slo-deadline", type=float, default=None,
+                    help="end-to-end latency SLO in seconds for --engine "
+                         "sched (reports goodput; required by "
+                         "--overload-policy)")
+    ap.add_argument("--overload-policy", default="none",
+                    choices=["none", "shed", "degrade"],
+                    help="overload control for --engine sched: shed "
+                         "rejects at admission when the predicted "
+                         "completion blows --slo-deadline; degrade serves "
+                         "speculation-only drafts (accept=False) under "
+                         "overload")
     ap.add_argument("--tau", type=float, default=0.2)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--h-max", type=int, default=5000)
@@ -108,6 +127,17 @@ def main(argv=None) -> None:
     if args.qps is not None and args.engine != "sched":
         ap.error("--qps only applies to --engine sched (the other engines "
                  "serve a closed loop)")
+    if args.slo_deadline is not None and args.slo_deadline <= 0:
+        ap.error(f"--slo-deadline must be > 0 (got {args.slo_deadline})")
+    if ((args.slo_deadline is not None or args.overload_policy != "none")
+            and args.engine != "sched"):
+        ap.error("--slo-deadline/--overload-policy only apply to --engine "
+                 "sched (the sequential engines have no admission queue "
+                 "to control)")
+    if args.overload_policy != "none" and args.slo_deadline is None:
+        ap.error(f"--overload-policy {args.overload_policy} requires "
+                 "--slo-deadline (the policy triggers on the predicted "
+                 "completion blowing the deadline)")
     workers = 2 if args.workers is None else args.workers
 
     import jax.numpy as jnp
@@ -186,7 +216,9 @@ def main(argv=None) -> None:
                 n_tenants=args.tenants, edge_replicas=args.edge_replicas,
                 edge_sync_every=(DEFAULT_EDGE_SYNC_EVERY
                                  if args.edge_sync_every is None
-                                 else args.edge_sync_every)))
+                                 else args.edge_sync_every),
+                slo_deadline_s=args.slo_deadline,
+                overload_policy=args.overload_policy))
     else:
         engine = ANNSEngine(svc, method=args.engine)
 
@@ -205,6 +237,12 @@ def main(argv=None) -> None:
              if args.engine == "sched" else ""))
     for k, v in result.summary().items():
         print(f"  {k:20s} {v:.4f}")
+    trace = getattr(result, "trace", None)
+    if trace is not None and trace.n:
+        print("  per-stage breakdown (virtual-clock seconds):")
+        for stage, row in trace.stage_breakdown().items():
+            print(f"    {stage:12s} total={row['total_s']:10.3f}  "
+                  f"mean={row['mean_s']:8.4f}  frac={row['frac']:6.1%}")
     if args.tenants > 1:
         tids = np.array([q["tenant"] for q in queries])
         print(f"  tenant histogram     "

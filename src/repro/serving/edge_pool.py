@@ -18,9 +18,14 @@ Consistency model (staleness-aware, no phantom accepts):
     the same sink protocol ``WarmStandby`` speaks, so
     ``retrieval/service.py::ReplicaBackend`` can fan one ``on_ingest``
     out to cloud standbys and this pool alike;
-  * a replica replays its missing rows when it falls ``sync_every`` or
-    more rows behind (``record_batch`` cadence) and before dispatch when
-    the scheduler asks (``sync``), so its lag is bounded;
+  * a replica replays its missing rows once it falls ``sync_every`` or
+    more rows behind, so its lag is bounded — either at ``record_batch``
+    time (``sync_on_record=True``, the standalone default) or, when the
+    owning loop wants replay ON the virtual clock
+    (``sync_on_record=False``), at speculation-dispatch time via ``sync``
+    with the replay charged to the dispatching edge slot
+    (``LatencyModel.ingest_time`` — serving/scheduler.py's
+    accounting-fixed mode);
   * a speculation batch dispatched to replica r is validated against
     r's OWN cache version (``states[r]`` / ``version(r)``) — an accept
     can only reference documents that replica actually holds, never
@@ -70,6 +75,14 @@ class EdgeReplicaPool:
     n_tenants: int = 1
     replay_batch: int = 64         # delta rows folded per device dispatch
     compact: bool = True
+    # Who applies the bounded-lag cadence.  True (the historical default):
+    # ``record_batch`` itself replays any replica that fell ``sync_every``
+    # rows behind — replay is then FREE on a serving loop's virtual clock
+    # (it happens "inside" the ingest event).  False: the pool only
+    # appends; the caller replays at speculation-dispatch time via
+    # ``sync`` and charges the replay to the dispatching edge slot
+    # (serving/scheduler.py's accounting-fixed mode).
+    sync_on_record: bool = True
 
     def __post_init__(self):
         if self.n_replicas < 1:
@@ -145,9 +158,10 @@ class EdgeReplicaPool:
         for i in range(len(q_embs)):
             self.log.append((q_embs[i], full_ids[i], full_vecs[i],
                              int(tids[i])))
-        for r in range(self.n_replicas):
-            if self.lag(r) >= self.sync_every:
-                self.sync(r)
+        if self.sync_on_record:
+            for r in range(self.n_replicas):
+                if self.lag(r) >= self.sync_every:
+                    self.sync(r)
         if self.compact:
             self.log.compact_below(min(self.cursors))
 

@@ -59,18 +59,24 @@ class ServeResult:
     ra: dict[str, np.ndarray]
 
     def summary(self) -> dict[str, float]:
+        # NaN-safe on an empty stream (serve([])): rate/latency means
+        # report NaN instead of numpy's mean-of-empty warning cascade
+        def _mean(a) -> float:
+            a = np.asarray(a)
+            return float(a.mean()) if a.size else float("nan")
+
         acc = self.accepts.astype(bool)
         out = {
-            "avg_latency_s": float(self.latencies.mean()),
-            "dar": float(acc.mean()),
-            "doc_hit_rate": float(self.doc_hits.mean()),
-            "l_at_da": float(self.latencies[acc].mean()) if acc.any() else 0.0,
-            "l_at_dr": float(self.latencies[~acc].mean()) if (~acc).any() else 0.0,
-            "car": float(self.correct_accepts[acc].mean()) if acc.any() else 0.0,
-            "ra_at_da": float(self.ra["qwen3-8b"][acc].mean()) if acc.any() else 0.0,
+            "avg_latency_s": _mean(self.latencies),
+            "dar": _mean(acc),
+            "doc_hit_rate": _mean(self.doc_hits),
+            "l_at_da": _mean(self.latencies[acc]) if acc.any() else 0.0,
+            "l_at_dr": _mean(self.latencies[~acc]) if (~acc).any() else 0.0,
+            "car": _mean(self.correct_accepts[acc]) if acc.any() else 0.0,
+            "ra_at_da": _mean(self.ra["qwen3-8b"][acc]) if acc.any() else 0.0,
         }
         for llm, arr in self.ra.items():
-            out[f"ra_{llm}"] = float(arr.mean())
+            out[f"ra_{llm}"] = _mean(arr)
         return out
 
 

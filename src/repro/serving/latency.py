@@ -59,6 +59,19 @@ class LatencyModel:
         """Full-database ENNS at the paper's target corpus scale."""
         return self.scan_time(self.target_corpus)
 
+    def ingest_time(self, rows: int, doc_cap: int, k: int) -> float:
+        """Modeled edge time to fold ``rows`` (q, D_full) pairs into the
+        HaS cache (``cache_update`` / its batched scan): per row, the doc
+        dedup compares the k new ids against the whole doc ring
+        (``doc_cap`` entries streamed once) and writes k doc vectors, and
+        the replication fan-out appends the same k rows to the standby /
+        edge-pool delta logs — ``scan_time(doc_cap + 2k)`` each.  The
+        cache is edge-LOCAL state at its true size, so unlike the full
+        scan this is NOT extrapolated to the target corpus.  Used for both
+        the scheduler's cloud-done ingest charge and the edge replica
+        pool's bounded-lag delta replay (the same fold)."""
+        return rows * self.scan_time(doc_cap + 2 * k)
+
     def shard_scale(self, n_shards: int) -> float:
         """Multiplier on ``full_scan_time()`` when the scan is row-sharded
         over ``n_shards`` mesh workers (retrieval/distributed.py): every

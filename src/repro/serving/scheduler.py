@@ -73,7 +73,37 @@ scheduler's own per-serve rng plus analytic bandwidth-bound scan times
 this bit-for-bit determinism.  Batched scans are charged bandwidth-bound:
 one coalesced matmul streams the operand once, so a full-retrieval batch
 costs ``full_scan_time()`` regardless of batch width, and a speculation
-batch streams ``min(B * scope, 1.0)`` of the fuzzy index.
+batch streams ``min(B * scope, 1.0)`` of the fuzzy index.  EVERY stage is
+on the clock: cache ingest (the ``cache_update_chunked`` fold plus the
+``on_ingest`` replication fan-out) is charged on the cloud-done path to
+each request returning from that batch, and edge-replica delta replay is
+charged to the dispatching edge slot before its speculation batch runs
+(``LatencyModel.ingest_time`` for both — they are the same fold).
+``SchedulerConfig.free_ingest_replay=True`` restores the historical
+free-ingest/free-replay accounting (and
+``follower_score_weighted=False`` the historical leader-ordered follower
+ingest) — the compat point the pre-PR golden traces pin, and what the
+zero-cost-delta verdict of ``benchmarks/sched_throughput.py
+--sweep-overload`` runs to prove the tracing machinery itself never
+advances the virtual clock.
+
+Per-stage tracing (serving/tracing.py): every request records a span
+breakdown — queue wait / replay / spec / edge RTT / reval wait / cloud
+queue / cloud / ingest — summing EXACTLY to its end-to-end latency, and
+``SchedResult.trace`` exposes ``stage_breakdown()`` and
+``timeline(bucket_s)`` for benchmarks to assert on.
+
+Overload control (``SchedulerConfig.{slo_deadline_s, overload_policy}``):
+past saturation an uncontrolled open-loop queue grows without bound and
+p99 is meaningless, so the scheduler can either ``shed`` — reject at
+admission (new ``"shed"`` channel, zero latency, no resources consumed)
+when the fluid-model predicted queue wait blows the deadline — or
+``degrade`` — serve speculation-only under overload: rejected drafts
+return immediately with ``accept=False`` (``"degraded"`` channel) instead
+of queuing for the cloud.  The overload state machine has hysteresis
+(enter above ``slo_deadline_s``, exit below ``overload_exit_frac`` of it)
+and is evaluated only at event boundaries, so the policy is a
+deterministic function of the virtual clock like everything else.
 """
 from __future__ import annotations
 
@@ -99,6 +129,7 @@ from repro.serving.engine import (LLMS, RetrievalService, ServeResult,
                                   _metrics_init, _record)
 from repro.serving.replication import gather_doc_vecs
 from repro.serving.engine import fuzzy_scope as _fuzzy_scope
+from repro.serving.tracing import Trace, build_trace, empty_spans
 
 # Sharing-threshold default as a multiple of the validation threshold
 # cfg.tau, calibrated by `benchmarks/sched_throughput.py --sweep-share-tau`
@@ -150,6 +181,43 @@ class SchedulerConfig:
     #                                cadence: a replica this many ingested
     #                                rows behind the primary replays its
     #                                missing delta rows
+    # -- SLO-aware overload control ----------------------------------------
+    slo_deadline_s: float | None = None  # end-to-end latency SLO; None ->
+    #                                no deadline (goodput still unreported)
+    overload_policy: str = "none"  # "none" | "shed" (reject at admission
+    #                                when the predicted completion blows
+    #                                the deadline) | "degrade" (serve
+    #                                speculation-only under overload:
+    #                                rejects return drafts, accept=False)
+    overload_exit_frac: float = 0.5  # hysteresis: overload exits once the
+    #                                predicted completion falls below this
+    #                                fraction of the deadline
+    # -- accounting / tracing ----------------------------------------------
+    trace: bool = True             # per-stage span breakdown on SchedResult
+    #                                (virtual-clock bookkeeping only; never
+    #                                changes the schedule)
+    free_ingest_replay: bool = False  # compat: the historical (pre-fix)
+    #                                accounting where cache ingest and
+    #                                edge-replica delta replay are FREE on
+    #                                the virtual clock; the pre-PR golden
+    #                                traces pin this point
+    follower_score_weighted: bool = True  # followers ingest (and serve)
+    #                                the shared D_full reranked by their
+    #                                OWN query-doc scores; False keeps the
+    #                                historical leader-ordered list
+
+
+def _safe_mean(a) -> float:
+    """``float(a.mean())`` that reports NaN instead of warning/crashing on
+    an empty slice (``serve([])``, an all-shed tenant, ...)."""
+    a = np.asarray(a)
+    return float(a.mean()) if a.size else float("nan")
+
+
+def _safe_pct(a, q: float) -> float:
+    """NaN-safe ``np.percentile`` (empty slices crash it outright)."""
+    a = np.asarray(a)
+    return float(np.percentile(a, q)) if a.size else float("nan")
 
 
 @dataclasses.dataclass
@@ -175,9 +243,16 @@ class SchedResult(ServeResult):
     cache_versions: np.ndarray | None = None  # serving replica's cache
     #                                        version (delta-log seq) at its
     #                                        speculation dispatch (-1: R==1)
+    trace: Trace | None = None             # per-stage span breakdown
+    #                                        (serving/tracing.py); None when
+    #                                        SchedulerConfig.trace is False
+    slo_deadline_s: float | None = None    # the SLO the stream was served
+    #                                        under (goodput denominator)
 
     def per_tenant(self) -> dict[int, dict[str, float]]:
-        """Per-tenant metric slices (empty when served without tenants)."""
+        """Per-tenant metric slices (empty when served without tenants).
+        NaN-safe: an empty stream (or an all-shed tenant slice) reports
+        NaN latencies instead of crashing ``np.percentile``."""
         if self.tenant_ids is None:
             return {}
         out = {}
@@ -186,10 +261,10 @@ class SchedResult(ServeResult):
             lat = self.latencies[m]
             out[int(t)] = {
                 "n": int(m.sum()),
-                "dar": float(self.accepts[m].mean()),
-                "doc_hit_rate": float(self.doc_hits[m].mean()),
-                "avg_latency_s": float(lat.mean()),
-                "p95_latency_s": float(np.percentile(lat, 95)),
+                "dar": _safe_mean(self.accepts[m]),
+                "doc_hit_rate": _safe_mean(self.doc_hits[m]),
+                "avg_latency_s": _safe_mean(lat),
+                "p95_latency_s": _safe_pct(lat, 95),
                 "full_retrievals": int(np.sum((self.channels == "full") & m)),
                 "shared_accepts": int(np.sum((self.channels == "shared") & m)),
             }
@@ -198,13 +273,21 @@ class SchedResult(ServeResult):
     def summary(self) -> dict[str, float]:
         out = super().summary()
         lat = self.latencies
-        makespan = float(self.t_done.max() - self.t_arrive.min())
+        # admitted = everything the scheduler actually served (shed
+        # rejections complete instantly at zero latency and would deflate
+        # the percentiles the SLO verdicts assert on)
+        admitted = self.channels != "shed"
+        adm_lat = lat[admitted]
+        makespan = (float(self.t_done.max() - self.t_arrive.min())
+                    if len(lat) else float("nan"))
         out.update({
-            "p50_latency_s": float(np.percentile(lat, 50)),
-            "p95_latency_s": float(np.percentile(lat, 95)),
-            "p99_latency_s": float(np.percentile(lat, 99)),
+            "p50_latency_s": _safe_pct(lat, 50),
+            "p95_latency_s": _safe_pct(lat, 95),
+            "p99_latency_s": _safe_pct(lat, 99),
+            "p99_admitted_latency_s": _safe_pct(adm_lat, 99),
             "makespan_s": makespan,
-            "throughput_qps": len(lat) / max(makespan, 1e-9),
+            "throughput_qps": (len(lat) / max(makespan, 1e-9)
+                               if len(lat) else 0.0),
             "shared_accepts": int(np.sum(self.channels == "shared")),
             "reval_accepts": int(np.sum(self.channels == "reval")),
             "full_retrievals": int(self.full_retrievals),
@@ -213,7 +296,20 @@ class SchedResult(ServeResult):
             "max_inflight_full_batches": int(self.max_inflight_full_batches),
             "max_inflight_spec_batches": int(self.max_inflight_spec_batches),
             "edge_replays": int(self.edge_replays),
+            "shed": int(np.sum(self.channels == "shed")),
+            "degraded": int(np.sum(self.channels == "degraded")),
         })
+        if self.slo_deadline_s is not None:
+            # goodput: genuinely served results (draft/reval/shared/full —
+            # shed delivered nothing, degraded an unvalidated best-effort
+            # draft) completing within the deadline, per second of stream
+            good = (np.isin(self.channels,
+                            ("draft", "reval", "shared", "full"))
+                    & (lat <= self.slo_deadline_s))
+            out["slo_deadline_s"] = float(self.slo_deadline_s)
+            out["goodput_qps"] = (int(good.sum()) / max(makespan, 1e-9)
+                                  if len(lat) else 0.0)
+            out["slo_attainment"] = _safe_mean(good[admitted])
         return out
 
 
@@ -237,6 +333,10 @@ class _Request:
     replica: int = -1                      # edge replica that speculated it
     cache_version: int = -1                # that replica's version at
     #                                        dispatch (-1: R == 1 primary)
+    spans: dict = dataclasses.field(default_factory=empty_spans)
+    #                                        per-stage latency breakdown
+    #                                        (serving/tracing.py STAGES);
+    #                                        sums to t_done - t_arrive
 
 
 # event-kind priorities at equal timestamps: full results ingest before a
@@ -258,6 +358,40 @@ class ContinuousBatchingScheduler:
         self.s = service
         self.cfg = cfg or HasConfig(k=service.k, d=service.world.cfg.d)
         self.sched = sched or SchedulerConfig()
+        sc = self.sched
+        # batching knobs: a direct SchedulerConfig(...) used to accept
+        # nonsense silently (launch/serve.py validated its own flags, this
+        # path did not) — a 0-wide batch livelocks the loop, a negative
+        # timer fires in the past
+        if sc.max_spec_batch < 1:
+            raise ValueError(
+                f"max_spec_batch must be >= 1, got {sc.max_spec_batch}")
+        if sc.full_batch < 1:
+            raise ValueError(f"full_batch must be >= 1, got {sc.full_batch}")
+        if sc.full_max_wait_s < 0:
+            raise ValueError(
+                f"full_max_wait_s must be >= 0, got {sc.full_max_wait_s}")
+        if sc.ingest_batch < 1:
+            raise ValueError(
+                f"ingest_batch must be >= 1, got {sc.ingest_batch}")
+        # overload-control knobs
+        if sc.overload_policy not in ("none", "shed", "degrade"):
+            raise ValueError(
+                f"overload_policy must be 'none', 'shed' or 'degrade', got "
+                f"{sc.overload_policy!r}")
+        if sc.slo_deadline_s is not None and sc.slo_deadline_s <= 0:
+            raise ValueError(
+                f"slo_deadline_s must be > 0 (or None), got "
+                f"{sc.slo_deadline_s}")
+        if sc.overload_policy != "none" and sc.slo_deadline_s is None:
+            raise ValueError(
+                f"overload_policy={sc.overload_policy!r} needs "
+                "slo_deadline_s — the policy triggers on the predicted "
+                "completion time blowing the deadline")
+        if not (0 < sc.overload_exit_frac <= 1):
+            raise ValueError(
+                f"overload_exit_frac must be in (0, 1], got "
+                f"{sc.overload_exit_frac}")
         # tenant-partitioned cache: T == 1 keeps the historical unstacked
         # layout (bit-exact legacy path); T > 1 stacks [T, ...] partitions
         # with per-tenant capacity cfg.h_max / cfg.doc_cap EACH
@@ -312,8 +446,9 @@ class ContinuousBatchingScheduler:
         self.n_edge_replicas = int(self.sched.edge_replicas)
         self.edge_pool: EdgeReplicaPool | None = None   # built per serve()
         self._keep_edge_log = False    # audits/tests: retain the delta log
-        if self.n_edge_replicas > 1:
-            self._corpus_np = np.asarray(service.corpus)  # pool delta vecs
+        # host corpus view: pool delta vectors (R > 1) and the
+        # score-weighted follower rerank both need numpy gathers
+        self._corpus_np = np.asarray(service.corpus)
         # late re-validation: homology re-check of queued validation drafts
         # against the updated query cache (no fuzzy scan needed); tenant
         # mode gathers each row's partition table inside the same program
@@ -445,10 +580,13 @@ class ContinuousBatchingScheduler:
         # edge replica pool: fresh replicas + delta log per stream (R == 1
         # keeps the historical single-slot path — the slot IS the primary)
         R = self.n_edge_replicas
+        # fixed accounting replays at speculation-dispatch time (charged to
+        # the slot); the compat flag restores the free record_batch cadence
         self.edge_pool = None if R == 1 else EdgeReplicaPool(
             self.cfg, R, sync_every=sc.edge_sync_every, n_tenants=T,
             replay_batch=sc.ingest_batch,       # reuse the warmed-up shape
-            compact=not self._keep_edge_log)
+            compact=not self._keep_edge_log,
+            sync_on_record=sc.free_ingest_replay)
         pool = self.edge_pool
         rtt_rng = np.random.default_rng(seed)    # scheduler-owned RTT stream
         lat = self.s.latency
@@ -476,6 +614,46 @@ class ContinuousBatchingScheduler:
         max_inflight = 0               # pool-concurrency high-water mark
         timer_armed = False
         spec_batches = full_batches = full_retrievals = 0
+
+        # -- SLO-aware overload control (fluid-model predictor) ------------
+        # Steady-state drain rates of the two stages from the modeled
+        # service times; the predictor is the QUEUE WAIT a reject-path
+        # request admitted NOW would see — everything queued or in flight
+        # ahead of it at both stages, over each stage's drain rate.
+        # Service time itself is load-independent (the part no admission
+        # decision can avoid), so the trigger is on the waiting alone.
+        # Hysteresis (enter above the deadline, exit at
+        # overload_exit_frac of it) keeps the policy a deterministic step
+        # function of the virtual clock.
+        policy = sc.overload_policy
+        overloaded = False
+        if policy != "none":
+            mean_cloud_rtt = 0.5 * (lat.cloud_rtt[0] + lat.cloud_rtt[1])
+            spec_rate = (R * sc.max_spec_batch
+                         / self._spec_time(sc.max_spec_batch))
+            cloud_rate = (self.n_full_workers * sc.full_batch
+                          / (self._full_time(sc.full_batch)
+                             + mean_cloud_rtt))
+
+        def predicted_wait() -> float:
+            n_adm = sum(len(q) for q in admission)
+            n_lead = sum(len(q) for q in leaders)
+            busy_spec = R - len(edge_free)
+            # pessimistic: by the time this request is rejected at the
+            # edge, everything admitted ahead of it may have been rejected
+            # too — the admission backlog feeds BOTH stage queues on the
+            # reject path the SLO must cover
+            return ((n_adm + busy_spec * sc.max_spec_batch) / spec_rate
+                    + (n_adm + n_lead + inflight_full * sc.full_batch)
+                    / cloud_rate)
+
+        def update_overload():
+            nonlocal overloaded
+            p = predicted_wait()
+            if overloaded:
+                overloaded = p > sc.overload_exit_frac * sc.slo_deadline_s
+            else:
+                overloaded = p > sc.slo_deadline_s
 
         def fair_pick(queues, served, limit, quota=None):
             """Pop up to ``limit`` requests across per-tenant FIFO queues:
@@ -506,12 +684,16 @@ class ContinuousBatchingScheduler:
         reg_valid = np.zeros(cap, bool)
         reg_tenant = np.zeros(cap, np.int32)
         reg_req: list[_Request | None] = [None] * cap
-        free_slots = list(range(cap - 1, -1, -1))          # pop() -> lowest
+        # min-heap of free slot ids: pop -> lowest, O(log cap) per
+        # completion (identical lowest-slot-first allocation as the old
+        # descending-sorted list, without its O(cap log cap) re-sort —
+        # the golden-trace tests pin the equivalence)
+        free_slots = list(range(cap))
 
         def registry_add(r: _Request):
             if not free_slots:
                 return                      # registry full: r stays a leader
-            slot = free_slots.pop()
+            slot = heapq.heappop(free_slots)
             reg_vals[slot] = r.val_ids
             reg_valid[slot] = True
             reg_tenant[slot] = r.tenant
@@ -522,8 +704,7 @@ class ContinuousBatchingScheduler:
             if r.slot >= 0:
                 reg_valid[r.slot] = False
                 reg_req[r.slot] = None
-                free_slots.append(r.slot)
-                free_slots.sort(reverse=True)
+                heapq.heappush(free_slots, r.slot)
                 r.slot = -1
 
         def _admit_chunk(group: list[_Request]):
@@ -579,6 +760,16 @@ class ContinuousBatchingScheduler:
             # is the primary itself (zero lag, the historical path)
             r_id = edge_free[0] if pool is None else pool.freshest(edge_free)
             edge_free.remove(r_id)
+            # bounded-lag replay ON the clock: a replica edge_sync_every or
+            # more rows behind catches up before its batch runs, and the
+            # replay occupies the dispatching slot (compat mode keeps the
+            # historical free record_batch-time cadence instead)
+            replay_s = 0.0
+            if (pool is not None and not sc.free_ingest_replay
+                    and pool.lag(r_id) >= sc.edge_sync_every):
+                rows = pool.sync(r_id)
+                replay_s = lat.ingest_time(rows, self.cfg.doc_cap,
+                                           self.cfg.k)
             spec_state = self.state if pool is None else pool.states[r_id]
             version = -1 if pool is None else pool.version(r_id)
             batch = fair_pick(admission, spec_served, sc.max_spec_batch,
@@ -604,13 +795,17 @@ class ContinuousBatchingScheduler:
             accepts = np.asarray(out["accept"])
             drafts = np.asarray(out["draft_ids"])
             val_ids = np.asarray(out["val_ids"])
+            spec_s = self._spec_time(len(batch))
             for j, r in enumerate(batch):
                 r.replica, r.cache_version = r_id, version
+                r.spans["queue_wait"] += t - r.t_arrive
+                r.spans["replay"] += replay_s
+                r.spans["spec"] += spec_s
                 if accepts[j]:
                     r.ids, r.channel = drafts[j], "draft"
                 else:
                     r.val_ids, r.draft_ids = val_ids[j], drafts[j]
-            t_done = t + self._spec_time(len(batch))
+            t_done = t + replay_s + spec_s
             heapq.heappush(heap, (t_done, _SPEC_DONE, seq, (batch, r_id)))
             seq += 1
             max_inflight_spec = max(max_inflight_spec, R - len(edge_free))
@@ -646,6 +841,8 @@ class ContinuousBatchingScheduler:
                 for j, r in enumerate(batch):
                     if acc[j]:
                         r.ids, r.channel = r.draft_ids, "reval"
+                        r.spans["reval_wait"] += t - r.t_rejected
+                        r.spans["edge_rtt"] += r.edge_rtt
                         r.t_done = t + r.edge_rtt
                         registry_remove(r)
                         # orphaned followers re-enter the election
@@ -660,6 +857,7 @@ class ContinuousBatchingScheduler:
             embs = np.zeros((sc.full_batch, self.s.world.cfg.d), np.float32)
             for j, r in enumerate(batch):
                 embs[j] = r.q["emb"]
+                r.spans["cloud_queue"] += t - r.t_rejected
             # one coalesced backend dispatch retrieves every leader; the
             # pool slot stays busy for the modeled service time
             _, ids_full = self.s.backend.search(jnp.asarray(embs))
@@ -688,17 +886,49 @@ class ContinuousBatchingScheduler:
                     return
                 dispatch_full(t)
 
+        def follower_rerank(f: _Request, ids: np.ndarray) -> np.ndarray:
+            """Rerank the leader's shared D_full by the FOLLOWER's own
+            query-doc scores (stable descending; padded ids last) — the
+            homology overlap that elected the pair is order-insensitive,
+            so this changes which docs the follower serves first and its
+            cache row, never the election itself."""
+            scores = np.where(ids >= 0,
+                              self._corpus_np[np.maximum(ids, 0)]
+                              @ np.asarray(f.q["emb"], np.float32),
+                              -np.inf)
+            return ids[np.argsort(-scores, kind="stable")]
+
         while heap:
             t, kind, _, payload = heapq.heappop(heap)
             if kind == _ARRIVE:
+                if policy == "shed":
+                    # admission control: reject NOW when the fluid model
+                    # predicts a queue wait past the deadline — zero
+                    # latency, zero resources, no rng draws
+                    update_overload()
+                    if overloaded:
+                        payload.channel = "shed"
+                        payload.ids = np.full(self.cfg.k, -1, np.int32)
+                        payload.t_done = payload.t_arrive
+                        continue
                 admission[payload.tenant].append(payload)
                 try_spec(t)
             elif kind == _SPEC_DONE:
                 payload, r_id = payload
                 edge_free.append(r_id)
+                if policy == "degrade":
+                    update_overload()
                 rejected = []
                 for r in payload:
                     if r.channel == "draft":
+                        r.spans["edge_rtt"] += r.edge_rtt
+                        r.t_done = t + r.edge_rtt
+                    elif policy == "degrade" and overloaded:
+                        # speculation-only under overload: the reject's
+                        # draft returns immediately, unvalidated
+                        # (accept=False), instead of queuing for the cloud
+                        r.ids, r.channel = r.draft_ids, "degraded"
+                        r.spans["edge_rtt"] += r.edge_rtt
                         r.t_done = t + r.edge_rtt
                     else:
                         r.t_rejected = t
@@ -707,18 +937,43 @@ class ContinuousBatchingScheduler:
                 try_full(t)
                 try_spec(t)
             elif kind == _FULL_DONE:
-                inflight_full -= 1
+                inflight_full -= 1               # ingest is EDGE work: the
+                #                                  cloud worker frees at t
                 batch, ids_full, cloud = payload
+                n_rows = len(batch)
+                if sc.ingest_followers:
+                    n_rows += sum(len(r.followers) for r in batch)
+                # the cache fold + replication fan-out of the whole batch,
+                # charged to every request returning from it (the state
+                # update itself lands at t: results are visible to the next
+                # speculation the instant the cloud round trip ends)
+                ingest_s = (0.0 if sc.free_ingest_replay else
+                            lat.ingest_time(n_rows, self.cfg.doc_cap,
+                                            self.cfg.k))
+                t_d = t - cloud                  # this batch's dispatch time
                 for j, r in enumerate(batch):
                     r.ids = ids_full[j].astype(np.int32)
                     r.channel = "full"
                     r.cloud_s = cloud
-                    r.t_done = t + r.edge_rtt
+                    r.spans["cloud"] += cloud
+                    r.spans["ingest"] += ingest_s
+                    r.spans["edge_rtt"] += r.edge_rtt
+                    r.t_done = t + ingest_s + r.edge_rtt
                     registry_remove(r)
                     for f in r.followers:
-                        f.ids, f.channel = r.ids, "shared"
+                        f.ids = (follower_rerank(f, r.ids)
+                                 if sc.follower_score_weighted else r.ids)
+                        f.channel = "shared"
                         f.cloud_s = cloud
-                        f.t_done = t + f.edge_rtt
+                        # a follower may have attached AFTER its leader
+                        # dispatched (in-flight leaders stay shareable):
+                        # its cloud wait then starts at its own rejection
+                        cq = max(0.0, t_d - f.t_rejected)
+                        f.spans["cloud_queue"] += cq
+                        f.spans["cloud"] += (t - f.t_rejected) - cq
+                        f.spans["ingest"] += ingest_s
+                        f.spans["edge_rtt"] += f.edge_rtt
+                        f.t_done = t + ingest_s + f.edge_rtt
                         f.leader_idx = r.idx
                 self._ingest(batch)
                 try_full(t)
@@ -733,13 +988,19 @@ class ContinuousBatchingScheduler:
             accept = r.channel in ("draft", "reval", "shared")
             _record(m, r.idx, self.s.world, r.q, r.ids,
                     r.t_done - r.t_arrive, accept, dataset, llms, rng)
+        t_arrive = np.array([r.t_arrive for r in reqs])
+        t_done = np.array([r.t_done for r in reqs])
+        channels = np.array([r.channel for r in reqs], dtype="U16")
         return SchedResult(
             latencies=m["latencies"], accepts=m["accepts"],
             doc_hits=m["doc_hits"], correct_accepts=m["correct"], ra=m["ra"],
-            t_arrive=np.array([r.t_arrive for r in reqs]),
-            t_done=np.array([r.t_done for r in reqs]),
+            t_arrive=t_arrive,
+            t_done=t_done,
             cloud_s=np.array([r.cloud_s for r in reqs]),
-            channels=np.array([r.channel for r in reqs]),
+            channels=channels,
+            trace=(build_trace(reqs, t_arrive, t_done, channels)
+                   if sc.trace else None),
+            slo_deadline_s=sc.slo_deadline_s,
             full_retrievals=full_retrievals,
             spec_batches=spec_batches, full_batches=full_batches,
             max_inflight_full_batches=max_inflight,

@@ -207,14 +207,28 @@ def setup():
 # Golden trace of the PRE-PR scheduler (generated from the historical code
 # before the edge-pool generalization, same setup as the fixture above:
 # poisson_arrivals(160, qps=30.0, seed=5), serve(seed=3) and the fully
-# saturated serve(None, seed=3)).  R == 1 must keep producing EXACTLY these
-# channels / completion times / served ids.
+# saturated serve(None, seed=3)).  The COMPAT accounting point
+# (free_ingest_replay=True, follower_score_weighted=False) must keep
+# producing EXACTLY these channels / completion times / served ids — the
+# tracing machinery is bookkeeping only and never advances the clock.
 _GOLDEN_POISSON = ("ee529472ed19175fb3b357b75a2348a1",
                    "5acffd0fe97094942a39198f7ebbfb7f",
                    "9e600796f5efd958709178a8aaf970cf")
 _GOLDEN_SATURATED = ("818904a0aba858b52dc05f954ac76e94",
                      "b8f7083aa5617849da4d9f642d60d88d",
                      "161545ea8e39fc12bcb43e7987d6a07a")
+
+# Golden trace of the DEFAULT (accounting-fixed) scheduler: ingest charged
+# on the cloud-done path, replay charged to the dispatching edge slot,
+# score-weighted follower ingest, min-heap slot allocator.  Pins the fixed
+# accounting against accidental schedule drift the same way the compat
+# goldens pin the historical one.
+_GOLDEN_POISSON_CHARGED = ("ee529472ed19175fb3b357b75a2348a1",
+                           "ce77d205b924b6639b8b0e61f3e6f769",
+                           "bde019df4c7b6738d1b80507a91574ce")
+_GOLDEN_SATURATED_CHARGED = ("818904a0aba858b52dc05f954ac76e94",
+                             "58946f966a201cd50552d6eb2613e47d",
+                             "3806ef068db5ea2db34da56effc252bd")
 
 
 def _trace_hashes(r):
@@ -224,10 +238,30 @@ def _trace_hashes(r):
 
 
 def test_r1_bit_exact_vs_pre_pr_golden_trace(setup):
+    svc, qs, cfg, sched = setup
+    compat = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(
+        max_spec_batch=16, full_batch=8, full_max_wait_s=0.1,
+        free_ingest_replay=True, follower_score_weighted=False),
+        index=sched.index)
+    arr = poisson_arrivals(len(qs), qps=30.0, seed=5)
+    assert _trace_hashes(compat.serve(qs, arr, seed=3)) == _GOLDEN_POISSON
+    assert _trace_hashes(compat.serve(qs, None, seed=3)) == _GOLDEN_SATURATED
+
+
+def test_r1_charged_accounting_golden_trace(setup):
+    """Default accounting: same schedule SHAPE as the pre-PR goldens (the
+    channel sequence is identical — charging ingest only shifts completion
+    times at R == 1), different completion times and follower doc order."""
     _, qs, _, sched = setup
     arr = poisson_arrivals(len(qs), qps=30.0, seed=5)
-    assert _trace_hashes(sched.serve(qs, arr, seed=3)) == _GOLDEN_POISSON
-    assert _trace_hashes(sched.serve(qs, None, seed=3)) == _GOLDEN_SATURATED
+    r = sched.serve(qs, arr, seed=3)
+    assert _trace_hashes(r) == _GOLDEN_POISSON_CHARGED
+    assert _trace_hashes(sched.serve(qs, None, seed=3)) == \
+        _GOLDEN_SATURATED_CHARGED
+    # charged ingest strictly delays cloud-path completions vs compat
+    full = r.channels == "full"
+    assert full.any() and np.all(
+        r.trace.spans["ingest"][full] > 0)
 
 
 def test_r1_inert_sync_knob_and_backends(setup):

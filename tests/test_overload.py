@@ -1,0 +1,239 @@
+"""SLO-aware overload control + per-stage virtual-clock tracing.
+
+Covers the PR's tentpole contracts:
+
+  * conservation: every request's recorded stage spans sum EXACTLY to its
+    end-to-end latency (all channels, R > 1, T > 1, every overload policy);
+  * the accounting fixes: cache ingest is charged on the cloud-done path,
+    bounded-lag replay is charged to the dispatching edge slot
+    (``edge_replays > 0`` implies nonzero charged replay time), and the
+    compat flag restores the historical free accounting bit-exactly;
+  * tracing is bookkeeping only: trace on / trace off produce identical
+    schedules;
+  * ``shed`` bounds admitted-request p99 under 4x-saturation arrivals and
+    stays deterministic; ``degrade`` returns unvalidated drafts instead of
+    queueing for the cloud;
+  * NaN-safe empty-stream metrics (``serve([])`` regression);
+  * SchedulerConfig knob validation.
+"""
+import numpy as np
+import pytest
+
+from repro.core.has import HasConfig
+from repro.data.synthetic import DATASETS, SyntheticWorld, WorldConfig
+from repro.serving.engine import RetrievalService
+from repro.serving.latency import LatencyModel
+from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                     SchedulerConfig, poisson_arrivals)
+from repro.serving.tracing import STAGES, Trace
+
+BASE = dict(max_spec_batch=16, full_batch=8, full_max_wait_s=0.1)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    world = SyntheticWorld(WorldConfig(n_entities=400, seed=0))
+    svc = RetrievalService(world, LatencyModel(), k=10, chunk=2048)
+    ds = DATASETS["granola"]
+    qs = world.sample_queries(160, pattern=ds["pattern"],
+                              zipf_a=ds["zipf_a"],
+                              p_uncovered=ds["p_uncovered"], seed=1)
+    cfg = HasConfig(k=10, tau=0.2, h_max=400, nprobe=4, n_buckets=256, d=64)
+    sched = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(**BASE))
+    return svc, qs, cfg, sched
+
+
+def _assert_conserved(r):
+    assert r.trace is not None
+    res = r.trace.conservation_residual()
+    np.testing.assert_allclose(res, 0.0, atol=1e-9)
+    # spans are never negative
+    for s in STAGES:
+        assert (r.trace.spans[s] >= 0).all(), s
+
+
+# ---------------------------------------------------------------------------
+# Conservation property
+# ---------------------------------------------------------------------------
+
+def test_conservation_r1(setup):
+    _, qs, _, sched = setup
+    r = sched.serve(qs, poisson_arrivals(len(qs), qps=30.0, seed=5), seed=3)
+    _assert_conserved(r)
+    assert set(np.unique(r.channels)) >= {"draft", "full"}
+    # saturated stream exercises deep queues
+    _assert_conserved(sched.serve(qs, None, seed=3))
+
+
+def test_conservation_pooled_multi_tenant(setup):
+    """R > 1 and T > 1: replay + tenant-fair queueing all stay conserved."""
+    svc, qs, cfg, sched = setup
+    pooled = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(
+        **BASE, edge_replicas=3, edge_sync_every=16, n_tenants=2),
+        index=sched.index)
+    tids = np.array([i % 2 for i in range(len(qs))], np.int32)
+    r = pooled.serve(qs, poisson_arrivals(len(qs), qps=60.0, seed=5),
+                     seed=3, tenant_ids=tids)
+    _assert_conserved(r)
+    # the accounting fix: replay events imply charged replay time
+    assert r.summary()["edge_replays"] > 0
+    assert r.trace.spans["replay"].sum() > 0
+
+
+def test_conservation_under_policies(setup):
+    """shed and degrade channels conserve too (shed: all-zero spans)."""
+    svc, qs, cfg, sched = setup
+    arr = poisson_arrivals(len(qs), qps=400.0, seed=5)   # way past saturation
+    for policy in ("shed", "degrade"):
+        s = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(
+            **BASE, slo_deadline_s=3.0, overload_policy=policy),
+            index=sched.index)
+        r = s.serve(qs, arr, seed=3)
+        _assert_conserved(r)
+        extra = "shed" if policy == "shed" else "degraded"
+        assert (r.channels == extra).sum() > 0
+        if policy == "shed":
+            m = r.channels == "shed"
+            assert np.all(r.t_done[m] == r.t_arrive[m])
+            assert np.all(r.trace.total()[m] == 0)
+
+
+def test_charged_ingest_delays_cloud_path(setup):
+    """Cloud-path completions are strictly later than under the compat
+    (free-ingest) accounting — the bug the PR fixes."""
+    svc, qs, cfg, sched = setup
+    arr = poisson_arrivals(len(qs), qps=30.0, seed=5)
+    r = sched.serve(qs, arr, seed=3)
+    compat = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(
+        **BASE, free_ingest_replay=True, follower_score_weighted=False),
+        index=sched.index)
+    rc = compat.serve(qs, arr, seed=3)
+    # identical schedule shape at R == 1 (ingest only shifts completions)
+    assert np.array_equal(r.channels, rc.channels)
+    cloudy = np.isin(r.channels, ("full", "shared"))
+    assert cloudy.any()
+    assert np.all(r.t_done[cloudy] > rc.t_done[cloudy])
+    assert np.all(r.trace.spans["ingest"][cloudy] > 0)
+    # compat records zero ingest/replay spans
+    assert rc.trace.spans["ingest"].sum() == 0
+    assert rc.trace.spans["replay"].sum() == 0
+
+
+def test_trace_off_identical_schedule(setup):
+    """Tracing is bookkeeping only: trace=False produces the same stream
+    (and no Trace object)."""
+    svc, qs, cfg, sched = setup
+    arr = poisson_arrivals(len(qs), qps=30.0, seed=5)
+    r_on = sched.serve(qs, arr, seed=3)
+    off = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(
+        **BASE, trace=False), index=sched.index)
+    r_off = off.serve(qs, arr, seed=3)
+    assert r_off.trace is None
+    assert np.array_equal(r_on.t_done, r_off.t_done)
+    assert np.array_equal(r_on.channels, r_off.channels)
+    assert np.array_equal(r_on.served_ids, r_off.served_ids)
+
+
+def test_stage_breakdown_and_timeline(setup):
+    _, qs, _, sched = setup
+    r = sched.serve(qs, poisson_arrivals(len(qs), qps=30.0, seed=5), seed=3)
+    bd = r.trace.stage_breakdown()
+    assert abs(sum(v["frac"] for v in bd.values()) - 1.0) < 1e-9
+    # draft channel never touches the cloud stages
+    bd_draft = r.trace.stage_breakdown(channels=["draft"])
+    for s in ("reval_wait", "cloud_queue", "cloud", "ingest"):
+        assert bd_draft[s]["total_s"] == 0.0
+    tl = r.trace.timeline(bucket_s=1.0)
+    assert tl["n"].sum() == len(qs)
+    for s in STAGES:
+        np.testing.assert_allclose(tl[s].sum(), r.trace.spans[s].sum())
+    with pytest.raises(ValueError):
+        r.trace.timeline(bucket_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Overload policies
+# ---------------------------------------------------------------------------
+
+def test_shed_bounds_admitted_p99(setup):
+    """4x-saturation arrivals: no policy lets p99 grow with queue depth;
+    shed keeps admitted-request p99 bounded and is deterministic."""
+    svc, qs, cfg, sched = setup
+    arr = poisson_arrivals(len(qs), qps=400.0, seed=5)
+    slo = 3.0
+    r_none = sched.serve(qs, arr, seed=3)
+    shed = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(
+        **BASE, slo_deadline_s=slo, overload_policy="shed"),
+        index=sched.index)
+    r_shed = shed.serve(qs, arr, seed=3)
+    s_none, s_shed = r_none.summary(), r_shed.summary()
+    assert s_shed["shed"] > 0
+    assert s_shed["p99_admitted_latency_s"] < s_none["p99_latency_s"]
+    # every non-shed request still completes on a real channel
+    adm = r_shed.channels != "shed"
+    assert np.all(np.isin(r_shed.channels[adm],
+                          ("draft", "reval", "shared", "full")))
+    r2 = shed.serve(qs, arr, seed=3)
+    assert np.array_equal(r_shed.t_done, r2.t_done)
+    assert np.array_equal(r_shed.channels, r2.channels)
+
+
+def test_degrade_serves_drafts_without_cloud(setup):
+    svc, qs, cfg, sched = setup
+    arr = poisson_arrivals(len(qs), qps=400.0, seed=5)
+    deg = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(
+        **BASE, slo_deadline_s=3.0, overload_policy="degrade"),
+        index=sched.index)
+    r = deg.serve(qs, arr, seed=3)
+    m = r.channels == "degraded"
+    assert m.sum() > 0
+    # degraded = unvalidated draft: not an accept, no cloud time, served
+    # ids are the speculation drafts
+    assert not r.accepts[m].any()
+    assert np.all(r.cloud_s[m] == 0)
+    assert np.all(r.trace.spans["cloud"][m] == 0)
+    # goodput accounting excludes degraded results
+    s = r.summary()
+    assert s["degraded"] == int(m.sum())
+    assert "goodput_qps" in s
+
+
+# ---------------------------------------------------------------------------
+# Empty-stream + validation satellites
+# ---------------------------------------------------------------------------
+
+def test_empty_stream_summary_is_nan_safe(setup):
+    _, _, _, sched = setup
+    r = sched.serve([])
+    s = r.summary()
+    assert np.isnan(s["p99_latency_s"]) and np.isnan(s["avg_latency_s"])
+    assert s["throughput_qps"] == 0.0
+    assert r.per_tenant()[0]["n"] == 0 if r.per_tenant() else True
+    assert r.trace is not None and r.trace.n == 0
+    assert r.trace.stage_breakdown()["spec"]["total_s"] == 0.0
+
+
+@pytest.mark.parametrize("bad", [
+    dict(max_spec_batch=0),
+    dict(full_batch=0),
+    dict(full_max_wait_s=-0.1),
+    dict(ingest_batch=0),
+    dict(overload_policy="panic", slo_deadline_s=1.0),
+    dict(overload_policy="shed"),            # needs slo_deadline_s
+    dict(slo_deadline_s=0.0),
+    dict(slo_deadline_s=1.0, overload_policy="shed", overload_exit_frac=0.0),
+])
+def test_scheduler_config_validation(setup, bad):
+    svc, _, cfg, _ = setup
+    with pytest.raises(ValueError):
+        ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(**bad))
+
+
+def test_trace_container_nan_safety():
+    t = Trace(t_arrive=np.zeros(0), t_done=np.zeros(0),
+              channels=np.array([], dtype="U16"),
+              spans={s: np.zeros(0) for s in STAGES})
+    bd = t.stage_breakdown()
+    assert np.isnan(bd["spec"]["mean_s"]) and np.isnan(bd["spec"]["frac"])
+    tl = t.timeline(1.0)
+    assert tl["n"].size == 0
