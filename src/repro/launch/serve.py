@@ -31,8 +31,16 @@ reports goodput against an end-to-end latency SLO, and
 ``--overload-policy shed|degrade`` keeps admitted-request p99 bounded past
 saturation — shed rejects at admission, degrade serves speculation-only
 drafts.  The result's per-stage virtual-clock breakdown (queue wait /
-replay / spec / edge RTT / reval / cloud queue / cloud / ingest) is
-printed after the summary.
+replay / spec / edge RTT / reval / cloud queue / cloud / ingest / lost /
+retry backoff) is printed after the summary.
+
+Chaos serving (``--engine sched`` only): ``--fault-plan SPEC`` injects a
+deterministic fault schedule on the virtual clock (serving/faults.py) —
+``kind@t[,key=val]*`` events separated by ``;``, e.g.
+``worker_crash@2.0,target=0,down=3.0;straggler@1.0,duration=5,factor=4``.
+``--retry-max N`` bounds per-batch cloud retries (exponential backoff) and
+``--hedge-after FACTOR`` sets the deadline multiple after which an
+unfinished cloud dispatch is hedged onto a free worker.
 """
 from __future__ import annotations
 
@@ -87,6 +95,21 @@ def main(argv=None) -> None:
                          "completion blows --slo-deadline; degrade serves "
                          "speculation-only drafts (accept=False) under "
                          "overload")
+    ap.add_argument("--fault-plan", default=None,
+                    help="deterministic fault schedule for --engine sched "
+                         "(serving/faults.py grammar): ';'-separated "
+                         "'kind@t[,key=val]*' events, kinds "
+                         "worker_crash|straggler|search_fail|replica_crash"
+                         "|delta_drop|delta_dup")
+    ap.add_argument("--retry-max", type=int, default=None,
+                    help="max cloud retries per batch after transient "
+                         "failures (exponential backoff); --engine sched "
+                         "with --fault-plan only (default 2)")
+    ap.add_argument("--hedge-after", type=float, default=None,
+                    help="hedge an unfinished cloud dispatch after this "
+                         "multiple of its expected service time; must be "
+                         "> 1; --engine sched with --fault-plan only "
+                         "(default 2.5)")
     ap.add_argument("--tau", type=float, default=0.2)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--h-max", type=int, default=5000)
@@ -138,6 +161,28 @@ def main(argv=None) -> None:
         ap.error(f"--overload-policy {args.overload_policy} requires "
                  "--slo-deadline (the policy triggers on the predicted "
                  "completion blowing the deadline)")
+    if args.fault_plan is not None and args.engine != "sched":
+        ap.error("--fault-plan only applies to --engine sched (faults are "
+                 "scheduled on the scheduler's virtual clock)")
+    if args.retry_max is not None and args.retry_max < 0:
+        ap.error(f"--retry-max must be >= 0 (got {args.retry_max})")
+    if args.hedge_after is not None and args.hedge_after <= 1.0:
+        ap.error(f"--hedge-after must be > 1 (got {args.hedge_after}; it "
+                 "multiplies the expected service time, so <= 1 would "
+                 "hedge every dispatch immediately)")
+    if ((args.retry_max is not None or args.hedge_after is not None)
+            and args.fault_plan is None):
+        ap.error("--retry-max/--hedge-after require --fault-plan (the "
+                 "self-healing machinery only engages under a non-empty "
+                 "fault plan; a fault-free run is bit-identical without "
+                 "it)")
+    fault_plan = None
+    if args.fault_plan is not None:
+        from repro.serving.faults import FaultPlan
+        try:
+            fault_plan = FaultPlan.parse(args.fault_plan)
+        except ValueError as e:
+            ap.error(f"--fault-plan: {e}")
     workers = 2 if args.workers is None else args.workers
 
     import jax.numpy as jnp
@@ -209,7 +254,7 @@ def main(argv=None) -> None:
         from repro.serving.scheduler import (ContinuousBatchingScheduler,
                                              SchedulerConfig,
                                              poisson_arrivals)
-        engine = ContinuousBatchingScheduler(
+        mk = lambda: ContinuousBatchingScheduler(
             svc, HasConfig(k=args.k, tau=args.tau, h_max=args.h_max,
                            nprobe=16, n_buckets=2048, d=world.cfg.d),
             SchedulerConfig(
@@ -218,7 +263,19 @@ def main(argv=None) -> None:
                                  if args.edge_sync_every is None
                                  else args.edge_sync_every),
                 slo_deadline_s=args.slo_deadline,
-                overload_policy=args.overload_policy))
+                overload_policy=args.overload_policy,
+                fault_plan=fault_plan,
+                **({} if args.retry_max is None
+                   else {"retry_max": args.retry_max}),
+                **({} if args.hedge_after is None
+                   else {"hedge_after": args.hedge_after})))
+        try:
+            engine = mk()
+        except ValueError as e:
+            # fault-plan vs topology mismatch (bad worker/replica target,
+            # every worker crashed permanently, ...) — surface as a CLI
+            # error, not a traceback
+            ap.error(f"--fault-plan: {e}")
     else:
         engine = ANNSEngine(svc, method=args.engine)
 

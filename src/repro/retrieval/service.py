@@ -65,12 +65,17 @@ class FullRetrievalBackend(Protocol):
         ...
 
     def on_ingest(self, q_embs: np.ndarray, full_ids: np.ndarray,
-                  state, tenant_ids: np.ndarray | None = None) -> None:
+                  state, tenant_ids: np.ndarray | None = None, *,
+                  ingest_key=None) -> None:
         """Cache-ingest notification (rows just folded into the HaS cache).
 
         ``tenant_ids [N]`` (optional) tags each row with its tenant
         partition so replica-style backends keep per-tenant delta logs
-        (None == the single-tenant path).
+        (None == the single-tenant path).  ``ingest_key`` (optional,
+        keyword-only) is a stable batch identity for IDEMPOTENT ingest:
+        a backend that replicates must drop a batch whose key it has
+        already recorded — a retried cloud dispatch whose first attempt
+        landed must not fold twice downstream.
         """
         ...
 
@@ -80,7 +85,8 @@ class _BackendBase:
 
     n_workers: int = 1
 
-    def on_ingest(self, q_embs, full_ids, state, tenant_ids=None) -> None:
+    def on_ingest(self, q_embs, full_ids, state, tenant_ids=None, *,
+                  ingest_key=None) -> None:
         return None
 
 
@@ -183,14 +189,15 @@ class ReplicaBackend(_BackendBase):
     def latency(self, batch: int) -> float:
         return self.inner.latency(batch)
 
-    def on_ingest(self, q_embs, full_ids, state, tenant_ids=None) -> None:
+    def on_ingest(self, q_embs, full_ids, state, tenant_ids=None, *,
+                  ingest_key=None) -> None:
         from repro.serving.replication import gather_doc_vecs
         q_embs = np.asarray(q_embs, np.float32)
         full_ids = np.asarray(full_ids, np.int32)
         vecs = gather_doc_vecs(self._corpus_np, full_ids)  # [N, k, d]
         for sb in self.standbys:
             sb.record_batch(q_embs, full_ids, vecs, state,
-                            tenant_ids=tenant_ids)
+                            tenant_ids=tenant_ids, ingest_key=ingest_key)
 
 
 class RetrievalService:

@@ -45,6 +45,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.has import (HasConfig, HasState, cache_update_chunked,
@@ -96,6 +98,11 @@ class EdgeReplicaPool:
                                        for _ in range(self.n_replicas)]
         self.cursors = [0] * self.n_replicas
         self.replays = 0               # replay events (stat)
+        # replicas whose state was handed over by ``promote`` — their
+        # cursors no longer pin compaction and replaying into them would
+        # donate the new primary's buffers out from under it
+        self.retired: set[int] = set()
+        self._seen_keys: set = set()   # ingest_key dedup (idempotence)
 
     def _init_state(self) -> HasState:
         return (init_has_state(self.cfg) if self.n_tenants == 1
@@ -121,7 +128,7 @@ class EdgeReplicaPool:
     # -- ingest propagation (the WarmStandby record_batch sink protocol) ---
 
     def record_batch(self, q_embs, full_ids, full_vecs, state: Any = None,
-                     tenant_ids=None) -> None:
+                     tenant_ids=None, *, ingest_key=None) -> None:
         """Append one primary ingest batch, then apply the sync cadence.
 
         ``state`` (the post-batch primary) is accepted for sink-protocol
@@ -129,7 +136,16 @@ class EdgeReplicaPool:
         pool rebuilds replica caches from delta rows alone.  Rows with
         padded (``-1``) ids keep zeroed doc vectors (defensively re-zeroed
         here; replay drops them anyway).
+
+        ``ingest_key`` makes the append IDEMPOTENT: a batch whose key was
+        already recorded is dropped whole, so a duplicated replication
+        send (or a retried cloud dispatch whose first attempt landed)
+        never folds twice into the replicas.  ``None`` skips dedup.
         """
+        if ingest_key is not None:
+            if ingest_key in self._seen_keys:
+                return
+            self._seen_keys.add(ingest_key)
         q_embs = np.asarray(q_embs, np.float32)
         full_ids = np.asarray(full_ids, np.int32)
         full_vecs = np.asarray(full_vecs, np.float32)
@@ -160,10 +176,25 @@ class EdgeReplicaPool:
                              int(tids[i])))
         if self.sync_on_record:
             for r in range(self.n_replicas):
-                if self.lag(r) >= self.sync_every:
+                if r not in self.retired and self.lag(r) >= self.sync_every:
                     self.sync(r)
         if self.compact:
-            self.log.compact_below(min(self.cursors))
+            self.log.compact_below(self._min_live_cursor())
+
+    def _min_live_cursor(self) -> int:
+        """Lowest cursor over NON-retired replicas — the compaction bound.
+        Retired (promoted-away) replicas no longer pin the log; with every
+        replica retired the whole log may be trimmed."""
+        live = [c for r, c in enumerate(self.cursors)
+                if r not in self.retired]
+        return min(live) if live else self.log.head
+
+    def mark_lost(self, n: int = 1) -> None:
+        """Model ``n`` ingest rows LOST on the replication channel: the
+        primary folded them, the pool never saw them.  Sequence numbers
+        advance without rows, so the next ``sync`` of a lagging replica
+        fails loudly on the gap instead of silently diverging."""
+        self.log.mark_lost(n)
 
     # -- bounded-lag delta replay ------------------------------------------
 
@@ -174,10 +205,43 @@ class EdgeReplicaPool:
         in primary ingest order — after the call, replica r is
         bit-identical to the primary's state after its first ``head``
         ingest rows.  Returns the number of rows replayed.
+
+        Replay VALIDATES sequence contiguity: the delta must start at
+        replica r's cursor and advance by exactly one per row.  A gap
+        means ingest rows were lost in transit (``mark_lost``) — replaying
+        past it would silently diverge the replica from the primary, so a
+        ``ValueError`` names the replica and the expected/actual sequence;
+        the owner must full-resync (``resync_from``).
         """
-        rows = self.log.since(self.cursors[r])
-        if not rows:
+        if r in self.retired:
+            raise ValueError(
+                f"replica {r} was retired by promote() — its state now IS "
+                "the primary; replaying into it would donate the primary's "
+                "buffers")
+        items = self.log.since_items(self.cursors[r])
+        if not items:
+            if self.cursors[r] < self.log.head:
+                # every missing row was lost in transit
+                raise ValueError(
+                    f"delta replay gap for replica {r}: expected seq "
+                    f"{self.cursors[r]}, next available is {self.log.head} "
+                    "(rows lost in transit) — full resync required")
             return 0
+        expected = self.cursors[r]
+        for seq, _ in items:
+            if seq != expected:
+                raise ValueError(
+                    f"delta replay gap for replica {r}: expected seq "
+                    f"{expected}, got {seq} (rows lost in transit) — "
+                    "full resync required")
+            expected += 1
+        if expected != self.log.head:
+            # trailing rows lost after the last retained one
+            raise ValueError(
+                f"delta replay gap for replica {r}: expected seq "
+                f"{expected}, next available is {self.log.head} "
+                "(rows lost in transit) — full resync required")
+        rows = [row for _, row in items]
         self.states[r] = cache_update_chunked(
             self.cfg, self.states[r],
             np.stack([q for q, _, _, _ in rows]),
@@ -192,12 +256,36 @@ class EdgeReplicaPool:
 
     def sync_all(self) -> None:
         for r in range(self.n_replicas):
-            self.sync(r)
+            if r not in self.retired:
+                self.sync(r)
+
+    def resync_from(self, r: int, state: HasState, version: int) -> None:
+        """Full resync: install a DEEP COPY of ``state`` (the primary at
+        delta-log sequence ``version``, normally ``log.head``) as replica
+        r's cache and move its cursor there.  The copy is load-bearing:
+        later replays fold through donated-buffer updates, so sharing the
+        primary's arrays would corrupt the primary the first time the
+        replica syncs.  This is the recovery path after a crash or a
+        ``sync`` gap error — and it un-retires a slot being rebuilt."""
+        self.states[r] = jax.tree.map(jnp.copy, state)
+        self.cursors[r] = version
+        self.retired.discard(r)
+        self.replays += 1
 
     def promote(self, r: int) -> HasState:
         """Failover: bring replica r fully up to date and hand its state
         over as the new primary — the request trace continues on exactly
         the cache the lost primary would have had (bit-exact, because
-        replay is the primary's own ingest fold)."""
+        replay is the primary's own ingest fold).
+
+        The promoted replica is RETIRED: its state now is the primary, so
+        its slot must not be replayed into again (donated-buffer updates
+        would corrupt the new primary) and its cursor stops pinning log
+        compaction — the log can be trimmed past it and stays bounded
+        while serving continues.  ``resync_from`` rebuilds the slot."""
         self.sync(r)
-        return self.states[r]
+        state = self.states[r]
+        self.retired.add(r)
+        if self.compact:
+            self.log.compact_below(self._min_live_cursor())
+        return state

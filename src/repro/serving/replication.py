@@ -1,10 +1,22 @@
 """HaS edge-cache replication: delta log, snapshot, warm standby, failover.
 
-The paper deploys HaS as an edge component; in production the edge node is
-the new single point of failure for the latency win (losing the cache means
-every query pays the cloud round-trip until the cache re-warms — minutes of
-degraded P99).  This module gives the HaS state the same durability story
-the training stack has:
+The paper deploys HaS as an edge component; in production the edge cache
+used to be the single point of failure for the latency win.  It no longer
+is: every ingest fans out to warm standbys and edge replicas over the
+delta log below, and the serving scheduler (serving/scheduler.py) reacts
+to a mid-stream cache loss instead of dying with it — a crashed edge
+replica's in-flight speculation batch is rerouted to the full-retrieval
+channel (degraded but correct results), the dead slot is rebuilt in the
+background from a primary snapshot plus delta replay (``sync``/
+``resync_from``, rebuild time charged to the virtual clock), and a lost
+PRIMARY promotes the freshest replica (``EdgeReplicaPool.promote``) so
+the request trace continues on the cache the primary would have had.
+Replication traffic itself is hardened: rows carry explicit sequence
+numbers, lost appends surface as a replay-time gap error instead of a
+silently diverged replica, and duplicated appends are deduplicated by
+per-batch ingest keys (idempotent ingest — a retried cloud batch whose
+first attempt landed never folds twice).  This module gives the HaS
+state the same durability story the training stack has:
 
   * ``DeltaLog``: the ONE replication substrate — an append-only log of
     cache_update inputs with monotone global sequence numbers.  Cloud warm
@@ -86,12 +98,13 @@ def gather_doc_vecs(corpus_np: np.ndarray,
 
 
 class DeltaLog:
-    """Append-only ingest log with monotone global sequence numbers.
+    """Append-only ingest log with EXPLICIT monotone sequence numbers.
 
-    Row ``i`` (0-based since the log's creation) has sequence number ``i``
-    forever, even after eviction/compaction: ``base`` is the sequence of
-    the oldest retained row and ``head`` is one past the newest.  Two
-    consumption styles share it:
+    Every retained row is stored as ``(seq, payload)``: the i-th append
+    (0-based since the log's creation) gets sequence number ``i`` forever,
+    even after eviction/compaction — ``base`` is the sequence of the
+    oldest retained row and ``head`` is one past the newest sequence ever
+    PRODUCED.  Two consumption styles share it:
 
     * clear-on-snapshot (``WarmStandby``): ``clear()`` after a snapshot —
       ``failover`` replays whatever is currently held.
@@ -104,50 +117,77 @@ class DeltaLog:
     evicts the oldest row and advances ``base``, so a cursor that has
     fallen behind ``base`` detects (``LookupError``) that it must full
     resync rather than silently skipping rows.
+
+    The sequences are explicit (not implied by position) so that LOST
+    replication traffic is detectable: ``mark_lost(n)`` consumes ``n``
+    sequence numbers without appending rows — the producer ingested
+    them, the channel dropped them — and a consumer replaying across the
+    resulting gap sees non-consecutive sequences from ``since_items``
+    (``EdgeReplicaPool.sync`` raises a ``ValueError`` naming the replica
+    and the expected/actual sequence instead of silently diverging).
     """
 
     def __init__(self, maxlen: int | None = None):
         self._rows: deque = deque(maxlen=maxlen)
-        self._base = 0
+        self._next = 0                     # next sequence to hand out
 
     @property
     def base(self) -> int:
-        return self._base
+        """Sequence of the oldest retained row (``head`` when empty)."""
+        return self._rows[0][0] if self._rows else self._next
 
     @property
     def head(self) -> int:
-        return self._base + len(self._rows)
+        """One past the newest sequence ever produced (lost rows count)."""
+        return self._next
 
     def append(self, row) -> None:
-        if (self._rows.maxlen is not None
-                and len(self._rows) == self._rows.maxlen):
-            self._base += 1                 # deque evicts the oldest row
-        self._rows.append(row)
+        self._rows.append((self._next, row))   # full deque evicts oldest
+        self._next += 1
+
+    def mark_lost(self, n: int = 1) -> None:
+        """Consume ``n`` sequence numbers without retaining rows — the
+        producer ingested them but the replication channel dropped them.
+        Consumers replaying across the gap detect it via ``since_items``
+        (non-consecutive sequences) rather than silently skipping rows."""
+        if n < 0:
+            raise ValueError(f"mark_lost needs n >= 0, got {n}")
+        self._next += n
 
     def clear(self) -> None:
-        self._base += len(self._rows)
         self._rows.clear()
+
+    def since_items(self, cursor: int) -> list:
+        """``(seq, row)`` pairs with seq >= cursor.  Consecutive-sequence
+        validation is the CONSUMER's job (a gap means rows were lost in
+        transit)."""
+        if cursor < self.base:
+            raise LookupError(
+                f"cursor {cursor} has fallen behind the log base "
+                f"{self.base} (rows were evicted) — the consumer must "
+                "full-resync from a snapshot")
+        # rows are seq-sorted; skip the replayed prefix
+        skip = 0
+        for seq, _ in self._rows:
+            if seq >= cursor:
+                break
+            skip += 1
+        return list(itertools.islice(self._rows, skip, None))
 
     def since(self, cursor: int) -> list:
         """Rows with sequence >= cursor (the delta a consumer is missing)."""
-        if cursor < self._base:
-            raise LookupError(
-                f"cursor {cursor} has fallen behind the log base "
-                f"{self._base} (rows were evicted) — the consumer must "
-                "full-resync from a snapshot")
-        return list(itertools.islice(self._rows, cursor - self._base, None))
+        return [row for _, row in self.since_items(cursor)]
 
     def compact_below(self, cursor: int) -> None:
         """Drop rows every consumer has replayed (min cursor over them)."""
-        while self._rows and self._base < cursor:
+        while self._rows and self._rows[0][0] < cursor:
             self._rows.popleft()
-            self._base += 1
 
     def __len__(self) -> int:
         return len(self._rows)
 
     def __iter__(self):
-        return iter(self._rows)
+        return iter(row for _, row in self._rows)
 
 
 def _tenant_stamp(state: HasState) -> int:
@@ -252,6 +292,7 @@ class WarmStandby:
                                      for _ in range(self.n_tenants)]
         self._since_snapshot = 0
         self._step = 0
+        self._seen_keys: set = set()
 
     @property
     def log(self) -> DeltaLog:
@@ -268,7 +309,8 @@ class WarmStandby:
 
     def record_batch(self, q_embs: np.ndarray, full_ids: np.ndarray,
                      full_vecs: np.ndarray, state: HasState,
-                     tenant_ids: np.ndarray | None = None) -> None:
+                     tenant_ids: np.ndarray | None = None, *,
+                     ingest_key=None) -> None:
         """Append a whole ingest batch, then apply the snapshot cadence ONCE.
 
         ``state`` must be the post-batch primary state.  The cadence check
@@ -283,7 +325,17 @@ class WarmStandby:
         REQUIRED when ``n_tenants > 1`` (rows must match the partition the
         primary folded them into — silently defaulting would funnel every
         delta into tenant 0 and diverge the replica from the primary).
+
+        ``ingest_key`` makes the append IDEMPOTENT: a batch whose key was
+        already recorded is dropped whole (a retried cloud dispatch whose
+        first attempt actually landed must not fold twice).  ``None``
+        (the default) skips dedup — unkeyed callers keep at-least-once
+        semantics.
         """
+        if ingest_key is not None:
+            if ingest_key in self._seen_keys:
+                return
+            self._seen_keys.add(ingest_key)
         validate_ingest_batch(q_embs, full_ids, full_vecs, tenant_ids)
         if tenant_ids is None:
             if self.n_tenants > 1:

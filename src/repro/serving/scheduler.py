@@ -104,6 +104,30 @@ of queuing for the cloud.  The overload state machine has hysteresis
 (enter above ``slo_deadline_s``, exit below ``overload_exit_frac`` of it)
 and is evaluated only at event boundaries, so the policy is a
 deterministic function of the virtual clock like everything else.
+
+Fault injection + self-healing (``SchedulerConfig.fault_plan``,
+serving/faults.py): a :class:`~repro.serving.faults.FaultPlan` pins fault
+events to the virtual clock — cloud-worker crashes, straggler slowdowns,
+transient search failures, edge-replica crashes, dropped/duplicated
+replication appends — making every chaos run a pure function of
+``(seed, plan, arrivals, queries)``.  Under a non-empty plan the cloud
+stage self-heals: every dispatch carries a DEADLINE derived from the
+calibrated latency model (``training/fault.py::StragglerDetector`` over
+observed service times, ``hedge_after`` × expected before calibration);
+a blown deadline HEDGES the batch onto a free worker (first result wins,
+the loser is cancelled and its head start charged to the new ``lost``
+span); a failed attempt RETRIES with exponential backoff (``retry_max``,
+``retry_backoff_s``, charged to ``retry_backoff``); a crashed worker's
+in-flight batch is requeued at the head of the line; and a crashed edge
+replica's in-flight speculation reroutes to the full channel while the
+slot is rebuilt in the background from the primary (rebuild time on the
+clock).  Ingest is idempotent end-to-end — every completed cloud batch
+carries a monotone ``ingest_key`` that ``record_batch``/``on_ingest``
+dedupe, so a duplicated replication append can never fold twice.  Span
+conservation stays EXACT through every recovery path, and an empty/absent
+plan leaves the fault-free schedule bit-identical to the pre-PR goldens
+(no extra heap events, same rng draw order) — the zero-cost verdict
+``benchmarks/sched_chaos.py`` pins.
 """
 from __future__ import annotations
 
@@ -127,9 +151,11 @@ from repro.retrieval.ivf import build_ivf
 from repro.serving.edge_pool import DEFAULT_EDGE_SYNC_EVERY, EdgeReplicaPool
 from repro.serving.engine import (LLMS, RetrievalService, ServeResult,
                                   _metrics_init, _record)
+from repro.serving.faults import FaultInjector, FaultPlan
 from repro.serving.replication import gather_doc_vecs
 from repro.serving.engine import fuzzy_scope as _fuzzy_scope
 from repro.serving.tracing import Trace, build_trace, empty_spans
+from repro.training.fault import StragglerConfig, StragglerDetector
 
 # Sharing-threshold default as a multiple of the validation threshold
 # cfg.tau, calibrated by `benchmarks/sched_throughput.py --sweep-share-tau`
@@ -192,6 +218,26 @@ class SchedulerConfig:
     overload_exit_frac: float = 0.5  # hysteresis: overload exits once the
     #                                predicted completion falls below this
     #                                fraction of the deadline
+    # -- fault injection + self-healing (serving/faults.py) ----------------
+    fault_plan: FaultPlan | None = None  # deterministic chaos plan pinned to
+    #                                the virtual clock; None / empty plan ==
+    #                                the fault-free path, BIT-EXACTLY (no
+    #                                extra rng draws, no extra heap events)
+    retry_max: int = 2             # transient-failure retries per cloud
+    #                                batch before it fails hard ("failed"
+    #                                channel)
+    retry_backoff_s: float = 0.05  # exponential backoff base between a
+    #                                failed cloud attempt and its retry
+    #                                (doubles per attempt)
+    hedge_after: float | None = 2.5  # straggler deadline factor: a cloud
+    #                                dispatch outliving hedge_after x the
+    #                                trailing-median attempt time (adaptive,
+    #                                training/fault.py::StragglerDetector;
+    #                                model-derived until warmed up) is
+    #                                hedged onto a free worker — first
+    #                                result wins, the loser is cancelled.
+    #                                None disables hedging.  Only active
+    #                                under a non-empty fault plan.
     # -- accounting / tracing ----------------------------------------------
     trace: bool = True             # per-stage span breakdown on SchedResult
     #                                (virtual-clock bookkeeping only; never
@@ -248,6 +294,13 @@ class SchedResult(ServeResult):
     #                                        SchedulerConfig.trace is False
     slo_deadline_s: float | None = None    # the SLO the stream was served
     #                                        under (goodput denominator)
+    # -- fault-handling stats (serving/faults.py; all 0 fault-free) --------
+    retries: int = 0               # cloud-batch re-dispatches (backoff
+    #                                retries + crash requeues)
+    hedges: int = 0                # straggler hedged re-dispatches
+    worker_deaths: int = 0         # cloud-worker crash events handled
+    replica_rebuilds: int = 0      # edge replicas rebuilt (crash recovery +
+    #                                delta-gap full resyncs)
 
     def per_tenant(self) -> dict[int, dict[str, float]]:
         """Per-tenant metric slices (empty when served without tenants).
@@ -298,6 +351,11 @@ class SchedResult(ServeResult):
             "edge_replays": int(self.edge_replays),
             "shed": int(np.sum(self.channels == "shed")),
             "degraded": int(np.sum(self.channels == "degraded")),
+            "failed": int(np.sum(self.channels == "failed")),
+            "retries": int(self.retries),
+            "hedges": int(self.hedges),
+            "worker_deaths": int(self.worker_deaths),
+            "replica_rebuilds": int(self.replica_rebuilds),
         })
         if self.slo_deadline_s is not None:
             # goodput: genuinely served results (draft/reval/shared/full —
@@ -333,6 +391,11 @@ class _Request:
     replica: int = -1                      # edge replica that speculated it
     cache_version: int = -1                # that replica's version at
     #                                        dispatch (-1: R == 1 primary)
+    reroute: bool = False                  # speculation lost to a replica
+    #                                        crash: straight to the full
+    #                                        channel (no re-validation, no
+    #                                        sharing registry — val_ids are
+    #                                        the -1 sentinel)
     spans: dict = dataclasses.field(default_factory=empty_spans)
     #                                        per-stage latency breakdown
     #                                        (serving/tracing.py STAGES);
@@ -341,8 +404,13 @@ class _Request:
 
 # event-kind priorities at equal timestamps: full results ingest before a
 # speculation batch dispatched at the same instant (cache freshness), and
-# both before new arrivals join the queue
+# both before new arrivals join the queue.  Fault events (kind -1) fire
+# FIRST at their instant — a completion scheduled for the same moment a
+# crash lands is already lost work.  Kinds 4..7 exist only under a
+# non-empty fault plan (the fault-free heap never sees them).
+_FAULT = -1
 _FULL_DONE, _SPEC_DONE, _ARRIVE, _FULL_TIMER = 0, 1, 2, 3
+_DEADLINE, _RETRY, _WORKER_UP, _REBUILT = 4, 5, 6, 7
 
 
 class ContinuousBatchingScheduler:
@@ -392,6 +460,22 @@ class ContinuousBatchingScheduler:
             raise ValueError(
                 f"overload_exit_frac must be in (0, 1], got "
                 f"{sc.overload_exit_frac}")
+        # fault-handling knobs
+        if sc.retry_max < 0:
+            raise ValueError(f"retry_max must be >= 0, got {sc.retry_max}")
+        if sc.retry_backoff_s < 0:
+            raise ValueError(
+                f"retry_backoff_s must be >= 0, got {sc.retry_backoff_s}")
+        if sc.hedge_after is not None and not sc.hedge_after > 1:
+            raise ValueError(
+                f"hedge_after must be > 1 (or None to disable hedging), "
+                f"got {sc.hedge_after}")
+        if sc.fault_plan is not None and not isinstance(sc.fault_plan,
+                                                        FaultPlan):
+            raise TypeError(
+                f"fault_plan must be a FaultPlan (or None), got "
+                f"{type(sc.fault_plan).__name__} — parse CLI specs with "
+                "FaultPlan.parse()")
         # tenant-partitioned cache: T == 1 keeps the historical unstacked
         # layout (bit-exact legacy path); T > 1 stacks [T, ...] partitions
         # with per-tenant capacity cfg.h_max / cfg.doc_cap EACH
@@ -446,6 +530,54 @@ class ContinuousBatchingScheduler:
         self.n_edge_replicas = int(self.sched.edge_replicas)
         self.edge_pool: EdgeReplicaPool | None = None   # built per serve()
         self._keep_edge_log = False    # audits/tests: retain the delta log
+        self._inj: FaultInjector | None = None          # built per serve()
+        # fault-plan topology validation: every targeted worker/replica must
+        # exist, and the plan must not permanently kill the whole cloud
+        # pool (queued leaders would then never complete — a silent
+        # deadlock, not a chaos result)
+        self._fault_mode = (self.sched.fault_plan is not None
+                            and len(self.sched.fault_plan) > 0)
+        if self._fault_mode:
+            perm_dead = set()
+            for i, ev in enumerate(self.sched.fault_plan.events):
+                if ev.kind in ("worker_crash", "straggler", "search_fail"):
+                    if ev.target >= self.n_full_workers:
+                        raise ValueError(
+                            f"fault_plan events[{i}] ({ev.kind}) targets "
+                            f"worker {ev.target} but the backend has only "
+                            f"{self.n_full_workers} worker(s)")
+                    if ev.kind == "worker_crash" and ev.down_s == 0.0:
+                        perm_dead.add(ev.target)
+                elif ev.kind == "replica_crash":
+                    if self.n_edge_replicas < 2:
+                        raise ValueError(
+                            f"fault_plan events[{i}] (replica_crash) needs "
+                            "edge_replicas >= 2 — with R == 1 the lone "
+                            "slot IS the primary and there is no pool to "
+                            "fail over to")
+                    if ev.target >= self.n_edge_replicas:
+                        raise ValueError(
+                            f"fault_plan events[{i}] (replica_crash) "
+                            f"targets replica {ev.target} but "
+                            f"edge_replicas={self.n_edge_replicas}")
+                else:                          # delta_drop / delta_dup
+                    if self.n_edge_replicas < 2:
+                        raise ValueError(
+                            f"fault_plan events[{i}] ({ev.kind}) needs "
+                            "edge_replicas >= 2 — the replication delta "
+                            "log only exists with an edge pool")
+                    if (ev.kind == "delta_drop"
+                            and self.sched.free_ingest_replay):
+                        raise ValueError(
+                            f"fault_plan events[{i}] (delta_drop) is "
+                            "incompatible with free_ingest_replay=True — "
+                            "gap detection fires at dispatch-time replay, "
+                            "which the compat accounting bypasses")
+            if len(perm_dead) >= self.n_full_workers:
+                raise ValueError(
+                    "fault_plan permanently crashes all "
+                    f"{self.n_full_workers} cloud worker(s) (down_s=0) — "
+                    "queued full retrievals could never complete")
         # host corpus view: pool delta vectors (R > 1) and the
         # score-weighted follower rerank both need numpy gathers
         self._corpus_np = np.asarray(service.corpus)
@@ -518,7 +650,7 @@ class ContinuousBatchingScheduler:
 
     # -- fused cache ingest ------------------------------------------------
 
-    def _ingest(self, batch):
+    def _ingest(self, batch, ingest_key=None):
         """Fold a completed full-retrieval batch (leaders followed by their
         followers, i.e. the attribution computed by ``intra_batch_share``)
         into the cache via ``cache_update_chunked`` — one device dispatch
@@ -528,7 +660,16 @@ class ContinuousBatchingScheduler:
         backends can reconcile standby caches, and the same rows are
         appended to the edge pool's delta log (bounded-lag replay keeps
         the speculation replicas within ``edge_sync_every`` rows of this
-        primary)."""
+        primary).
+
+        ``ingest_key`` stamps the batch with a stable identity so every
+        replication sink (standbys, edge pool) is IDEMPOTENT on it.  Under
+        a fault plan, the replication channel itself can misbehave here: a
+        ``delta_dup`` event re-sends the batch (absorbed bit-exactly by
+        the key), a ``delta_drop`` loses it to the edge pool (the primary
+        and cloud standbys folded it; the pool's sequence numbers advance
+        with no rows, so the next replica replay fails loudly on the gap
+        instead of silently diverging — see ``serving/faults.py``)."""
         rows = []
         for r in batch:
             rows.append(r)
@@ -542,12 +683,25 @@ class ContinuousBatchingScheduler:
             self.cfg, self.state, q_embs, full_ids,
             corpus=self.s.corpus, chunk=self.sched.ingest_batch,
             tenant_ids=tids)
+        fault = self._inj.delta_fault() if self._inj is not None else None
         self.s.backend.on_ingest(q_embs, full_ids, self.state,
-                                 tenant_ids=tids)
+                                 tenant_ids=tids, ingest_key=ingest_key)
+        if fault == "dup":
+            # duplicated fan-out send — the standbys' ingest keys drop it
+            self.s.backend.on_ingest(q_embs, full_ids, self.state,
+                                     tenant_ids=tids, ingest_key=ingest_key)
         if self.edge_pool is not None:
-            self.edge_pool.record_batch(
-                q_embs, full_ids, gather_doc_vecs(self._corpus_np, full_ids),
-                self.state, tenant_ids=tids)
+            if fault == "drop":
+                self.edge_pool.mark_lost(len(rows))
+                return
+            vecs = gather_doc_vecs(self._corpus_np, full_ids)
+            self.edge_pool.record_batch(q_embs, full_ids, vecs, self.state,
+                                        tenant_ids=tids,
+                                        ingest_key=ingest_key)
+            if fault == "dup":
+                self.edge_pool.record_batch(q_embs, full_ids, vecs,
+                                            self.state, tenant_ids=tids,
+                                            ingest_key=ingest_key)
 
     # -- event loop --------------------------------------------------------
 
@@ -599,6 +753,32 @@ class ContinuousBatchingScheduler:
         for r in reqs:
             heapq.heappush(heap, (r.t_arrive, _ARRIVE, seq, r))
             seq += 1
+
+        # -- fault injection + self-healing (serving/faults.py) ------------
+        # Everything below is gated on fault_mode: an empty/absent plan
+        # adds NO heap events, NO rng draws and NO bookkeeping, so the
+        # fault-free schedule is bit-identical to pre-fault builds (the
+        # golden-trace tests pin this).
+        fault_mode = self._fault_mode
+        inj = self._inj = FaultInjector(sc.fault_plan) if fault_mode else None
+        detector = None
+        cloud_free: list[int] = []     # free cloud worker ids (fault mode)
+        busy: dict[int, dict] = {}     # worker id -> live dispatch/backoff
+        dead_workers: set[int] = set()
+        dead_replicas: set[int] = set()
+        spec_epoch = [0] * R           # bumped on replica crash: stale
+        #                                _SPEC_DONE events are ignored
+        spec_inflight: dict[int, tuple] = {}   # replica -> in-flight batch
+        ingest_seq = 0                 # stable ingest_key counter
+        retries = hedges = worker_deaths = replica_rebuilds = 0
+        if fault_mode:
+            cloud_free = list(range(self.n_full_workers))
+            detector = StragglerDetector(StragglerConfig(
+                deadline_factor=(sc.hedge_after if sc.hedge_after is not None
+                                 else 3.0)))
+            for ev in sc.fault_plan.sorted_events():
+                heapq.heappush(heap, (ev.t, _FAULT, seq, ev))
+                seq += 1
 
         # per-tenant FIFO queues; batches are assembled by weighted-fair
         # selection across them (lowest served/weight first), so one
@@ -754,7 +934,7 @@ class ContinuousBatchingScheduler:
                 _admit_chunk(group[i:i + sc.max_spec_batch])
 
         def dispatch_spec(t: float):
-            nonlocal seq, spec_batches, max_inflight_spec
+            nonlocal seq, spec_batches, max_inflight_spec, replica_rebuilds
             # staleness-aware admission: the batch goes to the freshest
             # free replica (highest cache version); R == 1 — the lone slot
             # is the primary itself (zero lag, the historical path)
@@ -767,9 +947,21 @@ class ContinuousBatchingScheduler:
             replay_s = 0.0
             if (pool is not None and not sc.free_ingest_replay
                     and pool.lag(r_id) >= sc.edge_sync_every):
-                rows = pool.sync(r_id)
-                replay_s = lat.ingest_time(rows, self.cfg.doc_cap,
-                                           self.cfg.k)
+                try:
+                    rows = pool.sync(r_id)
+                    replay_s = lat.ingest_time(rows, self.cfg.doc_cap,
+                                               self.cfg.k)
+                except (ValueError, LookupError):
+                    # delta rows lost in transit (fault plan delta_drop):
+                    # replay hit a sequence gap, or the cursor fell behind
+                    # the log base entirely — full resync from the primary
+                    # instead of serving a diverged cache, charged to the
+                    # dispatching slot like any replay
+                    pool.resync_from(r_id, self.state, pool.log.head)
+                    replay_s = lat.ingest_time(
+                        min(pool.log.head, self.cfg.h_max),
+                        self.cfg.doc_cap, self.cfg.k)
+                    replica_rebuilds += 1
             spec_state = self.state if pool is None else pool.states[r_id]
             version = -1 if pool is None else pool.version(r_id)
             batch = fair_pick(admission, spec_served, sc.max_spec_batch,
@@ -806,8 +998,11 @@ class ContinuousBatchingScheduler:
                 else:
                     r.val_ids, r.draft_ids = val_ids[j], drafts[j]
             t_done = t + replay_s + spec_s
-            heapq.heappush(heap, (t_done, _SPEC_DONE, seq, (batch, r_id)))
+            heapq.heappush(heap, (t_done, _SPEC_DONE, seq,
+                                  (batch, r_id, spec_epoch[r_id])))
             seq += 1
+            if fault_mode:
+                spec_inflight[r_id] = (batch, t, replay_s, spec_s)
             max_inflight_spec = max(max_inflight_spec, R - len(edge_free))
             spec_batches += 1
 
@@ -816,6 +1011,144 @@ class ContinuousBatchingScheduler:
             # replicas, the way full retrievals overlap on cloud workers
             while edge_free and any(admission):
                 dispatch_spec(t)
+
+        # -- fault-mode cloud dispatch machinery ---------------------------
+        # A cloud "group" is one logical batch (leaders + ids) that may be
+        # executed by SEVERAL dispatches over its lifetime: the original
+        # attempt, backoff retries after transient failures, and hedged
+        # re-dispatches racing a straggler.  The first live completion
+        # wins; span attribution keeps conservation exact (cloud = the
+        # winner's service, retry_backoff = accumulated backoff waits,
+        # lost = everything else thrown away between first dispatch and
+        # completion).  None of this exists fault-free.
+
+        def cloud_dispatch(g, w, t):
+            """Push one cloud attempt of group g on worker w."""
+            nonlocal seq
+            b = len(g["batch"])
+            mult = inj.latency_multiplier(w, t)
+            cloud = rtt_rng.uniform(*lat.cloud_rtt) + self._full_time(b) * mult
+            disp = {"g": g, "w": w, "t_disp": t,
+                    "fails": inj.search_fails(w, t), "live": True}
+            g["dispatches"].append(disp)
+            busy[w] = disp
+            heapq.heappush(heap, (t + cloud, _FULL_DONE, seq, disp))
+            seq += 1
+            if sc.hedge_after is not None:
+                # per-dispatch deadline: adaptive (trailing median of
+                # completed attempts) once warmed up, model-derived before
+                dl = detector.deadline
+                if dl is None:
+                    dl = sc.hedge_after * (self._full_time(b)
+                                           + lat.cloud_rtt[1])
+                disp["dl"] = dl
+                heapq.heappush(heap, (t + dl, _DEADLINE, seq, disp))
+                seq += 1
+
+        def free_worker(w):
+            nonlocal inflight_full
+            busy.pop(w, None)
+            inflight_full -= 1
+            if w not in dead_workers:
+                cloud_free.append(w)
+
+        def requeue_group(g, t):
+            """Worker crashed under the group's only live dispatch: charge
+            the wasted attempt and put the batch back at the FRONT of the
+            full-retrieval queue (it has waited longest)."""
+            nonlocal retries
+            g["done"] = True
+            retries += 1
+            for r in reversed(g["batch"]):
+                r.spans["retry_backoff"] += g["backoff_s"]
+                r.spans["lost"] += max(0.0,
+                                       (t - g["t_first"]) - g["backoff_s"])
+                for f in r.followers:
+                    cq = max(0.0, g["t_first"] - f.t_rejected)
+                    f.spans["cloud_queue"] += cq
+                    f.spans["lost"] += max(0.0, (t - f.t_rejected) - cq)
+                    f.t_rejected = t
+                r.t_rejected = t
+                leaders[r.tenant].appendleft(r)
+
+        def fail_group(g, t):
+            """Retry budget exhausted: the batch fails hard — ``failed``
+            channel, sentinel ids, accept False.  Orphaned followers
+            re-enter the sharing election (their leader delivered
+            nothing; they still need results)."""
+            g["done"] = True
+            for r in g["batch"]:
+                r.spans["retry_backoff"] += g["backoff_s"]
+                r.spans["lost"] += max(0.0,
+                                       (t - g["t_first"]) - g["backoff_s"])
+                r.ids = np.full(self.cfg.k, -1, np.int32)
+                r.channel = "failed"
+                r.t_done = t
+                registry_remove(r)
+                readmit, r.followers = r.followers, []
+                for f in readmit:
+                    cq = max(0.0, g["t_first"] - f.t_rejected)
+                    f.spans["cloud_queue"] += cq
+                    f.spans["lost"] += max(0.0, (t - f.t_rejected) - cq)
+                    f.t_rejected = t
+                admit_rejects(readmit)
+
+        def complete_group(t, winner):
+            """First live completion wins the group: racing dispatches are
+            cancelled (their workers free NOW — the winner's result serves
+            everyone) and the batch completes with fault-aware span
+            attribution summing exactly to each request's latency."""
+            nonlocal ingest_seq
+            g = winner["g"]
+            g["done"] = True
+            for d in g["dispatches"]:
+                if d["live"]:
+                    d["live"] = False
+                    free_worker(d["w"])
+            detector.observe(full_batches, t - winner["t_disp"])
+            batch, ids_full = g["batch"], g["ids_full"]
+            n_rows = len(batch)
+            if sc.ingest_followers:
+                n_rows += sum(len(r.followers) for r in batch)
+            ingest_s = (0.0 if sc.free_ingest_replay else
+                        lat.ingest_time(n_rows, self.cfg.doc_cap,
+                                        self.cfg.k))
+            winner_cloud = t - winner["t_disp"]
+            for j, r in enumerate(batch):
+                r.ids = ids_full[j].astype(np.int32)
+                r.channel = "full"
+                r.cloud_s = winner_cloud
+                r.spans["cloud"] += winner_cloud
+                r.spans["retry_backoff"] += g["backoff_s"]
+                r.spans["lost"] += max(0.0, (t - g["t_first"]) - winner_cloud
+                                       - g["backoff_s"])
+                r.spans["ingest"] += ingest_s
+                r.spans["edge_rtt"] += r.edge_rtt
+                r.t_done = t + ingest_s + r.edge_rtt
+                registry_remove(r)
+                for f in r.followers:
+                    f.ids = (follower_rerank(f, r.ids)
+                             if sc.follower_score_weighted else r.ids)
+                    f.channel = "shared"
+                    f.cloud_s = winner_cloud
+                    # the follower waited through whatever mix of queue /
+                    # service / backoff / waste its leader's group saw
+                    # after it attached — split its wait the same way
+                    cq = max(0.0, g["t_first"] - f.t_rejected)
+                    rem = (t - f.t_rejected) - cq
+                    cloud_part = min(rem, winner_cloud)
+                    backoff_part = min(rem - cloud_part, g["backoff_s"])
+                    f.spans["cloud_queue"] += cq
+                    f.spans["cloud"] += cloud_part
+                    f.spans["retry_backoff"] += backoff_part
+                    f.spans["lost"] += max(0.0,
+                                           rem - cloud_part - backoff_part)
+                    f.spans["ingest"] += ingest_s
+                    f.spans["edge_rtt"] += f.edge_rtt
+                    f.t_done = t + ingest_s + f.edge_rtt
+                    f.leader_idx = r.idx
+            self._ingest(batch, ingest_key=ingest_seq)
+            ingest_seq += 1
 
         def dispatch_full(t: float):
             nonlocal inflight_full, max_inflight, seq, full_batches, \
@@ -839,7 +1172,9 @@ class ContinuousBatchingScheduler:
                     self.state.query_valid, jnp.float32(self.cfg.tau))[0])
                 survivors = []
                 for j, r in enumerate(batch):
-                    if acc[j]:
+                    # rerouted-after-replica-crash rows carry sentinel
+                    # val_ids — they always need the real retrieval
+                    if acc[j] and not r.reroute:
                         r.ids, r.channel = r.draft_ids, "reval"
                         r.spans["reval_wait"] += t - r.t_rejected
                         r.spans["edge_rtt"] += r.edge_rtt
@@ -862,18 +1197,33 @@ class ContinuousBatchingScheduler:
             # pool slot stays busy for the modeled service time
             _, ids_full = self.s.backend.search(jnp.asarray(embs))
             ids_full = np.asarray(ids_full)
-            cloud = rtt_rng.uniform(*lat.cloud_rtt) + self._full_time(b)
-            heapq.heappush(heap, (t + cloud, _FULL_DONE, seq,
-                                  (batch, ids_full, cloud)))
-            seq += 1
-            inflight_full += 1
-            max_inflight = max(max_inflight, inflight_full)
+            if not fault_mode:
+                cloud = rtt_rng.uniform(*lat.cloud_rtt) + self._full_time(b)
+                heapq.heappush(heap, (t + cloud, _FULL_DONE, seq,
+                                      (batch, ids_full, cloud)))
+                seq += 1
+                inflight_full += 1
+                max_inflight = max(max_inflight, inflight_full)
+            else:
+                w = min(cloud_free)
+                cloud_free.remove(w)
+                inflight_full += 1
+                max_inflight = max(max_inflight, inflight_full)
+                g = {"batch": batch, "ids_full": ids_full, "t_first": t,
+                     "backoff_s": 0.0, "fails": 0, "done": False,
+                     "dispatches": []}
+                cloud_dispatch(g, w, t)
             full_batches += 1
             full_retrievals += b
 
         def try_full(t: float):
             nonlocal timer_armed, seq
-            while inflight_full < self.n_full_workers and any(leaders):
+            # fault mode tracks worker IDENTITY (crashes / stragglers are
+            # per-worker); the free-list gate degenerates to the historical
+            # counter gate when nobody ever dies
+            while ((len(cloud_free) > 0 if fault_mode
+                    else inflight_full < self.n_full_workers)
+                   and any(leaders)):
                 n_lead = sum(len(q) for q in leaders)
                 oldest = min(q[0].t_rejected for q in leaders if q)
                 deadline = oldest + sc.full_max_wait_s
@@ -914,7 +1264,14 @@ class ContinuousBatchingScheduler:
                 admission[payload.tenant].append(payload)
                 try_spec(t)
             elif kind == _SPEC_DONE:
-                payload, r_id = payload
+                payload, r_id, epoch = payload
+                if fault_mode:
+                    if epoch != spec_epoch[r_id]:
+                        # the replica died mid-speculation: the batch was
+                        # already rerouted to the full channel and the slot
+                        # is rebuilding — this completion is from a ghost
+                        continue
+                    spec_inflight.pop(r_id, None)
                 edge_free.append(r_id)
                 if policy == "degrade":
                     update_overload()
@@ -937,6 +1294,38 @@ class ContinuousBatchingScheduler:
                 try_full(t)
                 try_spec(t)
             elif kind == _FULL_DONE:
+                if fault_mode:
+                    disp = payload
+                    g = disp["g"]
+                    if not disp["live"] or g["done"]:
+                        continue    # cancelled hedge loser / crashed worker
+                    if disp["fails"]:
+                        # transient search failure surfacing after the full
+                        # service time: retry with exponential backoff on
+                        # the same worker (held through the backoff), give
+                        # up past the budget — unless a hedge is still
+                        # racing (it IS the retry)
+                        disp["live"] = False
+                        g["fails"] += 1
+                        if any(d["live"] for d in g["dispatches"]):
+                            free_worker(disp["w"])
+                        elif g["fails"] <= sc.retry_max:
+                            delta = sc.retry_backoff_s * 2 ** (g["fails"] - 1)
+                            g["backoff_s"] += delta
+                            retries += 1
+                            rec = {"g": g, "w": disp["w"], "live": True,
+                                   "backoff": True}
+                            busy[disp["w"]] = rec
+                            heapq.heappush(heap, (t + delta, _RETRY, seq,
+                                                  (g, disp["w"], rec)))
+                            seq += 1
+                        else:
+                            free_worker(disp["w"])
+                            fail_group(g, t)
+                    else:
+                        complete_group(t, disp)
+                    try_full(t)
+                    continue
                 inflight_full -= 1               # ingest is EDGE work: the
                 #                                  cloud worker frees at t
                 batch, ids_full, cloud = payload
@@ -975,11 +1364,128 @@ class ContinuousBatchingScheduler:
                         f.spans["edge_rtt"] += f.edge_rtt
                         f.t_done = t + ingest_s + f.edge_rtt
                         f.leader_idx = r.idx
-                self._ingest(batch)
+                self._ingest(batch, ingest_key=ingest_seq)
+                ingest_seq += 1
                 try_full(t)
-            else:                                  # _FULL_TIMER
+            elif kind == _FULL_TIMER:
                 timer_armed = False
                 try_full(t)
+            elif kind == _FAULT:
+                ev = payload
+                if ev.kind == "worker_crash":
+                    w = ev.target
+                    if w in dead_workers:
+                        continue                   # already down: coalesce
+                    worker_deaths += 1
+                    dead_workers.add(w)
+                    if w in cloud_free:
+                        cloud_free.remove(w)
+                    rec = busy.pop(w, None)
+                    if rec is not None:
+                        # the crash takes the in-flight (or backing-off)
+                        # dispatch with it; if that was the group's only
+                        # live attempt, its queries requeue at the front
+                        inflight_full -= 1
+                        rec["live"] = False
+                        g = rec["g"]
+                        if (not g["done"]
+                                and not any(d["live"]
+                                            for d in g["dispatches"])):
+                            requeue_group(g, t)
+                    if ev.down_s > 0:
+                        heapq.heappush(heap, (t + ev.down_s, _WORKER_UP,
+                                              seq, w))
+                        seq += 1
+                    try_full(t)
+                elif ev.kind == "replica_crash":
+                    rho = ev.target
+                    if rho in dead_replicas:
+                        continue                   # already rebuilding
+                    dead_replicas.add(rho)
+                    spec_epoch[rho] += 1
+                    if rho in edge_free:
+                        edge_free.remove(rho)
+                    else:
+                        info = spec_inflight.pop(rho, None)
+                        if info is not None:
+                            # mid-speculation loss: undo the dispatch-time
+                            # charges (the work never finished), reroute
+                            # the batch to the full-retrieval channel —
+                            # degraded latency, correct results
+                            sbatch, t_disp, replay_s, spec_s = info
+                            for r in sbatch:
+                                r.spans["replay"] -= replay_s
+                                r.spans["spec"] -= spec_s
+                                r.spans["lost"] += t - t_disp
+                                r.ids = None
+                                r.channel = "pending"
+                                r.val_ids = np.full(self.cfg.k, -1,
+                                                    np.int32)
+                                r.draft_ids = np.full(self.cfg.k, -1,
+                                                      np.int32)
+                                r.reroute = True
+                                r.t_rejected = t
+                            for r in reversed(sbatch):
+                                leaders[r.tenant].appendleft(r)
+                    # background rebuild: install a primary snapshot (a
+                    # full cache fold on the clock), then rejoin the pool
+                    rb_s = lat.ingest_time(
+                        min(pool.log.head, self.cfg.h_max),
+                        self.cfg.doc_cap, self.cfg.k)
+                    heapq.heappush(heap, (t + rb_s, _REBUILT, seq, rho))
+                    seq += 1
+                    try_full(t)
+                else:
+                    # straggler / search_fail windows, delta-channel
+                    # faults: armed in the injector, consulted at
+                    # dispatch / ingest time
+                    inj.activate(ev)
+            elif kind == _DEADLINE:
+                disp = payload
+                if not disp["live"] or disp["g"]["done"]:
+                    continue                       # attempt already settled
+                if cloud_free:
+                    # hedged re-dispatch: race a fresh attempt on a free
+                    # worker; first result wins, the loser is cancelled
+                    w2 = min(cloud_free)
+                    cloud_free.remove(w2)
+                    inflight_full += 1
+                    max_inflight = max(max_inflight, inflight_full)
+                    hedges += 1
+                    cloud_dispatch(disp["g"], w2, t)
+                else:
+                    heapq.heappush(heap, (t + disp["dl"], _DEADLINE, seq,
+                                          disp))
+                    seq += 1
+            elif kind == _RETRY:
+                g, w, rec = payload
+                if busy.get(w) is not rec or g["done"]:
+                    continue       # the worker crashed during the backoff
+                # rotate AWAY from the failing worker when another is free
+                # (a transient failure window is usually per-node, so a
+                # same-worker retry tends to land back inside it); the held
+                # slot is released to the pool either way
+                if cloud_free:
+                    w2 = min(cloud_free)
+                    cloud_free.remove(w2)
+                    del busy[w]
+                    cloud_free.append(w)
+                    cloud_dispatch(g, w2, t)
+                    try_full(t)
+                else:
+                    cloud_dispatch(g, w, t)
+            elif kind == _WORKER_UP:
+                w = payload
+                dead_workers.discard(w)
+                cloud_free.append(w)
+                try_full(t)
+            else:                                  # _REBUILT
+                rho = payload
+                pool.resync_from(rho, self.state, pool.log.head)
+                dead_replicas.discard(rho)
+                edge_free.append(rho)
+                replica_rebuilds += 1
+                try_spec(t)
 
         # -- metrics (request-index order, shared substrate) ---------------
         rng = np.random.default_rng(seed)
@@ -1003,6 +1509,8 @@ class ContinuousBatchingScheduler:
             slo_deadline_s=sc.slo_deadline_s,
             full_retrievals=full_retrievals,
             spec_batches=spec_batches, full_batches=full_batches,
+            retries=retries, hedges=hedges, worker_deaths=worker_deaths,
+            replica_rebuilds=replica_rebuilds,
             max_inflight_full_batches=max_inflight,
             max_inflight_spec_batches=max(1, max_inflight_spec),
             edge_replays=0 if pool is None else pool.replays,

@@ -24,10 +24,19 @@ tests/test_overload.py asserts for every channel):
   ``ingest``       cache-ingest share: the ``cache_update_chunked`` fold +
                    ``on_ingest`` fan-out of the completed batch, charged on
                    the cloud-done path to every request returning from it
+  ``lost``         virtual time thrown away by faults (serving/faults.py):
+                   a crashed worker's partial service, a cancelled
+                   straggler's head start over the hedge that beat it, a
+                   failed search attempt, or a dead edge replica's
+                   discarded speculation — work the request paid for but
+                   that produced nothing
+  ``retry_backoff`` exponential-backoff wait between a failed cloud
+                   attempt and its retry dispatch
 
 Stages a request never enters stay 0 (e.g. a ``draft`` accept has only
 ``queue_wait``/``replay``/``spec``/``edge_rtt``; a ``shed`` rejection has
-all-zero spans and ``t_done == t_arrive``).
+all-zero spans and ``t_done == t_arrive``; ``lost``/``retry_backoff``
+stay 0 in any fault-free run).
 
 :class:`Trace` is the result-side container: per-request span arrays plus
 ``stage_breakdown()`` (aggregate seconds/fraction per stage) and
@@ -45,7 +54,7 @@ import numpy as np
 
 #: span keys, in pipeline order (see module docstring)
 STAGES = ("queue_wait", "replay", "spec", "edge_rtt", "reval_wait",
-          "cloud_queue", "cloud", "ingest")
+          "cloud_queue", "cloud", "ingest", "lost", "retry_backoff")
 
 
 def empty_spans() -> dict[str, float]:

@@ -1,0 +1,406 @@
+"""Deterministic fault injection + self-healing serving (serving/faults.py).
+
+Covers the PR's tentpole contracts:
+
+  * FaultPlan/FaultEvent validation and the CLI parse grammar;
+  * the zero-cost contract: an EMPTY (or absent) fault plan leaves the
+    scheduler bit-identical to one built without the module at all —
+    pinned against the pre-PR golden trace hashes;
+  * chaos runs are pure functions of (seed, plan, arrivals, queries):
+    the same plan replays the same schedule bit-exactly;
+  * span conservation stays EXACT through every recovery path (retried,
+    hedged, requeued, rerouted requests), and tracing off matches the
+    traced run's ids/times bit-exactly under a non-empty plan;
+  * delta-channel loss surfaces as a LOUD replay gap error naming the
+    replica and sequence (never silent divergence), and duplicated
+    replication appends are absorbed by idempotent ingest keys — a
+    dup-only chaos run is bit-identical to fault-free;
+  * promote() retires the promoted replica so its stale cursor stops
+    pinning log compaction (log memory stays bounded while serving
+    continues on the remaining replicas);
+  * scheduler knob/topology validation and the launch CLI's argument
+    validation fail fast with actionable messages.
+"""
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core.has import HasConfig
+from repro.data.synthetic import DATASETS, SyntheticWorld, WorldConfig
+from repro.serving.edge_pool import EdgeReplicaPool
+from repro.serving.engine import RetrievalService
+from repro.serving.faults import (KINDS, FaultEvent, FaultInjector,
+                                  FaultPlan)
+from repro.serving.latency import LatencyModel
+from repro.serving.replication import WarmStandby
+from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                     SchedulerConfig, poisson_arrivals)
+from repro.serving.tracing import STAGES
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / FaultEvent / parse grammar
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_validation():
+    ok = FaultPlan(events=(FaultEvent(t=1.0, kind="worker_crash"),))
+    assert len(ok) == 1 and len(FaultPlan()) == 0
+    with pytest.raises(TypeError, match="expected.*FaultEvent"):
+        FaultPlan(events=("worker_crash",))
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan(events=(FaultEvent(t=1.0, kind="meteor"),))
+    with pytest.raises(ValueError, match="t must be >= 0"):
+        FaultPlan(events=(FaultEvent(t=-1.0, kind="worker_crash"),))
+    with pytest.raises(ValueError, match="target must be >= 0"):
+        FaultPlan(events=(FaultEvent(t=0.0, kind="worker_crash",
+                                     target=-1),))
+    with pytest.raises(ValueError, match="duration_s must be > 0"):
+        FaultPlan(events=(FaultEvent(t=0.0, kind="straggler"),))
+    with pytest.raises(ValueError, match="factor must be > 1"):
+        FaultPlan(events=(FaultEvent(t=0.0, kind="straggler",
+                                     duration_s=1.0, factor=1.0),))
+    with pytest.raises(ValueError, match="down_s must be >= 0"):
+        FaultPlan(events=(FaultEvent(t=0.0, kind="worker_crash",
+                                     down_s=-1.0),))
+    with pytest.raises(ValueError, match="count must be >= 1"):
+        FaultPlan(events=(FaultEvent(t=0.0, kind="delta_drop", count=0),))
+
+
+def test_fault_plan_parse_grammar():
+    plan = FaultPlan.parse(
+        "worker_crash@2.0,target=1,down=3.0;"
+        "straggler@1.0,duration=5,factor=4;"
+        "delta_drop@0.5,count=3")
+    assert [e.kind for e in plan.events] == [
+        "worker_crash", "straggler", "delta_drop"]
+    wc, st, dd = plan.events
+    assert (wc.t, wc.target, wc.down_s) == (2.0, 1, 3.0)
+    assert (st.duration_s, st.factor) == (5.0, 4.0)
+    assert dd.count == 3
+    # sorted_events orders by time, stable
+    assert [e.kind for e in plan.sorted_events()] == [
+        "delta_drop", "straggler", "worker_crash"]
+    assert len(FaultPlan.parse("")) == 0 and len(FaultPlan.parse(" ; ")) == 0
+    with pytest.raises(ValueError, match="expected 'kind@t'"):
+        FaultPlan.parse("worker_crash")
+    with pytest.raises(ValueError, match="is not a number"):
+        FaultPlan.parse("worker_crash@soon")
+    with pytest.raises(ValueError, match="bad field"):
+        FaultPlan.parse("worker_crash@1,fuzz=3")
+    with pytest.raises(ValueError, match="not a valid int"):
+        FaultPlan.parse("delta_drop@1,count=many")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan.parse("meteor@1")
+
+
+def test_injector_windows_and_delta_counters():
+    inj = FaultInjector(FaultPlan())
+    for kind in ("straggler", "search_fail"):
+        inj.activate(FaultEvent(t=1.0, kind=kind, target=0, duration_s=2.0,
+                                factor=3.0))
+    # windows are [t, t + duration): closed start, open end, per worker
+    assert inj.latency_multiplier(0, 1.0) == 3.0
+    assert inj.latency_multiplier(0, 3.0) == 1.0
+    assert inj.latency_multiplier(1, 1.5) == 1.0
+    assert inj.search_fails(0, 2.9) and not inj.search_fails(0, 3.0)
+    # overlapping straggler windows compound
+    inj.activate(FaultEvent(t=2.0, kind="straggler", target=0,
+                            duration_s=2.0, factor=2.0))
+    assert inj.latency_multiplier(0, 2.5) == 6.0
+    # delta counters consume one per append; drop wins over dup
+    inj.activate(FaultEvent(t=0.0, kind="delta_drop", count=1))
+    inj.activate(FaultEvent(t=0.0, kind="delta_dup", count=1))
+    assert [inj.delta_fault() for _ in range(3)] == ["drop", "dup", None]
+    assert (inj.dropped_appends, inj.duplicated_appends) == (1, 1)
+
+
+# ---------------------------------------------------------------------------
+# Replication substrate: gap detection, promote retirement, idempotence
+# ---------------------------------------------------------------------------
+
+def _rows(rng, n, cfg, hi=200):
+    qs = rng.normal(size=(n, cfg.d)).astype(np.float32)
+    ids = rng.integers(0, hi, size=(n, cfg.k)).astype(np.int32)
+    vecs = rng.normal(size=(n, cfg.k, cfg.d)).astype(np.float32)
+    return qs, ids, vecs
+
+
+def test_replay_gap_raises_naming_replica_and_seq():
+    """Satellite regression: rows lost on the replication channel must
+    surface as a LOUD per-replica error at the next replay — silently
+    folding past the gap would diverge the replica from the primary."""
+    cfg = HasConfig(k=4, h_max=16, doc_capacity=64, d=8)
+    pool = EdgeReplicaPool(cfg, n_replicas=2, sync_every=100, compact=False)
+    rng = np.random.default_rng(0)
+    qs, ids, vecs = _rows(rng, 3, cfg)
+    pool.record_batch(qs, ids, vecs)
+    pool.sync(0)                             # replica 0 at seq 3
+    pool.mark_lost(2)                        # seqs 3-4 lost in transit
+    qs2, ids2, vecs2 = _rows(rng, 2, cfg)
+    pool.record_batch(qs2, ids2, vecs2)      # seqs 5-6 arrive
+    with pytest.raises(ValueError,
+                       match=r"replica 0: expected seq 3, got 5"):
+        pool.sync(0)
+    # replica 1 (cursor 0) sees the same gap mid-log, named with ITS id
+    with pytest.raises(ValueError, match=r"replica 1: expected seq 3"):
+        pool.sync(1)
+
+
+def test_replay_gap_trailing_and_total_loss():
+    cfg = HasConfig(k=4, h_max=16, doc_capacity=64, d=8)
+    pool = EdgeReplicaPool(cfg, n_replicas=1, sync_every=100, compact=False,
+                           sync_on_record=False)
+    rng = np.random.default_rng(1)
+    pool.record_batch(*_rows(rng, 3, cfg))
+    pool.mark_lost(1)                        # tail row lost, no rows after
+    with pytest.raises(ValueError, match="replica 0.*full resync"):
+        pool.sync(0)
+    pool.resync_from(0, pool.states[0], pool.log.head)
+    assert pool.sync(0) == 0                 # recovered, nothing to replay
+
+
+def test_promote_retires_cursor_and_log_stays_bounded():
+    """Satellite regression: promote() must retire the promoted replica's
+    cursor — otherwise the stale cursor pins compaction forever and the
+    delta log grows without bound while serving continues."""
+    cfg = HasConfig(k=4, h_max=16, doc_capacity=64, d=8)
+    pool = EdgeReplicaPool(cfg, n_replicas=2, sync_every=4)   # compact=True
+    rng = np.random.default_rng(2)
+    pool.record_batch(*_rows(rng, 8, cfg))
+    promoted = pool.promote(1)
+    assert 1 in pool.retired
+    # serving continues on replica 0 only: every subsequent batch trips
+    # replica 0's cadence, and with replica 1 retired the log compacts
+    # down each time instead of accumulating behind its dead cursor
+    for _ in range(6):
+        pool.record_batch(*_rows(rng, 4, cfg))
+        assert len(pool.log) < pool.sync_every + 4
+    assert pool.log.base > 8                 # trimmed PAST the old cursor
+    # replaying into the retired slot is refused (its buffers now back
+    # the promoted primary; a donated-buffer fold would corrupt it)
+    with pytest.raises(ValueError, match="retired by promote"):
+        pool.sync(1)
+    # rebuild un-retires with a DEEP copy: folding into the rebuilt slot
+    # must not mutate the promoted primary's arrays
+    import jax
+    before = [np.asarray(l).copy() for l in jax.tree.leaves(promoted)]
+    pool.resync_from(1, promoted, pool.log.head)
+    assert 1 not in pool.retired
+    pool.record_batch(*_rows(rng, 8, cfg))   # trips both replicas' replay
+    for b, l in zip(before, jax.tree.leaves(promoted)):
+        np.testing.assert_array_equal(b, np.asarray(l))
+
+
+def test_ingest_key_idempotence(tmp_path):
+    """The same ingest batch delivered twice (duplicated replication send
+    or a retried cloud dispatch) folds exactly once, on every sink."""
+    cfg = HasConfig(k=4, h_max=16, doc_capacity=64, d=8)
+    rng = np.random.default_rng(3)
+    qs, ids, vecs = _rows(rng, 3, cfg, hi=60)
+    pool = EdgeReplicaPool(cfg, n_replicas=2, sync_every=100)
+    pool.record_batch(qs, ids, vecs, ingest_key=7)
+    pool.record_batch(qs, ids, vecs, ingest_key=7)    # dropped whole
+    assert pool.log.head == 3
+    pool.record_batch(qs, ids, vecs, ingest_key=8)    # new key folds
+    assert pool.log.head == 6
+    sb = WarmStandby(cfg, CheckpointManager(str(tmp_path)))
+    from repro.core.has import init_has_state
+    state = init_has_state(cfg)
+    sb.record_batch(qs, ids, vecs, state, ingest_key=7)
+    sb.record_batch(qs, ids, vecs, state, ingest_key=7)
+    assert sb.log.head == 3
+    # key=None skips dedup (the historical unkeyed path)
+    sb.record_batch(qs, ids, vecs, state)
+    sb.record_batch(qs, ids, vecs, state)
+    assert sb.log.head == 9
+
+
+# ---------------------------------------------------------------------------
+# Scheduler chaos runs
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    import jax.numpy as jnp
+
+    from repro.retrieval.service import ShardedMeshBackend
+    world = SyntheticWorld(WorldConfig(n_entities=400, seed=0))
+    lat = LatencyModel()
+    backend = ShardedMeshBackend(jnp.asarray(world.doc_emb), 10, lat,
+                                 n_shards=4, n_workers=4)
+    svc = RetrievalService(world, lat, k=10, chunk=2048, backend=backend)
+    ds = DATASETS["granola"]
+    qs = world.sample_queries(160, pattern=ds["pattern"],
+                              zipf_a=ds["zipf_a"],
+                              p_uncovered=ds["p_uncovered"], seed=1)
+    cfg = HasConfig(k=10, tau=0.2, h_max=400, nprobe=4, n_buckets=256, d=64)
+    return svc, qs, cfg
+
+
+BASE = dict(max_spec_batch=16, full_batch=8, full_max_wait_s=0.1,
+            edge_replicas=3)
+
+#: every fault kind at once — the benchmark's chaos plan in miniature
+CHAOS = FaultPlan(events=(
+    FaultEvent(t=0.3, kind="straggler", target=1, duration_s=2.0,
+               factor=6.0),
+    FaultEvent(t=0.5, kind="worker_crash", target=0, down_s=1.0),
+    FaultEvent(t=0.8, kind="search_fail", target=2, duration_s=1.0),
+    FaultEvent(t=1.0, kind="replica_crash", target=1),
+    FaultEvent(t=0.6, kind="delta_drop", count=2),
+    FaultEvent(t=1.2, kind="delta_dup", count=2),
+))
+
+
+def _serve(svc, qs, cfg, seed=0, arrivals="poisson", **kw):
+    sched = ContinuousBatchingScheduler(
+        svc, cfg, SchedulerConfig(**BASE, **kw), seed=seed)
+    arr = (poisson_arrivals(len(qs), qps=40.0, seed=5)
+           if isinstance(arrivals, str) else arrivals)
+    return sched.serve(qs, arrivals=arr, seed=3)
+
+
+def _same_schedule(a, b):
+    return (np.array_equal(a.t_done, b.t_done)
+            and np.array_equal(a.served_ids, b.served_ids)
+            and list(a.channels) == list(b.channels))
+
+
+def test_empty_plan_bit_identical_to_no_plan(setup):
+    """The zero-cost contract: FaultPlan() == no fault machinery at all
+    (same rng draw order, no extra heap events, same dispatch path)."""
+    svc, qs, cfg = setup
+    r_none = _serve(svc, qs, cfg)
+    r_empty = _serve(svc, qs, cfg, fault_plan=FaultPlan())
+    assert _same_schedule(r_none, r_empty)
+    assert np.array_equal(r_none.t_arrive, r_empty.t_arrive)
+    s = r_empty.summary()
+    assert (s["retries"], s["hedges"], s["worker_deaths"],
+            s["replica_rebuilds"], s["failed"]) == (0, 0, 0, 0, 0)
+    # lost / retry_backoff spans stay identically zero fault-free
+    assert not r_empty.trace.spans["lost"].any()
+    assert not r_empty.trace.spans["retry_backoff"].any()
+
+
+def test_dup_only_plan_bit_identical(setup):
+    """Duplicated replication appends are fully absorbed by idempotent
+    ingest keys: a dup-only chaos run IS the fault-free run, bit-exactly
+    — the strongest form of the no-duplicate-fold verdict."""
+    svc, qs, cfg = setup
+    r0 = _serve(svc, qs, cfg)
+    plan = FaultPlan(events=(FaultEvent(t=0.2, kind="delta_dup", count=3),))
+    r1 = _serve(svc, qs, cfg, fault_plan=plan)
+    assert _same_schedule(r0, r1)
+
+
+def test_chaos_run_deterministic_conserved_and_healed(setup):
+    """All six fault kinds at once: every request still completes (or is
+    explicitly failed), the recovery machinery engages, span conservation
+    stays exact through every retry/hedge/requeue/reroute path, and the
+    whole run replays bit-exactly."""
+    svc, qs, cfg = setup
+    r = _serve(svc, qs, cfg, fault_plan=CHAOS)
+    s = r.summary()
+    assert s["worker_deaths"] == 1
+    assert s["replica_rebuilds"] >= 1        # crash rebuild (+ gap resyncs)
+    assert s["retries"] >= 1 and s["hedges"] >= 1
+    assert s["failed"] == 0                  # bounded retries sufficed
+    # conservation EXACT for every request, including the recovered ones
+    res = r.trace.conservation_residual()
+    assert np.abs(res).max() < 1e-9
+    for st in STAGES:
+        assert r.trace.spans[st].min() >= 0.0, st
+    # faults actually cost something, and the cost is attributed
+    assert r.trace.spans["lost"].sum() > 0
+    assert r.trace.spans["retry_backoff"].sum() > 0
+    # the retried/hedged/rerouted requests specifically conserve
+    touched = (r.trace.spans["lost"] > 0) | (
+        r.trace.spans["retry_backoff"] > 0)
+    assert touched.any() and np.abs(res[touched]).max() < 1e-9
+    # purity: same (seed, plan, arrivals, queries) -> same schedule
+    assert _same_schedule(r, _serve(svc, qs, cfg, fault_plan=CHAOS))
+
+
+def test_trace_off_matches_traced_under_faults(setup):
+    """Tracing is bookkeeping only, also through every recovery path."""
+    svc, qs, cfg = setup
+    r_t = _serve(svc, qs, cfg, fault_plan=CHAOS)
+    r_n = _serve(svc, qs, cfg, fault_plan=CHAOS, trace=False)
+    assert r_n.trace is None
+    assert _same_schedule(r_t, r_n)
+
+
+def test_permanent_worker_crash_degrades_but_completes(setup):
+    """down_s=0 removes the worker forever; the remaining pool absorbs
+    the requeued batch and the stream still drains."""
+    svc, qs, cfg = setup
+    plan = FaultPlan(events=(
+        FaultEvent(t=0.4, kind="worker_crash", target=0, down_s=0.0),))
+    r = _serve(svc, qs[:96], cfg, fault_plan=plan,
+               arrivals=poisson_arrivals(96, qps=40.0, seed=5))
+    s = r.summary()
+    assert s["worker_deaths"] == 1 and s["failed"] == 0
+    assert len(r.t_done) == 96 and np.isfinite(r.t_done).all()
+    assert np.abs(r.trace.conservation_residual()).max() < 1e-9
+
+
+def test_scheduler_fault_knob_and_topology_validation(setup):
+    svc, qs, cfg = setup
+
+    def build(**kw):
+        return ContinuousBatchingScheduler(
+            svc, cfg, SchedulerConfig(**BASE, **kw), seed=0)
+
+    with pytest.raises(ValueError, match="retry_max"):
+        build(retry_max=-1)
+    with pytest.raises(ValueError, match="retry_backoff_s"):
+        build(retry_backoff_s=-0.1)
+    with pytest.raises(ValueError, match="hedge_after"):
+        build(hedge_after=1.0)
+    with pytest.raises(TypeError, match="FaultPlan.parse"):
+        build(fault_plan="worker_crash@1")
+    with pytest.raises(ValueError, match="targets worker 9"):
+        build(fault_plan=FaultPlan(events=(
+            FaultEvent(t=1.0, kind="worker_crash", target=9),)))
+    with pytest.raises(ValueError, match="targets replica 5"):
+        build(fault_plan=FaultPlan(events=(
+            FaultEvent(t=1.0, kind="replica_crash", target=5),)))
+    with pytest.raises(ValueError, match="edge_replicas"):
+        ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(
+            max_spec_batch=16, full_batch=8, full_max_wait_s=0.1,
+            fault_plan=FaultPlan(events=(
+                FaultEvent(t=1.0, kind="replica_crash", target=0),))),
+            seed=0)
+    with pytest.raises(ValueError, match="free_ingest_replay"):
+        build(free_ingest_replay=True, fault_plan=FaultPlan(events=(
+            FaultEvent(t=1.0, kind="delta_drop"),)))
+    with pytest.raises(ValueError, match="permanently crashes all"):
+        build(fault_plan=FaultPlan(events=tuple(
+            FaultEvent(t=1.0, kind="worker_crash", target=i, down_s=0.0)
+            for i in range(4))))
+
+
+# ---------------------------------------------------------------------------
+# Launch CLI argument validation (cheap paths only — they fail before the
+# heavy imports)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("argv", [
+    ["--engine", "sched", "--fault-plan", "meteor@1"],
+    ["--engine", "sched", "--fault-plan", "worker_crash"],
+    ["--engine", "has", "--fault-plan", "worker_crash@1"],
+    ["--engine", "sched", "--retry-max", "2"],
+    ["--engine", "sched", "--hedge-after", "2.5"],
+    ["--engine", "sched", "--fault-plan", "worker_crash@1",
+     "--retry-max", "-1"],
+    ["--engine", "sched", "--fault-plan", "worker_crash@1",
+     "--hedge-after", "1.0"],
+])
+def test_serve_cli_rejects_bad_fault_args(argv, capsys):
+    from repro.launch.serve import main
+    with pytest.raises(SystemExit) as ei:
+        main(argv)
+    assert ei.value.code == 2
+    err = capsys.readouterr().err
+    assert "--fault-plan" in err or "--retry-max" in err \
+        or "--hedge-after" in err
