@@ -17,7 +17,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _ivf_kernel(probe_ref, q_ref, vecs_ref, ids_ref, vals_ref, oidx_ref,
-                *, k: int):
+                *, k: int, scales_ref=None, bias_ref=None):
+    """One (query, probed-bucket) grid step.  ``scales_ref``/``bias_ref``
+    (compressed residency) carry the per-half int8 dequant scales and the
+    query-centroid probe score: codes are centroid residuals, so scoring
+    fuses the dequant as ``q.c + (q_lo.v8_lo)s_lo + (q_hi.v8_hi)s_hi`` —
+    the int8 codes are the only per-slot HBM traffic."""
     p = pl.program_id(1)
 
     @pl.when(p == 0)
@@ -28,9 +33,19 @@ def _ivf_kernel(probe_ref, q_ref, vecs_ref, ids_ref, vals_ref, oidx_ref,
     q = q_ref[...].astype(jnp.float32)                     # [1, d]
     vecs = vecs_ref[...][0].astype(jnp.float32)            # [cap, d]
     gids = ids_ref[...][0]                                 # [cap]
-    scores = jax.lax.dot_general(
-        q, vecs, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)[0]             # [cap]
+    if scales_ref is None:
+        scores = jax.lax.dot_general(
+            q, vecs, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)[0]         # [cap]
+    else:
+        h = q.shape[1] // 2
+        sc = scales_ref[...][0]                            # [cap, 2]
+        dot = functools.partial(
+            jax.lax.dot_general, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        scores = (dot(q[:, :h], vecs[:, :h])[0] * sc[:, 0]
+                  + dot(q[:, h:], vecs[:, h:])[0] * sc[:, 1]
+                  + bias_ref[...][0, 0])                   # fused dequant
     scores = jnp.where(gids >= 0, scores, -jnp.inf)
     kcol = jax.lax.iota(jnp.int32, k)
     cap_col = jax.lax.iota(jnp.int32, scores.shape[0])
@@ -54,37 +69,82 @@ def _ivf_kernel(probe_ref, q_ref, vecs_ref, ids_ref, vals_ref, oidx_ref,
     oidx_ref[...] = idx
 
 
+def _ivf_kernel_scaled(probe_ref, q_ref, vecs_ref, ids_ref, scales_ref,
+                       bias_ref, vals_ref, oidx_ref, *, k: int):
+    _ivf_kernel(probe_ref, q_ref, vecs_ref, ids_ref, vals_ref, oidx_ref,
+                k=k, scales_ref=scales_ref, bias_ref=bias_ref)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
 def ivf_scan(queries: jax.Array, probe: jax.Array, bucket_vecs: jax.Array,
-             bucket_ids: jax.Array, k: int, interpret: bool = False):
+             bucket_ids: jax.Array, k: int, interpret: bool = False,
+             bucket_scales: jax.Array | None = None,
+             probe_bias: jax.Array | None = None):
     """queries [B,d], probe [B,P] int32, bucket_vecs [C,cap,d],
-    bucket_ids [C,cap] -> (vals [B,k] desc, global ids [B,k])."""
+    bucket_ids [C,cap] -> (vals [B,k] desc, global ids [B,k]).
+
+    ``bucket_scales [C,cap,2]`` + ``probe_bias [B,P]`` (optional, together)
+    enable the compressed-residency path: ``bucket_vecs`` holds int8
+    centroid-residual codes, ``probe_bias`` the query-centroid score of
+    each probed bucket (the probe matmul already computed it), and each
+    slot scores as ``bias + (q_lo.v8_lo)s_lo + (q_hi.v8_hi)s_hi`` inside
+    the kernel (per-half scales factor out of the half inner products).
+    Without them the program is byte-identical to the original f32 scan.
+    """
     b, d = queries.shape
     nprobe = probe.shape[1]
     cap = bucket_vecs.shape[1]
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(b, nprobe),
-        in_specs=[
-            pl.BlockSpec((1, d), lambda bi, pi, probe: (bi, 0)),
-            pl.BlockSpec((1, cap, d),
-                         lambda bi, pi, probe: (probe[bi, pi], 0, 0)),
-            pl.BlockSpec((1, cap),
-                         lambda bi, pi, probe: (probe[bi, pi], 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, k), lambda bi, pi, probe: (bi, 0)),
-            pl.BlockSpec((1, k), lambda bi, pi, probe: (bi, 0)),
-        ],
-    )
+    if bucket_scales is None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, nprobe),
+            in_specs=[
+                pl.BlockSpec((1, d), lambda bi, pi, probe: (bi, 0)),
+                pl.BlockSpec((1, cap, d),
+                             lambda bi, pi, probe: (probe[bi, pi], 0, 0)),
+                pl.BlockSpec((1, cap),
+                             lambda bi, pi, probe: (probe[bi, pi], 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, k), lambda bi, pi, probe: (bi, 0)),
+                pl.BlockSpec((1, k), lambda bi, pi, probe: (bi, 0)),
+            ],
+        )
+        kernel = functools.partial(_ivf_kernel, k=k)
+        operands = (probe, queries, bucket_vecs, bucket_ids)
+    else:
+        if probe_bias is None:
+            raise ValueError(
+                "bucket_scales (residual codes) requires probe_bias")
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, nprobe),
+            in_specs=[
+                pl.BlockSpec((1, d), lambda bi, pi, probe: (bi, 0)),
+                pl.BlockSpec((1, cap, d),
+                             lambda bi, pi, probe: (probe[bi, pi], 0, 0)),
+                pl.BlockSpec((1, cap),
+                             lambda bi, pi, probe: (probe[bi, pi], 0)),
+                pl.BlockSpec((1, cap, 2),
+                             lambda bi, pi, probe: (probe[bi, pi], 0, 0)),
+                pl.BlockSpec((1, 1), lambda bi, pi, probe: (bi, pi)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, k), lambda bi, pi, probe: (bi, 0)),
+                pl.BlockSpec((1, k), lambda bi, pi, probe: (bi, 0)),
+            ],
+        )
+        kernel = functools.partial(_ivf_kernel_scaled, k=k)
+        operands = (probe, queries, bucket_vecs, bucket_ids, bucket_scales,
+                    probe_bias.astype(jnp.float32))
     vals, idx = pl.pallas_call(
-        functools.partial(_ivf_kernel, k=k),
+        kernel,
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((b, k), jnp.float32),
                    jax.ShapeDtypeStruct((b, k), jnp.int32)],
         interpret=interpret,
-    )(probe, queries, bucket_vecs, bucket_ids)
+    )(*operands)
     order = jnp.argsort(-vals, axis=1)
     return jnp.take_along_axis(vals, order, axis=1), \
         jnp.take_along_axis(idx, order, axis=1)

@@ -36,11 +36,13 @@ def homology_score(draft_ids, cache_doc_ids, cache_valid, tile_h: int = 512,
                            tile_h=tile_h, interpret=interpret)
 
 
-def ivf_scan(queries, probe, bucket_vecs, bucket_ids, k, interpret=None):
+def ivf_scan(queries, probe, bucket_vecs, bucket_ids, k, interpret=None,
+             bucket_scales=None, probe_bias=None):
     if interpret is None:
         interpret = auto_interpret()
     return _ivf_scan(queries, probe, bucket_vecs, bucket_ids, k,
-                     interpret=interpret)
+                     interpret=interpret, bucket_scales=bucket_scales,
+                     probe_bias=probe_bias)
 
 
 def embedding_bag(table, ids, weights=None, mode="sum", interpret=None):

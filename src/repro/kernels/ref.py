@@ -24,20 +24,39 @@ def homology_score_ref(draft_ids: jax.Array, cache_doc_ids: jax.Array,
 
 
 def ivf_scan_ref(queries: jax.Array, probe: jax.Array, bucket_vecs: jax.Array,
-                 bucket_ids: jax.Array, k: int):
+                 bucket_ids: jax.Array, k: int,
+                 bucket_scales: jax.Array | None = None,
+                 probe_bias: jax.Array | None = None):
     """Gather probed buckets + exact local top-k.
 
     queries [B,d], probe [B,P] bucket indices, bucket_vecs [C,cap,d],
     bucket_ids [C,cap] -> (vals [B,k], global ids [B,k]).
+    ``bucket_scales [C,cap,2]`` + ``probe_bias [B,P]`` (together) score the
+    compressed corpus residency mode's int8 centroid-residual codes:
+    ``bias + (q_lo.v8_lo)s_lo + (q_hi.v8_hi)s_hi`` per slot.
     """
+    q = queries.astype(jnp.float32)
     vecs = bucket_vecs[probe]                             # [B,P,cap,d]
     ids = bucket_ids[probe]                               # [B,P,cap]
-    s = jnp.einsum("bd,bpcd->bpc", queries.astype(jnp.float32),
-                   vecs.astype(jnp.float32))
+    if bucket_scales is not None:
+        h = q.shape[1] // 2
+        codes = vecs.astype(jnp.float32)
+        sc = bucket_scales[probe]                         # [B,P,cap,2]
+        s = (jnp.einsum("bd,bpcd->bpc", q[:, :h], codes[..., :h]) * sc[..., 0]
+             + jnp.einsum("bd,bpcd->bpc", q[:, h:], codes[..., h:])
+             * sc[..., 1]
+             + probe_bias.astype(jnp.float32)[:, :, None])
+    else:
+        s = jnp.einsum("bd,bpcd->bpc", q, vecs.astype(jnp.float32))
     s = jnp.where(ids >= 0, s, -jnp.inf)
     b = queries.shape[0]
-    vals, pos = jax.lax.top_k(s.reshape(b, -1), k)
-    return vals, jnp.take_along_axis(ids.reshape(b, -1), pos, axis=1)
+    s, ids = s.reshape(b, -1), ids.reshape(b, -1)
+    if s.shape[1] < k:                # probed pool < k: pad like the kernel
+        pad = k - s.shape[1]
+        s = jnp.pad(s, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+    vals, pos = jax.lax.top_k(s, k)
+    return vals, jnp.take_along_axis(ids, pos, axis=1)
 
 
 def embedding_bag_ref(table: jax.Array, ids: jax.Array,

@@ -57,16 +57,29 @@ def main(argv=None) -> None:
                     choices=["has", "full", "proximity", "saferadius",
                              "mincache", "crag", "ivf", "scann", "sched"])
     ap.add_argument("--retrieval-backend", default="flat",
-                    choices=["flat", "sharded", "replica"],
+                    choices=["flat", "sharded", "replica", "ann"],
                     help="full-retrieval backend (retrieval/service.py): "
                          "in-process flat scan, mesh-sharded concurrent "
-                         "scan, or warm-standby replicas")
+                         "scan, warm-standby replicas, or the IVF ANN "
+                         "index (approximate; nprobe-calibrated)")
     ap.add_argument("--shards", type=int, default=4,
                     help="corpus shards for --retrieval-backend sharded")
     ap.add_argument("--workers", type=int, default=None,
-                    help="concurrent cloud dispatch slots (sharded) / "
+                    help="concurrent cloud dispatch slots (sharded/ann) / "
                          "standby replicas (replica); default 2.  Only "
                          "meaningful with a non-flat --retrieval-backend")
+    ap.add_argument("--nprobe", type=int, default=32,
+                    help="IVF buckets probed per query for "
+                         "--retrieval-backend ann; calibrate with "
+                         "benchmarks/ann_recall.py (recall feeds the HaS "
+                         "cache, so too-low nprobe compounds end-to-end)")
+    ap.add_argument("--ann-clusters", type=int, default=1024,
+                    help="IVF centroid count for --retrieval-backend ann "
+                         "(clamped to corpus_docs/8 for tiny corpora)")
+    ap.add_argument("--compressed-corpus", action="store_true",
+                    help="int8 centroid-residual compressed bucket residency "
+                         "for --retrieval-backend ann (~3.6x smaller scan "
+                         "operand; dequant fused into the kernel)")
     ap.add_argument("--tenants", type=int, default=1,
                     help="tenant partitions of the HaS cache (--h-max "
                          "capacity EACH); queries are tagged per tenant")
@@ -124,8 +137,19 @@ def main(argv=None) -> None:
         ap.error(f"--workers must be >= 1 (got {args.workers})")
     if args.workers is not None and args.retrieval_backend == "flat":
         ap.error("--workers only applies to --retrieval-backend "
-                 "sharded|replica (the flat backend is one in-process "
+                 "sharded|replica|ann (the flat backend is one in-process "
                  "worker by definition)")
+    if args.nprobe < 1:
+        ap.error(f"--nprobe must be >= 1 (got {args.nprobe})")
+    if args.ann_clusters < 1:
+        ap.error(f"--ann-clusters must be >= 1 (got {args.ann_clusters})")
+    if args.nprobe > args.ann_clusters:
+        ap.error(f"--nprobe ({args.nprobe}) must be <= --ann-clusters "
+                 f"({args.ann_clusters}): a query cannot probe more "
+                 "buckets than the index has")
+    if args.compressed_corpus and args.retrieval_backend != "ann":
+        ap.error("--compressed-corpus only applies to --retrieval-backend "
+                 "ann (the exact backends scan the f32 corpus)")
     if args.tenants < 1:
         ap.error(f"--tenants must be >= 1 (got {args.tenants})")
     if args.tenant_zipf < 0:
@@ -217,6 +241,13 @@ def main(argv=None) -> None:
             for i in range(workers)]
         backend = ReplicaBackend(
             LocalFlatBackend(corpus, args.k, latency), standbys, corpus)
+    elif args.retrieval_backend == "ann":
+        from repro.retrieval.service import IVFBackend
+        backend = IVFBackend(corpus, args.k, latency,
+                             n_clusters=args.ann_clusters,
+                             nprobe=args.nprobe,
+                             compressed=args.compressed_corpus,
+                             n_workers=workers, seed=args.seed)
     else:
         backend = None                       # RetrievalService default: flat
     svc = RetrievalService(world, latency, k=args.k, backend=backend)

@@ -20,6 +20,9 @@ import jax.numpy as jnp
 import numpy as np
 
 
+from repro.training.compression import quantize_int8
+
+
 @dataclasses.dataclass
 class IVFIndex:
     centroids: jax.Array     # [C, d]
@@ -46,6 +49,51 @@ class IVFIndex:
 
 jax.tree_util.register_pytree_node(
     IVFIndex, IVFIndex.tree_flatten, IVFIndex.tree_unflatten)
+
+
+@dataclasses.dataclass
+class CompressedIVFIndex:
+    """IVF index with int8 residual-coded bucket storage.
+
+    The compressed-residency mode of the ANN cloud backend: ``bucket_vecs``
+    holds symmetric-int8 codes of the RESIDUAL ``v - centroid[bucket]``
+    (residuals are much smaller than the vectors, so the int8 grid spends
+    its 8 bits where the information is), with one dequant scale per
+    d/2-dim half of each slot.  The scan operand is ~3.6x smaller than f32
+    and the dequant fuses into scoring:
+
+        ``q . v  =  q . c  +  (q_lo . v8_lo) s_lo  +  (q_hi . v8_hi) s_hi``
+
+    — the centroid term is the probe score the search already computed, and
+    the per-half scales factor out of the half inner products, so no f32
+    vectors are ever materialized.
+    """
+    centroids: jax.Array      # [C, d] f32
+    bucket_vecs: jax.Array    # [C, cap, d] int8 residual codes
+    bucket_scales: jax.Array  # [C, cap, 2] f32 per-half dequant scales
+    bucket_ids: jax.Array     # [C, cap] int32 global ids (-1 = pad)
+    bucket_counts: jax.Array  # [C] int32
+
+    @property
+    def n_buckets(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.bucket_ids.shape[1]
+
+    def tree_flatten(self):
+        return ((self.centroids, self.bucket_vecs, self.bucket_scales,
+                 self.bucket_ids, self.bucket_counts), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    CompressedIVFIndex, CompressedIVFIndex.tree_flatten,
+    CompressedIVFIndex.tree_unflatten)
 
 
 @functools.partial(jax.jit, static_argnames=("n_clusters",), donate_argnums=(1,))
@@ -109,6 +157,91 @@ def build_ivf(corpus: jax.Array, n_buckets: int, capacity_factor: float = 2.0,
                     bucket_counts=jnp.asarray(counts))
 
 
+@jax.jit
+def _quant_residual_halves(rows, cents_rows):
+    """int8-code the residual ``rows - centroid`` with one symmetric scale
+    per d/2-dim half.  Returns ``(codes [n, d] int8, scales [n, 2] f32)``."""
+    r = rows - cents_rows
+    h = r.shape[1] // 2
+    q0, s0 = quantize_int8(r[:, :h], axis=-1)
+    q1, s1 = quantize_int8(r[:, h:], axis=-1)
+    return jnp.concatenate([q0, q1], axis=1), jnp.concatenate([s0, s1], axis=1)
+
+
+def _build_ivf_arrays(corpus, n_buckets: int, capacity_factor: float = 2.0,
+                      kmeans_iters: int = 10, seed: int = 0,
+                      chunk: int = 65536, compressed: bool = False,
+                      ids=None):
+    """Streaming bucket build on HOST arrays (the backend keeps them as
+    mutable mirrors for live ingest).  The corpus flows through k-means
+    assignment ``chunk`` rows at a time; per-bucket fill cursors reproduce
+    ``build_ivf``'s stable bucket order without ever materializing the
+    [B, C] score matrix or (in compressed mode) f32 buckets.  Returns
+    ``(centroids, bucket_vecs, bucket_scales | None, bucket_ids, counts)``
+    as numpy arrays.
+    """
+    corpus_np = np.asarray(corpus)
+    n, d = corpus_np.shape
+    n_buckets = max(1, min(n_buckets, n // 8))   # clamp for tiny corpora
+    cents = kmeans(jnp.asarray(corpus_np), n_buckets, kmeans_iters, seed)
+    cap = int(np.ceil(n / n_buckets * capacity_factor))
+    gids = (np.arange(n, dtype=np.int32) if ids is None
+            else np.asarray(ids, np.int32))
+    bucket_ids = np.full((n_buckets, cap), -1, np.int32)
+    counts = np.zeros(n_buckets, np.int64)
+    if compressed:
+        bucket_vecs = np.zeros((n_buckets, cap, d), np.int8)
+        bucket_scales = np.zeros((n_buckets, cap, 2), np.float32)
+        cents_np = np.asarray(cents)
+    else:
+        bucket_vecs = np.zeros((n_buckets, cap, d), np.float32)
+        bucket_scales = None
+    for lo in range(0, n, chunk):
+        rows = corpus_np[lo:lo + chunk]
+        assign = np.asarray(_assign_fn(jnp.asarray(rows), cents))
+        order = np.argsort(assign, kind="stable")
+        sb = assign[order]
+        starts = np.searchsorted(sb, np.arange(n_buckets))
+        pos = counts[sb] + (np.arange(len(sb)) - starts[sb])
+        keep = pos < cap
+        rb, rp, ro = sb[keep], pos[keep].astype(np.int64), order[keep]
+        bucket_ids[rb, rp] = gids[lo + ro]
+        if compressed:
+            q, scale = _quant_residual_halves(
+                jnp.asarray(rows[ro]), jnp.asarray(cents_np[rb]))
+            bucket_vecs[rb, rp] = np.asarray(q)
+            bucket_scales[rb, rp] = np.asarray(scale)
+        else:
+            bucket_vecs[rb, rp] = rows[ro]
+        counts = np.minimum(
+            counts + np.bincount(sb, minlength=n_buckets), cap)
+    return (np.asarray(cents), bucket_vecs, bucket_scales, bucket_ids,
+            counts.astype(np.int32))
+
+
+def build_ivf_streaming(corpus, n_buckets: int, capacity_factor: float = 2.0,
+                        kmeans_iters: int = 10, seed: int = 0,
+                        chunk: int = 65536, compressed: bool = False,
+                        ids=None) -> IVFIndex | CompressedIVFIndex:
+    """Chunked-assignment build; bucket contents identical to ``build_ivf``
+    for the same (corpus, seed).  ``compressed=True`` returns a
+    :class:`CompressedIVFIndex` with int8 bucket storage — the f32 buckets
+    are never materialized, only one ``chunk``-row slice at a time."""
+    cents, bvecs, bscales, bids, counts = _build_ivf_arrays(
+        corpus, n_buckets, capacity_factor, kmeans_iters, seed, chunk,
+        compressed, ids)
+    if compressed:
+        return CompressedIVFIndex(centroids=jnp.asarray(cents),
+                                  bucket_vecs=jnp.asarray(bvecs),
+                                  bucket_scales=jnp.asarray(bscales),
+                                  bucket_ids=jnp.asarray(bids),
+                                  bucket_counts=jnp.asarray(counts))
+    return IVFIndex(centroids=jnp.asarray(cents),
+                    bucket_vecs=jnp.asarray(bvecs),
+                    bucket_ids=jnp.asarray(bids),
+                    bucket_counts=jnp.asarray(counts))
+
+
 def subset_index(index: IVFIndex, fraction: float, seed: int = 0) -> IVFIndex:
     """Keep only a fraction of each bucket (Table VII compression mode)."""
     if fraction >= 1.0:
@@ -121,16 +254,27 @@ def subset_index(index: IVFIndex, fraction: float, seed: int = 0) -> IVFIndex:
                     bucket_counts=jnp.minimum(index.bucket_counts, new_cap))
 
 
-@functools.partial(jax.jit, static_argnames=("nprobe", "k"))
-def ivf_search(index: IVFIndex, queries: jax.Array, *, nprobe: int,
-               k: int) -> tuple[jax.Array, jax.Array]:
-    """queries [B, d] -> (scores [B, k], global ids [B, k])."""
-    nprobe = min(nprobe, index.n_buckets)
-    cscores = queries @ index.centroids.T                    # [B, C]
-    _, probe = jax.lax.top_k(cscores, nprobe)                # [B, nprobe]
+def ivf_probe_scan(index: IVFIndex | CompressedIVFIndex, queries: jax.Array,
+                   probe: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Gather + score the probed buckets (traceable; the XLA oracle of the
+    Pallas ``ivf_scan`` kernel).  For a :class:`CompressedIVFIndex` the
+    int8 dequant fuses into scoring: codes are centroid residuals with
+    per-half scales, so scores are ``q.c + (q_lo.v8_lo)s_lo +
+    (q_hi.v8_hi)s_hi`` — no f32 gather."""
     vecs = index.bucket_vecs[probe]                          # [B, np, cap, d]
     ids = index.bucket_ids[probe]                            # [B, np, cap]
-    s = jnp.einsum("bd,bpcd->bpc", queries, vecs)
+    if isinstance(index, CompressedIVFIndex):
+        h = queries.shape[1] // 2
+        codes = vecs.astype(jnp.float32)
+        scales = index.bucket_scales[probe]                  # [B, np, cap, 2]
+        bias = jnp.einsum("bd,bpd->bp", queries, index.centroids[probe])
+        s = (jnp.einsum("bd,bpcd->bpc", queries[:, :h], codes[..., :h])
+             * scales[..., 0]
+             + jnp.einsum("bd,bpcd->bpc", queries[:, h:], codes[..., h:])
+             * scales[..., 1]
+             + bias[:, :, None])
+    else:
+        s = jnp.einsum("bd,bpcd->bpc", queries, vecs)
     s = jnp.where(ids >= 0, s, -jnp.inf)
     b = queries.shape[0]
     s = s.reshape(b, -1)
@@ -141,3 +285,13 @@ def ivf_search(index: IVFIndex, queries: jax.Array, *, nprobe: int,
         ids = jnp.concatenate([ids, jnp.full((b, pad), -1, ids.dtype)], 1)
     top_s, top_i = jax.lax.top_k(s, k)
     return top_s, jnp.take_along_axis(ids, top_i, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "k"))
+def ivf_search(index: IVFIndex | CompressedIVFIndex, queries: jax.Array, *,
+               nprobe: int, k: int) -> tuple[jax.Array, jax.Array]:
+    """queries [B, d] -> (scores [B, k], global ids [B, k])."""
+    nprobe = min(nprobe, index.n_buckets)
+    cscores = queries @ index.centroids.T                    # [B, C]
+    _, probe = jax.lax.top_k(cscores, nprobe)                # [B, nprobe]
+    return ivf_probe_scan(index, queries, probe, k)

@@ -22,6 +22,19 @@ deployment spectrum:
     Off-mesh (one local device) the identical merge math runs through
     :func:`~repro.retrieval.distributed.sharded_topk_reference`, keeping
     results bit-identical to the mesh path and to ``LocalFlatBackend``.
+``IVFBackend``
+    ANN cloud stage (``--retrieval-backend ann``): an IVF index
+    (``retrieval/ivf.py``) scored through the Pallas ``ivf_scan`` kernel or
+    its XLA oracle — the same ``backend="pallas"|"xla"`` switch the
+    speculation path uses — in ONE dispatch per query batch (centroid
+    matmul -> top-nprobe -> scalar-prefetched bucket scan -> residual
+    merge).  Optional int8 compressed corpus residency
+    (``compressed=True``) quantizes bucket storage per vector with the
+    dequant fused into the scan.  ``latency`` is
+    ``LatencyModel.ann_scale`` — centroid + nprobe·capacity bucket cost
+    instead of the full corpus.  NOTE the result is *approximate*:
+    recall@k is calibrated by ``benchmarks/ann_recall.py``, end-to-end,
+    because approximate results feed the HaS cache.
 ``ReplicaBackend``
     Routes full retrievals through warm-standby replicas
     (``serving/replication.py``): ``n_workers`` = number of standbys, and
@@ -44,9 +57,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dispatch
 from repro.retrieval.distributed import (distributed_flat_search,
                                          sharded_topk_reference)
 from repro.retrieval.flat import chunked_flat_search
+from repro.retrieval.ivf import (CompressedIVFIndex, IVFIndex, _assign_fn,
+                                 _build_ivf_arrays, _quant_residual_halves,
+                                 ivf_probe_scan)
 
 
 @runtime_checkable
@@ -155,6 +172,221 @@ class ShardedMeshBackend(_BackendBase):
         return self.lat.full_scan_time() * self.lat.shard_scale(self.n_shards)
 
 
+@functools.partial(jax.jit, static_argnames=("nprobe", "k", "scan_backend",
+                                             "interpret"))
+def _ivf_ann_search(index, res_vecs, res_ids, queries, *, nprobe: int, k: int,
+                    scan_backend: str, interpret: bool):
+    """ONE program per [B,d] batch: centroid matmul -> top-nprobe probe ->
+    bucket scan (Pallas kernel or XLA oracle) -> exact residual-buffer scan
+    -> merged top-k.  Everything fuses into a single host dispatch."""
+    from repro.kernels import ops
+    queries = queries.astype(jnp.float32)
+    nprobe = min(nprobe, index.n_buckets)
+    cscores = queries @ index.centroids.T                    # [B, C]
+    cvals, probe = jax.lax.top_k(cscores, nprobe)            # [B, nprobe]
+    if scan_backend == "pallas":
+        if isinstance(index, CompressedIVFIndex):
+            # residual codes: the probe scores double as the centroid bias
+            scales, bias = index.bucket_scales, cvals
+        else:
+            scales = bias = None
+        s, ids = ops.ivf_scan(queries, probe.astype(jnp.int32),
+                              index.bucket_vecs, index.bucket_ids, k,
+                              interpret=interpret, bucket_scales=scales,
+                              probe_bias=bias)
+    else:
+        s, ids = ivf_probe_scan(index, queries, probe, k)
+    # exact scan of the residual flat buffer (live-ingested bucket spill)
+    rs = queries @ res_vecs.T                                # [B, R]
+    rs = jnp.where(res_ids[None, :] >= 0, rs, -jnp.inf)
+    rk = min(k, res_vecs.shape[0])
+    r_s, r_pos = jax.lax.top_k(rs, rk)
+    r_ids = res_ids[r_pos]
+    s = jnp.concatenate([s, r_s], axis=1)
+    ids = jnp.concatenate([ids, r_ids], axis=1)
+    top_s, top_i = jax.lax.top_k(s, k)
+    return top_s, jnp.take_along_axis(ids, top_i, axis=1)
+
+
+class IVFBackend(_BackendBase):
+    """ANN cloud stage: IVF index + Pallas/XLA bucket scan + live-ingest
+    reconciliation.
+
+    The index is built by streaming the corpus through k-means assignment
+    in ``build_chunk``-row slices (never materializing f32 buckets in
+    compressed mode); host-side mirrors of the bucket arrays stay canonical
+    so live ingest mutates numpy and re-uploads lazily on the next search.
+    ``compressed=True`` stores int8 centroid-residual codes with two
+    per-half dequant scales (``retrieval/ivf.py::_quant_residual_halves``,
+    built on ``training/compression.py::quantize_int8``); the dequant fuses
+    into scoring on both scan backends and the centroid term reuses the
+    probe matmul — the bucket store shrinks ~3.6x (d bytes + two f32
+    scales per vector vs 4d bytes), with a smaller recall drop than plain
+    per-vector int8 because the int8 grid codes only the residual.
+
+    Live ingest (``ingest_docs``) assigns each new doc to its nearest
+    centroid; a full bucket spills into a small exact-scanned residual
+    flat buffer (capacity ``residual_cap``), and residual overflow
+    triggers a full re-bucketing flush (k-means + rebuild over the grown
+    corpus).  Search correctness never depends on WHERE a doc landed —
+    the residual is merged into every top-k.  ``on_ingest`` (cache-ingest
+    notification) stays the no-op base hook, so ``ReplicaBackend`` can
+    wrap an ``IVFBackend`` unchanged.
+
+    Results are APPROXIMATE (recall < 1 at nprobe < n_buckets) and feed
+    the HaS cache downstream; calibrate nprobe with
+    ``benchmarks/ann_recall.py``, which measures end-to-end doc-hit, not
+    just kernel recall@k.
+    """
+
+    def __init__(self, corpus: jax.Array, k: int, lat,
+                 n_clusters: int = 1024, nprobe: int = 32,
+                 capacity_factor: float = 2.0, compressed: bool = False,
+                 backend: str | None = None, n_workers: int = 1,
+                 seed: int = 0, residual_cap: int = 1024,
+                 build_chunk: int = 65536, kmeans_iters: int = 10,
+                 interpret: bool | None = None):
+        from repro.core.has import default_backend
+        from repro.kernels.ops import auto_interpret
+        self.corpus = corpus
+        self.k = k
+        self.lat = lat
+        self.n_clusters = int(n_clusters)
+        self.nprobe = max(1, int(nprobe))
+        self.capacity_factor = float(capacity_factor)
+        self.compressed = bool(compressed)
+        self.scan_backend = backend if backend is not None else default_backend()
+        self.n_workers = max(1, int(n_workers))
+        self.seed = int(seed)
+        self.residual_cap = max(1, int(residual_cap))
+        self.build_chunk = int(build_chunk)
+        self.kmeans_iters = int(kmeans_iters)
+        self._interpret = auto_interpret() if interpret is None else interpret
+        self._corpus_np = np.asarray(corpus, np.float32)
+        self._ids_np = np.arange(self._corpus_np.shape[0], dtype=np.int32)
+        self._next_id = int(self._corpus_np.shape[0])
+        self._ingest_seen: dict = {}
+        self.rebuilds = 0
+        self._res_vecs_np = np.zeros(
+            (self.residual_cap, self._corpus_np.shape[1]), np.float32)
+        self._res_ids_np = np.full(self.residual_cap, -1, np.int32)
+        self._res_count = 0
+        self._build()
+
+    # -- index build / upload -------------------------------------------
+    def _build(self) -> None:
+        (self._cents_np, self._bvecs_np, self._bscales_np, self._bids_np,
+         self._counts_np) = _build_ivf_arrays(
+            self._corpus_np, self.n_clusters,
+            capacity_factor=self.capacity_factor,
+            kmeans_iters=self.kmeans_iters, seed=self.seed,
+            chunk=self.build_chunk, compressed=self.compressed,
+            ids=self._ids_np)
+        self._dirty = True
+        self._upload()
+
+    def _upload(self) -> None:
+        if self.compressed:
+            self.index = CompressedIVFIndex(
+                centroids=jnp.asarray(self._cents_np),
+                bucket_vecs=jnp.asarray(self._bvecs_np),
+                bucket_scales=jnp.asarray(self._bscales_np),
+                bucket_ids=jnp.asarray(self._bids_np),
+                bucket_counts=jnp.asarray(self._counts_np))
+        else:
+            self.index = IVFIndex(
+                centroids=jnp.asarray(self._cents_np),
+                bucket_vecs=jnp.asarray(self._bvecs_np),
+                bucket_ids=jnp.asarray(self._bids_np),
+                bucket_counts=jnp.asarray(self._counts_np))
+        self._res_vecs = jnp.asarray(self._res_vecs_np)
+        self._res_ids = jnp.asarray(self._res_ids_np)
+        self._dirty = False
+
+    # -- FullRetrievalBackend protocol ----------------------------------
+    def search(self, q_embs):
+        dispatch.record("ivf_backend_search")
+        if self._dirty:
+            self._upload()
+        return _ivf_ann_search(self.index, self._res_vecs, self._res_ids,
+                               q_embs, nprobe=self.nprobe, k=self.k,
+                               scan_backend=self.scan_backend,
+                               interpret=self._interpret)
+
+    def latency(self, batch: int) -> float:
+        return self.lat.full_scan_time() * self.lat.ann_scale(
+            self.index.n_buckets, self.nprobe,
+            capacity_factor=self.capacity_factor,
+            bytes_per_dim=1 if self.compressed else 4,
+            residual_rows=self._res_count)
+
+    # -- live-ingest reconciliation -------------------------------------
+    @property
+    def residual_count(self) -> int:
+        return self._res_count
+
+    def _rebucket(self) -> None:
+        """Flush: rebuild the whole index (incl. residual docs, which are
+        already rows of the host corpus) and empty the residual buffer."""
+        self._build()
+        self._res_vecs_np[:] = 0.0
+        self._res_ids_np[:] = -1
+        self._res_count = 0
+        self.rebuilds += 1
+        self._dirty = True
+
+    def ingest_docs(self, vecs, ids=None, *, ingest_key=None) -> np.ndarray:
+        """Reconcile live-ingested docs: nearest-centroid assignment with
+        bounded bucket spill into the residual buffer; residual overflow
+        triggers a re-bucketing flush.  Idempotent on ``ingest_key``.
+        Returns the global ids assigned to the new docs."""
+        if ingest_key is not None and ingest_key in self._ingest_seen:
+            return self._ingest_seen[ingest_key]
+        vecs = np.asarray(vecs, np.float32)
+        if vecs.ndim == 1:
+            vecs = vecs[None]
+        n_new = vecs.shape[0]
+        if ids is None:
+            ids = self._next_id + np.arange(n_new, dtype=np.int32)
+        ids = np.asarray(ids, np.int32)
+        self._next_id = max(self._next_id, int(ids.max(initial=-1)) + 1)
+        # the host corpus grows FIRST: a re-bucketing flush rebuilds from
+        # it, so every doc (placed or not) survives the flush
+        self._corpus_np = np.concatenate([self._corpus_np, vecs])
+        self._ids_np = np.concatenate([self._ids_np, ids])
+        assign = np.asarray(_assign_fn(jnp.asarray(vecs),
+                                       jnp.asarray(self._cents_np)))
+        if self.compressed:
+            q_all, s_all = _quant_residual_halves(
+                jnp.asarray(vecs), jnp.asarray(self._cents_np[assign]))
+            q_all = np.asarray(q_all)
+            s_all = np.asarray(s_all)
+        cap = self._bids_np.shape[1]
+        for i in range(n_new):
+            b = int(assign[i])
+            c = int(self._counts_np[b])
+            if c < cap:
+                self._bids_np[b, c] = ids[i]
+                if self.compressed:
+                    self._bvecs_np[b, c] = q_all[i]
+                    self._bscales_np[b, c] = s_all[i]
+                else:
+                    self._bvecs_np[b, c] = vecs[i]
+                self._counts_np[b] = c + 1
+            elif self._res_count < self.residual_cap:
+                self._res_vecs_np[self._res_count] = vecs[i]
+                self._res_ids_np[self._res_count] = ids[i]
+                self._res_count += 1
+            else:
+                # overflow: the rebuild already covers every remaining doc
+                self._rebucket()
+                break
+        self._dirty = True
+        if ingest_key is not None:
+            self._ingest_seen[ingest_key] = ids
+        return ids
+
+
 class ReplicaBackend(_BackendBase):
     """Warm-standby replica routing + cache-ingest reconciliation.
 
@@ -198,6 +430,20 @@ class ReplicaBackend(_BackendBase):
         for sb in self.standbys:
             sb.record_batch(q_embs, full_ids, vecs, state,
                             tenant_ids=tenant_ids, ingest_key=ingest_key)
+
+    def ingest_docs(self, vecs, ids=None, *, ingest_key=None):
+        """Live-corpus ingest passthrough (an ``IVFBackend`` inner): the
+        inner index reconciles, and this wrapper refreshes its host corpus
+        mirror so later ``on_ingest`` gathers see the new rows."""
+        inner_ingest = getattr(self.inner, "ingest_docs", None)
+        if inner_ingest is None:
+            raise AttributeError(
+                f"{type(self.inner).__name__} has no ingest_docs")
+        out = inner_ingest(vecs, ids, ingest_key=ingest_key)
+        inner_np = getattr(self.inner, "_corpus_np", None)
+        if inner_np is not None:
+            self._corpus_np = inner_np
+        return out
 
 
 class RetrievalService:

@@ -72,6 +72,25 @@ class LatencyModel:
         pool's bounded-lag delta replay (the same fold)."""
         return rows * self.scan_time(doc_cap + 2 * k)
 
+    def ann_scale(self, n_clusters: int, nprobe: int,
+                  capacity_factor: float = 2.0, bytes_per_dim: int = 4,
+                  residual_rows: int = 0) -> float:
+        """Multiplier on ``full_scan_time()`` when the cloud stage is the
+        IVF backend instead of a full-corpus scan: per query it streams the
+        ``n_clusters`` f32 centroids (the probe matmul), then
+        ``nprobe x capacity`` bucket rows at ``bytes_per_dim`` bytes each
+        (1 for the int8 compressed residency, 4 for f32), plus the
+        exact-scanned f32 residual buffer holding live-ingested spill.
+        Capacity follows the build rule at target scale:
+        ``target_corpus * capacity_factor / n_clusters`` padded rows per
+        bucket — the padding is real streamed bytes, so it is charged."""
+        c = max(1, int(n_clusters))
+        p = max(1, min(int(nprobe), c))
+        cap = self.target_corpus * capacity_factor / c
+        scanned = (c + p * cap * (bytes_per_dim / 4.0)
+                   + max(0, int(residual_rows)))
+        return scanned / self.target_corpus
+
     def shard_scale(self, n_shards: int) -> float:
         """Multiplier on ``full_scan_time()`` when the scan is row-sharded
         over ``n_shards`` mesh workers (retrieval/distributed.py): every

@@ -34,7 +34,13 @@ each charged ``backend.latency(batch)`` on the virtual clock — one slot
 for the in-process ``LocalFlatBackend`` (the historical serialized cloud),
 several for ``ShardedMeshBackend`` mesh workers or ``ReplicaBackend`` warm
 standbys, whose cache ingests the loop reconciles via
-``backend.on_ingest``.  Four completion channels result —
+``backend.on_ingest``.  CAVEAT for approximate backends (``IVFBackend``):
+the cloud stage's results are what the cache ingests, so any recall loss
+COMPOUNDS — a missed document is absent from later homology validations
+and from every accept served off that cache entry, not just from the one
+response.  Calibrate ``nprobe`` against end-to-end doc-hit
+(``benchmarks/ann_recall.py``), never against kernel recall@k alone.
+Four completion channels result —
 ``draft`` / ``reval`` / ``shared`` / ``full`` — of which the first three
 count as accepted (only ``full`` pays for its own full retrieval; only
 ``full`` and ``shared`` wait on the cloud).

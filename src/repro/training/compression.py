@@ -25,8 +25,17 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.utils import shard_map
 
 
-def quantize_int8(x: jax.Array):
-    scale = jnp.max(jnp.abs(x)) / 127.0
+def quantize_int8(x: jax.Array, axis=None):
+    """Symmetric int8 quantization; returns (q int8, scale f32).
+
+    ``axis=None`` (the gradient-compression path) uses ONE per-tensor scale.
+    ``axis=-1`` etc. (the ANN compressed-residency path) keeps a scale per
+    slice with ``keepdims=True`` so ``dequantize_int8`` broadcasts.  The
+    scale is floored: an all-zero vector (IVF bucket pad slots are exactly
+    that) would otherwise yield scale 0 and 0/0 -> NaN on the quantize
+    divide.
+    """
+    scale = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None) / 127.0
     scale = jnp.maximum(scale, 1e-12)
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     return q, scale

@@ -1,0 +1,475 @@
+"""ANN cloud backend (retrieval/service.py::IVFBackend): Pallas ivf_scan
+<-> retrieval/ivf.py oracle parity (duplicate global ids, corpus < k,
+fully padded buckets, tail capacities, int8-dequant), the one-dispatch-
+per-batch probe, streaming/compressed index builds, live-ingest
+reconciliation (bucket spill -> residual -> re-bucketing flush),
+``ReplicaBackend(IVFBackend)`` composition, fault-plan retry/hedge paths
+through an IVF dispatch, and the new serve-CLI knob validation.
+
+The CI `ann-backend` job runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` alongside the
+``benchmarks/ann_recall.py`` verdicts.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dispatch
+from repro.core.has import HasConfig
+from repro.data.synthetic import DATASETS, SyntheticWorld, WorldConfig
+from repro.kernels import ops, ref
+from repro.retrieval.flat import chunked_flat_search
+from repro.retrieval.ivf import (CompressedIVFIndex, IVFIndex, build_ivf,
+                                 build_ivf_streaming, ivf_probe_scan,
+                                 ivf_search)
+from repro.retrieval.service import (FullRetrievalBackend, IVFBackend,
+                                     LocalFlatBackend, ReplicaBackend,
+                                     RetrievalService)
+from repro.serving.latency import LatencyModel
+from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                     SchedulerConfig, poisson_arrivals)
+from repro.training.compression import dequantize_int8, quantize_int8
+
+
+def _unit(rng, n, d):
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def _clustered(rng, n, d, n_protos=64, spread=0.2):
+    """Topic-clustered corpus (the regime IVF indexes are built for)."""
+    protos = _unit(rng, n_protos, d)
+    x = protos[rng.integers(0, n_protos, n)] + spread * rng.normal(size=(n, d))
+    return (x / np.linalg.norm(x, axis=1, keepdims=True)).astype(np.float32)
+
+
+def _ids_match(i_kernel, i_ref, s_kernel, s_ref, atol=1e-5):
+    """Rank-order ids may swap within score ties; compare as score-sets."""
+    assert np.allclose(np.asarray(s_kernel), np.asarray(s_ref), atol=atol)
+    for rk, rr in zip(np.asarray(i_kernel), np.asarray(i_ref)):
+        assert set(rk.tolist()) == set(rr.tolist())
+
+
+# -- quantize_int8 regression (satellite) ----------------------------------
+
+def test_quantize_int8_all_zero_vector_regression():
+    """An all-zero vector (every IVF bucket pad slot) must quantize to a
+    floored scale, not scale 0 -> 0/0 -> NaN."""
+    z = jnp.zeros((3, 16)).at[1].set(jnp.linspace(-2.0, 2.0, 16))
+    q, s = quantize_int8(z, axis=-1)
+    d = dequantize_int8(q, s)
+    assert bool(jnp.all(jnp.isfinite(d)))
+    assert bool(jnp.all(d[0] == 0.0)) and bool(jnp.all(d[2] == 0.0))
+    assert bool(jnp.all(s > 0.0))
+    # the live row roundtrips within one quantization step
+    step = float(s[1, 0])
+    assert float(jnp.max(jnp.abs(d[1] - z[1]))) <= step
+    # whole-tensor zero input through the scalar path too
+    q0, s0 = quantize_int8(jnp.zeros((4, 4)))
+    assert np.isfinite(float(s0)) and float(s0) > 0.0
+    assert bool(jnp.all(dequantize_int8(q0, s0) == 0.0))
+
+
+def test_quantize_int8_scalar_path_unchanged():
+    """axis=None must stay the original per-tensor contract (the gradient
+    compression path depends on a 0-d scale)."""
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)),
+                    jnp.float32)
+    q, s = quantize_int8(x)
+    assert s.ndim == 0 and q.dtype == jnp.int8
+    assert float(jnp.max(jnp.abs(dequantize_int8(q, s) - x))) <= float(s)
+
+
+# -- Pallas ivf_scan <-> oracle parity suite (satellite) -------------------
+
+def test_ivf_scan_parity_duplicate_global_ids():
+    """The same global id in several probed buckets must not confuse the
+    running top-k merge: scores equal the oracle's, id-sets match."""
+    rng = np.random.default_rng(0)
+    d, cap, k = 32, 8, 6
+    vecs = rng.normal(size=(4, cap, d)).astype(np.float32)
+    ids = rng.integers(0, 40, size=(4, cap)).astype(np.int32)
+    ids[0, :4] = ids[1, :4] = np.arange(4)       # duplicates across buckets
+    vecs[1, :4] = vecs[0, :4]                    # same doc, same vector
+    q = jnp.asarray(_unit(rng, 3, d))
+    probe = jnp.asarray(np.array([[0, 1], [1, 0], [2, 3]], np.int32))
+    out = ops.ivf_scan(q, probe, jnp.asarray(vecs), jnp.asarray(ids), k,
+                       interpret=True)
+    want = ref.ivf_scan_ref(q, probe, jnp.asarray(vecs), jnp.asarray(ids), k)
+    _ids_match(out[1], want[1], out[0], want[0])
+
+
+def test_ivf_scan_parity_corpus_smaller_than_k():
+    """Probed pool < k: the tail must pad with -inf scores and -1 ids on
+    both the kernel and the oracle."""
+    rng = np.random.default_rng(1)
+    d, cap, k = 16, 3, 10
+    vecs = rng.normal(size=(2, cap, d)).astype(np.float32)
+    ids = np.array([[0, 1, -1], [2, -1, -1]], np.int32)
+    q = jnp.asarray(_unit(rng, 2, d))
+    probe = jnp.asarray(np.array([[0, 1], [0, 1]], np.int32))
+    s_k, i_k = ops.ivf_scan(q, probe, jnp.asarray(vecs), jnp.asarray(ids),
+                            k, interpret=True)
+    s_r, i_r = ref.ivf_scan_ref(q, probe, jnp.asarray(vecs),
+                                jnp.asarray(ids), k)
+    live = np.asarray(i_r) >= 0
+    assert np.array_equal(np.asarray(i_k) >= 0, live)
+    assert np.allclose(np.asarray(s_k)[live], np.asarray(s_r)[live],
+                       atol=1e-5)
+    assert (np.asarray(i_k)[~live] == -1).all()
+    assert np.isneginf(np.asarray(s_k)[~live]).all()
+    assert live.sum(axis=1).tolist() == [3, 3]   # exactly the 3 real docs
+
+
+def test_ivf_scan_parity_fully_padded_buckets():
+    """A probe hitting only pad (-1) slots contributes nothing."""
+    rng = np.random.default_rng(2)
+    d, cap, k = 16, 4, 5
+    vecs = rng.normal(size=(3, cap, d)).astype(np.float32)
+    ids = np.full((3, cap), -1, np.int32)
+    ids[0] = np.arange(4)                        # only bucket 0 is live
+    q = jnp.asarray(_unit(rng, 2, d))
+    probe = jnp.asarray(np.array([[1, 2], [0, 2]], np.int32))
+    s_k, i_k = ops.ivf_scan(q, probe, jnp.asarray(vecs), jnp.asarray(ids),
+                            k, interpret=True)
+    s_r, i_r = ref.ivf_scan_ref(q, probe, jnp.asarray(vecs),
+                                jnp.asarray(ids), k)
+    # row 0 probes only padded buckets -> all -1 / -inf
+    assert (np.asarray(i_k)[0] == -1).all()
+    assert np.isneginf(np.asarray(s_k)[0]).all()
+    _ids_match(i_k, i_r, s_k, s_r)
+
+
+def test_ivf_scan_parity_tail_bucket_capacities():
+    """Counts < capacity (the tail of every real build): pad slots masked
+    identically on kernel and oracle, across ragged tails."""
+    rng = np.random.default_rng(3)
+    n, d, k = 700, 32, 10
+    corpus = jnp.asarray(_clustered(rng, n, d))
+    idx = build_ivf(corpus, 16, seed=1)
+    counts = np.asarray(idx.bucket_counts)
+    assert (counts < idx.capacity).any()         # genuine ragged tails
+    q = jnp.asarray(_unit(rng, 5, d))
+    cs = q @ idx.centroids.T
+    probe = jax.lax.top_k(cs, 6)[1].astype(jnp.int32)
+    s_k, i_k = ops.ivf_scan(q, probe, idx.bucket_vecs, idx.bucket_ids, k,
+                            interpret=True)
+    s_r, i_r = ref.ivf_scan_ref(q, probe, idx.bucket_vecs, idx.bucket_ids, k)
+    _ids_match(i_k, i_r, s_k, s_r)
+    # and the jnp search oracle agrees end-to-end
+    s_o, i_o = ivf_search(idx, q, nprobe=6, k=k)
+    _ids_match(i_k, i_o, s_k, s_o)
+
+
+def test_ivf_scan_int8_dequant_parity():
+    """Compressed residency: the kernel's fused residual dequant
+    (bias + per-half (q . v8) * scale) must match the oracle bit-for-bit
+    in id-sets and to fp tolerance in scores."""
+    rng = np.random.default_rng(4)
+    n, d, k = 900, 32, 10
+    corpus = _clustered(rng, n, d)
+    idx = build_ivf_streaming(corpus, 16, seed=1, compressed=True)
+    assert isinstance(idx, CompressedIVFIndex)
+    assert idx.bucket_vecs.dtype == jnp.int8
+    assert idx.bucket_scales.shape == (*idx.bucket_ids.shape, 2)
+    q = jnp.asarray(_unit(rng, 4, d))
+    cs = q @ idx.centroids.T
+    bias, probe = jax.lax.top_k(cs, 5)
+    probe = probe.astype(jnp.int32)
+    s_k, i_k = ops.ivf_scan(q, probe, idx.bucket_vecs, idx.bucket_ids, k,
+                            interpret=True, bucket_scales=idx.bucket_scales,
+                            probe_bias=bias)
+    s_r, i_r = ref.ivf_scan_ref(q, probe, idx.bucket_vecs, idx.bucket_ids,
+                                k, bucket_scales=idx.bucket_scales,
+                                probe_bias=bias)
+    _ids_match(i_k, i_r, s_k, s_r)
+    # the fused path == probe-scan oracle on the compressed index
+    s_o, i_o = ivf_probe_scan(idx, q, probe, k)
+    _ids_match(i_k, i_o, s_k, s_o)
+    # and close to the f32 index's scores (quantization noise only)
+    f32 = build_ivf_streaming(corpus, 16, seed=1)
+    s_f, _ = ivf_probe_scan(f32, q, probe, k)
+    assert np.allclose(np.asarray(s_k), np.asarray(s_f), atol=0.02)
+
+
+def test_ivf_backend_single_dispatch_per_batch():
+    """O(1) dispatches: one [B,d] search = ONE host->device program launch
+    regardless of B, nprobe, or compression."""
+    rng = np.random.default_rng(5)
+    lat = LatencyModel()
+    corpus = jnp.asarray(_clustered(rng, 1200, 32))
+    for compressed in (False, True):
+        be = IVFBackend(corpus, 10, lat, n_clusters=16, nprobe=4,
+                        compressed=compressed, backend="xla")
+        for b in (1, 8, 32):
+            q = jnp.asarray(_unit(rng, b, 32))
+            be.search(q)                          # warm the jit cache
+            with dispatch.capture() as cpt:
+                be.search(q)[0].block_until_ready()
+            assert cpt.total() == 1, (compressed, b, cpt.counts)
+
+
+# -- streaming / compressed index builds -----------------------------------
+
+def test_streaming_build_matches_build_ivf():
+    """Chunked assignment must reproduce build_ivf's buckets exactly
+    (same centroids, ids, vectors, counts) for any chunk size."""
+    rng = np.random.default_rng(6)
+    corpus = _clustered(rng, 1500, 32)
+    a = build_ivf(jnp.asarray(corpus), 32, seed=2)
+    for chunk in (64, 999, 10**6):
+        b = build_ivf_streaming(corpus, 32, seed=2, chunk=chunk)
+        assert isinstance(b, IVFIndex)
+        assert np.array_equal(np.asarray(a.centroids), np.asarray(b.centroids))
+        assert np.array_equal(np.asarray(a.bucket_ids), np.asarray(b.bucket_ids))
+        assert np.array_equal(np.asarray(a.bucket_vecs), np.asarray(b.bucket_vecs))
+        assert np.array_equal(np.asarray(a.bucket_counts),
+                              np.asarray(b.bucket_counts))
+
+
+def test_compressed_build_memory_and_recall():
+    """int8 residency: bucket store >= 3x smaller than f32 at equal shape,
+    and search results nearly identical at the same nprobe."""
+    rng = np.random.default_rng(7)
+    corpus = _clustered(rng, 4000, 64)
+    f32 = build_ivf_streaming(corpus, 64, seed=3)
+    i8 = build_ivf_streaming(corpus, 64, seed=3, compressed=True)
+    f32_bytes = f32.bucket_vecs.nbytes
+    i8_bytes = i8.bucket_vecs.nbytes + i8.bucket_scales.nbytes
+    assert f32_bytes / i8_bytes >= 3.0
+    q = jnp.asarray(_unit(rng, 32, 64))
+    k = 10
+    _, if32 = ivf_search(f32, q, nprobe=8, k=k)
+    _, ii8 = ivf_search(i8, q, nprobe=8, k=k)
+    overlap = np.mean([len(set(a.tolist()) & set(b.tolist())) / k
+                       for a, b in zip(np.asarray(if32), np.asarray(ii8))])
+    assert overlap >= 0.98
+
+
+# -- IVFBackend: protocol, recall, latency model, ingest -------------------
+
+def test_ivf_backend_protocol_recall_and_latency():
+    rng = np.random.default_rng(8)
+    n, d, k = 4000, 64, 10
+    corpus = jnp.asarray(_clustered(rng, n, d))
+    lat = LatencyModel(target_corpus=n, actual_corpus=n)
+    flat = LocalFlatBackend(corpus, k, lat)
+    for compressed in (False, True):
+        be = IVFBackend(corpus, k, lat, n_clusters=64, nprobe=16,
+                        compressed=compressed, backend="xla")
+        assert isinstance(be, FullRetrievalBackend)
+        # queries = lightly perturbed corpus docs (the ANN regime)
+        qn = np.asarray(corpus)[rng.integers(0, n, 64)] \
+            + 0.1 * rng.normal(size=(64, d)).astype(np.float32)
+        q = jnp.asarray(qn / np.linalg.norm(qn, axis=1, keepdims=True),
+                        dtype=jnp.float32)
+        fs, fi = flat.search(q)
+        s, i = be.search(q)
+        rec = np.mean([len(set(a.tolist()) & set(b.tolist())) / k
+                       for a, b in zip(np.asarray(fi), np.asarray(i))])
+        assert rec >= 0.9, (compressed, rec)
+        # the latency model charges centroids + probed buckets, not the
+        # whole corpus: strictly faster than flat, int8 faster than f32
+        assert be.latency(16) < flat.latency(16)
+    f32_lat = IVFBackend(corpus, k, lat, n_clusters=64, nprobe=16,
+                         backend="xla").latency(1)
+    i8_lat = IVFBackend(corpus, k, lat, n_clusters=64, nprobe=16,
+                        compressed=True, backend="xla").latency(1)
+    assert i8_lat < f32_lat
+    # ann_scale sanity: monotone in nprobe, degenerate == full scan cost+
+    scales = [lat.ann_scale(64, p) for p in (1, 2, 4, 8)]
+    assert all(a < b for a, b in zip(scales, scales[1:]))
+    assert lat.ann_scale(64, 64, capacity_factor=1.0) > 1.0  # probe-all
+
+
+def test_ivf_backend_pallas_matches_xla_oracle():
+    rng = np.random.default_rng(9)
+    corpus = jnp.asarray(_clustered(rng, 2000, 32))
+    lat = LatencyModel()
+    kw = dict(n_clusters=32, nprobe=8, seed=1)
+    for compressed in (False, True):
+        bx = IVFBackend(corpus, 10, lat, backend="xla", compressed=compressed,
+                        **kw)
+        bp = IVFBackend(corpus, 10, lat, backend="pallas",
+                        compressed=compressed, **kw)
+        q = jnp.asarray(_unit(rng, 6, 32))
+        sx, ix = bx.search(q)
+        sp, ip = bp.search(q)
+        _ids_match(ip, ix, sp, sx)
+
+
+def test_ivf_backend_ingest_reconciliation():
+    """Live ingest: new docs searchable immediately (bucket or residual),
+    idempotent on ingest_key, residual overflow flushes via re-bucketing,
+    and nothing is lost across the flush."""
+    rng = np.random.default_rng(10)
+    d, k = 32, 10
+    corpus = jnp.asarray(_clustered(rng, 1600, d))
+    lat = LatencyModel()
+    be = IVFBackend(corpus, k, lat, n_clusters=16, nprobe=4, backend="xla",
+                    residual_cap=8, seed=2)
+    v = _unit(rng, 1, d)
+    ids = be.ingest_docs(v, ingest_key="batch-1")
+    assert np.array_equal(be.ingest_docs(v, ingest_key="batch-1"), ids)
+    assert be._corpus_np.shape[0] == 1601      # idempotent: grown ONCE
+    s, i = be.search(jnp.asarray(v))
+    assert int(np.asarray(i)[0, 0]) == int(ids[0])
+    # aim a flood at one centroid: fills its bucket, spills to the
+    # residual, then overflows -> re-bucketing flush
+    c0 = np.asarray(be.index.centroids)[0]
+    flood = c0[None] + 0.01 * rng.normal(size=(600, d)).astype(np.float32)
+    flood = (flood / np.linalg.norm(flood, axis=1, keepdims=True)).astype(
+        np.float32)
+    flood_ids = be.ingest_docs(flood)
+    assert be.rebuilds >= 1 and be.residual_count == 0
+    # post-flush: ingested docs still retrievable by their own embedding
+    s, i = be.search(jnp.asarray(flood[:16]))
+    hit = np.mean([fid in set(row.tolist())
+                   for fid, row in zip(flood_ids[:16], np.asarray(i))])
+    assert hit >= 0.9
+    # the residual path itself serves hits before any flush
+    be2 = IVFBackend(corpus, k, lat, n_clusters=16, nprobe=4, backend="xla",
+                     residual_cap=64, seed=2)
+    cap = be2.index.capacity
+    b0 = int(np.argmax(np.asarray(be2.index.bucket_counts)))
+    cvec = np.asarray(be2.index.centroids)[b0]
+    need = cap - int(np.asarray(be2.index.bucket_counts)[b0]) + 5
+    spill = cvec[None] + 0.01 * rng.normal(size=(need, d)).astype(np.float32)
+    spill = (spill / np.linalg.norm(spill, axis=1, keepdims=True)).astype(
+        np.float32)
+    sids = be2.ingest_docs(spill)
+    assert be2.residual_count > 0 and be2.rebuilds == 0
+    s, i = be2.search(jnp.asarray(spill[-3:]))
+    assert all(sid in set(row.tolist())
+               for sid, row in zip(sids[-3:], np.asarray(i)))
+
+
+# -- scheduler / composition / fault paths ---------------------------------
+
+@pytest.fixture(scope="module")
+def world_setup():
+    world = SyntheticWorld(WorldConfig(n_entities=600, seed=0))
+    ds = DATASETS["granola"]
+    qs = world.sample_queries(300, pattern=ds["pattern"], zipf_a=ds["zipf_a"],
+                              p_uncovered=ds["p_uncovered"], seed=1)
+    cfg = HasConfig(k=10, tau=0.2, h_max=600, nprobe=4, n_buckets=256, d=64)
+    return world, qs, cfg
+
+
+def _sched(world, cfg, backend=None, **sched_kw):
+    lat = LatencyModel()
+    if callable(backend):
+        backend = backend(jnp.asarray(world.doc_emb), lat)
+    svc = RetrievalService(world, lat, k=10, chunk=2048, backend=backend)
+    kw = dict(max_spec_batch=16, full_batch=8, full_max_wait_s=0.1)
+    kw.update(sched_kw)
+    return ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(**kw))
+
+
+def test_scheduler_ann_backend_e2e(world_setup):
+    """The scheduler's cloud stage over an IVF pool: every request
+    completes, doc-hit stays within a few points of flat (golden docs are
+    entity-clustered, exactly what IVF probes catch), and the modeled ANN
+    latency shows up as throughput."""
+    world, qs, cfg = world_setup
+    r0 = _sched(world, cfg).serve(qs, None, seed=0)
+    ann = _sched(world, cfg, backend=lambda c, lat: IVFBackend(
+        c, 10, lat, n_clusters=128, nprobe=32, backend="xla", n_workers=2))
+    assert ann.n_full_workers == 2
+    r1 = ann.serve(qs, None, seed=0)
+    assert np.all(r1.t_done >= 0) and np.all(r1.channels != "pending")
+    s0, s1 = r0.summary(), r1.summary()
+    assert abs(s1["doc_hit_rate"] - s0["doc_hit_rate"]) < 0.03
+    assert s1["throughput_qps"] > s0["throughput_qps"]
+
+
+def test_replica_backend_over_ivf_composition(world_setup):
+    """ReplicaBackend(IVFBackend): approximate search + standby cache
+    reconciliation compose — the standby rebuilds EXACTLY the cache the
+    scheduler ended with, fed by ANN results."""
+    import tempfile
+
+    from repro.checkpoint import CheckpointManager
+    from repro.serving.replication import WarmStandby
+    world, qs, cfg = world_setup
+    standby = WarmStandby(cfg, CheckpointManager(tempfile.mkdtemp()),
+                          snapshot_every=10**9, max_lag=10**6)
+    sch = _sched(world, cfg, backend=lambda c, lat: ReplicaBackend(
+        IVFBackend(c, 10, lat, n_clusters=128, nprobe=32, backend="xla"),
+        [standby], c))
+    sch.serve(qs, None, seed=0)
+    assert len(standby.log) > 0
+    recovered = standby.failover()
+    for a, b in zip(jax.tree.leaves(recovered), jax.tree.leaves(sch.state)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fault_plan_retry_hedge_through_ivf_dispatch(world_setup):
+    """An IVF dispatch is retryable/hedgeable like a flat one: transient
+    search failures retry onto another pool slot, stragglers hedge, every
+    request completes, and the chaos run replays bit-exactly."""
+    from repro.serving.faults import FaultEvent, FaultPlan
+    world, qs, cfg = world_setup
+    plan = FaultPlan(events=(
+        FaultEvent(t=0.3, kind="straggler", target=1, duration_s=3.0,
+                   factor=8.0),
+        FaultEvent(t=0.5, kind="search_fail", target=0, duration_s=1.5),
+        FaultEvent(t=1.2, kind="worker_crash", target=2, down_s=1.0),
+    ))
+    mk = lambda: _sched(world, cfg, backend=lambda c, lat: IVFBackend(
+        c, 10, lat, n_clusters=128, nprobe=32, backend="xla", n_workers=4),
+        fault_plan=plan)
+    arr = poisson_arrivals(len(qs), qps=25.0, seed=5)
+    r = mk().serve(qs, arrivals=arr, seed=3)
+    s = r.summary()
+    assert np.all(r.t_done >= 0) and np.all(r.channels != "pending")
+    assert s["failed"] == 0
+    assert s["retries"] >= 1 and s["hedges"] >= 1
+    assert s["worker_deaths"] == 1
+    res = r.trace.conservation_residual()
+    assert np.abs(res).max() < 1e-9
+    r2 = mk().serve(qs, arrivals=arr, seed=3)
+    assert np.array_equal(r.t_done, r2.t_done)
+    assert list(r.channels) == list(r2.channels)
+
+
+def test_service_reuses_ann_backend_corpus(world_setup):
+    world, qs, cfg = world_setup
+    lat = LatencyModel()
+    be = IVFBackend(jnp.asarray(world.doc_emb), 10, lat, n_clusters=128,
+                    nprobe=16, backend="xla")
+    svc = RetrievalService(world, lat, k=10, backend=be)
+    assert svc.corpus is be.corpus
+    ids, vecs, t = svc.full_search(np.asarray(world.doc_emb[7]))
+    assert 7 in set(ids.tolist())
+    assert t == be.latency(1)
+
+
+# -- launch/serve.py knob validation (satellite) ---------------------------
+
+@pytest.mark.parametrize("argv", [
+    ["--nprobe", "0"],
+    ["--nprobe", "-4", "--retrieval-backend", "ann"],
+    ["--ann-clusters", "0", "--retrieval-backend", "ann"],
+    ["--nprobe", "64", "--ann-clusters", "32", "--retrieval-backend", "ann"],
+    ["--compressed-corpus"],                               # flat backend
+    ["--compressed-corpus", "--retrieval-backend", "sharded"],
+    ["--compressed-corpus", "--retrieval-backend", "replica"],
+])
+def test_serve_cli_rejects_invalid_ann_args(argv):
+    from repro.launch.serve import main
+    with pytest.raises(SystemExit) as e:
+        main(argv)
+    assert e.value.code == 2                  # argparse usage error
+
+
+def test_serve_cli_accepts_ann_combo():
+    """The documented ANN invocation must run end-to-end on a tiny world
+    (compressed residency + scheduler engine + worker pool)."""
+    from repro.launch.serve import main
+    main(["--queries", "24", "--entities", "120", "--h-max", "60",
+          "--engine", "sched", "--retrieval-backend", "ann",
+          "--ann-clusters", "8", "--nprobe", "4", "--compressed-corpus",
+          "--workers", "2"])
