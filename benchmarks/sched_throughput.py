@@ -55,6 +55,13 @@ Three opt-in sweeps ride along (see --help):
     plus the tracing zero-cost verdict (compat accounting with tracing
     off reproduces the pre-PR golden traces bit-exactly).  Writes
     ``BENCH_overload.json``.
+  * ``--sweep-fusion`` — hybrid lexical+dense retrieval with fused RRF
+    reranking (retrieval/fusion.py): doc-hit lift over the dense-only
+    scan on a corpus whose dense embeddings are corrupted for a third of
+    the entities (lexical postings intact) at a matched latency budget,
+    the single-dispatch probe at B=32 on both scan backends, and the
+    near-duplicate diversification ablation.  Writes
+    ``BENCH_fusion.json``.
 
 Run standalone:  PYTHONPATH=src python -m benchmarks.sched_throughput
 """
@@ -68,7 +75,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (N_QUERIES, get_queries, get_service,
+from benchmarks.common import (FAST, K, N_QUERIES, get_queries, get_service,
                                has_config, row)
 from repro.core import dispatch
 from repro.core.has import default_backend
@@ -680,6 +687,156 @@ def sweep_overload(out_path: str = "BENCH_overload.json"):
     return rows
 
 
+def sweep_fusion(out_path: str = "BENCH_fusion.json"):
+    """Hybrid lexical+dense retrieval with single-dispatch fused reranking.
+
+    Verdicts (written to ``BENCH_fusion.json``):
+
+    (a) fused doc-hit — on a corpus where the dense embeddings of a third
+        of the entities are replaced by unit noise while their lexical
+        postings stay intact (the 'embedding blind spot' the second channel
+        exists for), the hybrid backend's doc-hit must be >= the dense-only
+        flat scan's at a matched latency budget (hybrid modeled per-query
+        latency <= 1.25x dense);
+    (b) single dispatch — exactly ONE host dispatch per hybrid search
+        batch at B=32 on both scan backends (``repro.core.dispatch``
+        probe over the warm program);
+    (c) diversification — on a corpus doubled with near-duplicate rows,
+        ``diversify_sim=0.98`` lowers the served top-k's mean max pairwise
+        cosine similarity vs the ablated (``None``) arm while doc-hit
+        gives up at most 2 points.
+    """
+    from repro.data.synthetic import DATASETS, SyntheticWorld, WorldConfig
+    from repro.retrieval.service import HybridBackend, LocalFlatBackend
+    rows = []
+    n_ent = 400 if FAST else 1200
+    nq = 256 if FAST else 512
+    world = SyntheticWorld(WorldConfig(n_entities=n_ent, seed=0))
+    lat = LatencyModel()
+    ds = DATASETS["granola"]
+    qs = world.sample_queries(nq, pattern=ds["pattern"],
+                              zipf_a=ds["zipf_a"],
+                              p_uncovered=ds["p_uncovered"], seed=7)
+    embs = jnp.asarray(np.stack([q["emb"] for q in qs]))
+    tw_w = max(len(q["terms"]) for q in qs)
+    terms = np.full((nq, tw_w), -1, np.int32)
+    tws = np.zeros((nq, tw_w), np.float32)
+    for j, q in enumerate(qs):
+        qt = np.asarray(q["terms"], np.int32)
+        qw = np.asarray(q["term_weights"], np.float32)
+        terms[j, :qt.shape[0]], tws[j, :qw.shape[0]] = qt, qw
+    terms_j, tws_j = jnp.asarray(terms), jnp.asarray(tws)
+
+    # (a) corrupt the dense rows of 1/3 of the entities; postings intact
+    rng = np.random.default_rng(123)
+    bad_entities = rng.choice(n_ent, size=n_ent // 3, replace=False)
+    bad = np.isin(world.doc_entity, bad_entities)
+    noise = rng.normal(size=(int(bad.sum()), world.cfg.d)).astype(np.float32)
+    noise /= np.maximum(np.linalg.norm(noise, axis=1, keepdims=True), 1e-8)
+    corrupted = world.doc_emb.copy()
+    corrupted[bad] = noise
+    corrupted = jnp.asarray(corrupted)
+
+    def dochit(ids, n_docs=None):
+        ids = np.asarray(ids)
+        if n_docs is not None:        # doubled corpus: map dup row -> doc
+            ids = np.where(ids >= 0, ids % n_docs, -1)
+        return float(np.mean([
+            world.golden_mask(q["entity"], q["attr"], ids[j]).any()
+            for j, q in enumerate(qs)]))
+
+    dense_be = LocalFlatBackend(corrupted, K, lat)
+    hyb = HybridBackend(corrupted, K, lat, world.doc_terms,
+                        world.doc_term_weights)
+    _, ids_d = dense_be.search(embs)
+    _, ids_h = hyb.search(embs, q_terms=terms_j, q_term_weights=tws_j)
+    hit_d, hit_h = dochit(ids_d), dochit(ids_h)
+    lat_d, lat_h = dense_be.latency(1), hyb.latency(1)
+    ratio = lat_h / lat_d
+    rows.append(row("fusion/dense_only", lat_d, f"doc_hit={hit_d:.4f}"))
+    rows.append(row("fusion/hybrid", lat_h, f"doc_hit={hit_h:.4f}"))
+    hit_ok = hit_h >= hit_d and ratio <= 1.25
+    rows.append(row(
+        "fusion/verdict_fused_dochit", 0.0,
+        f"{'PASS' if hit_ok else 'FAIL'}"
+        f"(hybrid={hit_h:.4f};dense={hit_d:.4f};"
+        f"lat_ratio={ratio:.3f};budget=1.25x)"))
+
+    # (b) one host dispatch per warm hybrid batch, both scan backends
+    probe = {}
+    e32, t32, w32 = embs[:32], terms_j[:32], tws_j[:32]
+    for be in ("pallas", "xla"):
+        b = HybridBackend(corrupted, K, lat, world.doc_terms,
+                          world.doc_term_weights, backend=be)
+        b.search(e32, q_terms=t32,
+                 q_term_weights=w32)[1].block_until_ready()      # warm jit
+        with dispatch.capture() as cpt:
+            b.search(e32, q_terms=t32,
+                     q_term_weights=w32)[1].block_until_ready()
+        probe[be] = cpt.total()
+        rows.append(row(f"fusion/dispatch_{be}", 0.0,
+                        f"dispatches_per_batch={probe[be]}"))
+    disp_ok = all(v == 1 for v in probe.values())
+    rows.append(row(
+        "fusion/verdict_single_dispatch", 0.0,
+        f"{'PASS' if disp_ok else 'FAIL'}"
+        f"(pallas={probe['pallas']};xla={probe['xla']};B=32)"))
+
+    # (c) diversification ablation on a near-duplicate-doubled corpus
+    n_docs = world.doc_emb.shape[0]
+    dup = world.doc_emb + 1e-3 * rng.normal(
+        size=world.doc_emb.shape).astype(np.float32)
+    dup /= np.maximum(np.linalg.norm(dup, axis=1, keepdims=True), 1e-8)
+    corpus2 = jnp.asarray(np.concatenate([world.doc_emb,
+                                          dup.astype(np.float32)]))
+    terms2 = np.concatenate([world.doc_terms, world.doc_terms])
+    tws2 = np.concatenate([world.doc_term_weights, world.doc_term_weights])
+    arms = {}
+    for name, dsim in (("on", 0.98), ("off", None)):
+        b = HybridBackend(corpus2, K, lat, terms2, tws2, diversify_sim=dsim)
+        _, ids = b.search(embs, q_terms=terms_j, q_term_weights=tws_j)
+        ids = np.asarray(ids)
+        vecs = np.asarray(corpus2)[np.maximum(ids, 0)]
+        valid = ids >= 0
+        sims = []
+        for j in range(nq):
+            v = vecs[j][valid[j]]
+            if v.shape[0] >= 2:
+                g = v @ v.T
+                np.fill_diagonal(g, -np.inf)
+                sims.append(float(g.max(axis=1).mean()))
+        arms[name] = {"maxsim": float(np.mean(sims)),
+                      "doc_hit": dochit(ids, n_docs=n_docs)}
+        rows.append(row(f"fusion/diversify_{name}", 0.0,
+                        f"maxsim={arms[name]['maxsim']:.4f};"
+                        f"doc_hit={arms[name]['doc_hit']:.4f}"))
+    div_ok = (arms["on"]["maxsim"] < arms["off"]["maxsim"]
+              and arms["on"]["doc_hit"] >= arms["off"]["doc_hit"] - 0.02)
+    rows.append(row(
+        "fusion/verdict_diversify", 0.0,
+        f"{'PASS' if div_ok else 'FAIL'}"
+        f"(maxsim_on={arms['on']['maxsim']:.4f};"
+        f"maxsim_off={arms['off']['maxsim']:.4f};"
+        f"hit_on={arms['on']['doc_hit']:.4f};"
+        f"hit_off={arms['off']['doc_hit']:.4f})"))
+
+    with open(out_path, "w") as f:
+        json.dump({
+            "n_entities": n_ent,
+            "n_queries": nq,
+            "corrupted_entity_frac": round(len(bad_entities) / n_ent, 4),
+            "doc_hit": {"dense_only": hit_d, "hybrid": hit_h},
+            "latency_s": {"dense_only": lat_d, "hybrid": lat_h,
+                          "ratio": ratio},
+            "dispatches_per_batch": probe,
+            "diversify": arms,
+            "verdicts": {"fused_dochit": bool(hit_ok),
+                         "single_dispatch": bool(disp_ok),
+                         "diversify": bool(div_ok)},
+        }, f, indent=2)
+    return rows
+
+
 if __name__ == "__main__":
     from benchmarks.common import fmt_rows
     ap = argparse.ArgumentParser(
@@ -711,6 +868,13 @@ if __name__ == "__main__":
                          "shed/degrade vs uncontrolled p99 + goodput, and "
                          "the tracing zero-cost golden-trace verdict; "
                          "writes BENCH_overload.json")
+    ap.add_argument("--sweep-fusion", action="store_true",
+                    help="hybrid lexical+dense fused reranking: doc-hit "
+                         "lift on a corrupted-embedding corpus at a "
+                         "matched latency budget, the single-dispatch "
+                         "probe on both scan backends, and the "
+                         "diversification ablation; writes "
+                         "BENCH_fusion.json")
     ap.add_argument("--skip-base", action="store_true",
                     help="run only the requested sweeps, not the base "
                          "throughput/DAR/sharing verdicts")
@@ -728,4 +892,6 @@ if __name__ == "__main__":
         rows += sweep_edge_replicas()
     if args.sweep_overload:
         rows += sweep_overload()
+    if args.sweep_fusion:
+        rows += sweep_fusion()
     print(fmt_rows(rows))

@@ -53,6 +53,25 @@ tenant-compare mask in the XLA oracle).  ``intra_batch_share`` masks its
 pairwise homology matrix by tenant so leaders/followers never cross
 tenants.  T == 1 reduces bit-exactly to the unpartitioned path.
 
+Fused-list speculation (``HasConfig.fusion == "rrf"``): when the cloud
+stage is the hybrid lexical+dense backend, the cached result lists are
+*fused* lists whose per-channel raw scores live on incompatible scales — a
+cosine similarity and a hashed-term match mass cannot be compared, so the
+score-domain dedup-merge would be meaningless.  In rrf mode both
+speculation channels merge in RANK domain (``_rrf_merge``: mass
+``1/(rrf_k + rank)``, cross-channel duplicates combined onto the first
+occurrence) and homology validation weighs each draft slot by its
+normalized RRF mass (``homology_scores_weighted`` /
+the ``draft_weights`` operand of the ``homology_score`` kernel) instead of
+the uniform 1/k overlap ratio.  Acceptance decisions therefore depend only
+on the channel *rankings*: any positive monotone transform of either
+channel's raw scores leaves drafts, homology scores, and accept bits
+bit-identical (pinned by tests/test_hybrid_fusion.py).  Fused lists flow
+through ``cache_update*`` unchanged in shape — the cache ingests whatever
+the cloud stage returns, so drafts reproduce fused results for homologous
+queries.  The default ``fusion="score"`` keeps the pre-hybrid program
+byte-identical.
+
 The host-side serving loop (serving/engine.py) sequences these per query
 exactly as Algorithm 1; serving/batched.py and serving/scheduler.py drive
 the batch-native entry points.
@@ -69,7 +88,9 @@ import numpy as np
 
 from repro.core import dispatch
 from repro.core.homology import (homology_scores, homology_scores_batched,
-                                 reidentify)
+                                 homology_scores_weighted,
+                                 homology_scores_weighted_batched,
+                                 reidentify, rrf_draft_weights)
 from repro.retrieval.ivf import IVFIndex, ivf_search
 
 
@@ -84,6 +105,8 @@ class HasConfig:
     use_fuzzy_validation: bool = True    # Table VI 'V'
     use_fuzzy_enhancement: bool = True   # Table VI 'E'
     d: int = 64                    # embedding dim
+    fusion: str = "score"          # channel merge: "score" | "rrf"
+    rrf_k: float = 60.0            # RRF rank constant (fusion == "rrf")
 
     @property
     def doc_cap(self) -> int:
@@ -180,6 +203,45 @@ def _dedup_merge(s_a, i_a, s_b, i_b, k):
     return ts, jnp.where(jnp.isfinite(ts), i[t], -1)
 
 
+def _rrf_merge(i_a, i_b, k, rrf_k):
+    """Rank-domain RRF merge of two candidate lists (``fusion == "rrf"``).
+
+    Every slot contributes mass ``1/(rrf_k + rank)`` within its channel;
+    ids appearing in both channels sum their mass onto the FIRST occurrence
+    (the duplicate slot carries 0 and can never win), and the merged top-k
+    is ordered by total mass.  The output "scores" are RRF mass — a pure
+    function of the channel *rankings*, so any positive monotone transform
+    of either channel's raw scores leaves the fused list unchanged (the
+    property that makes fused drafts comparable across channels with
+    incompatible score scales).  Empty slots return (-inf, -1) like
+    :func:`_dedup_merge`.
+    """
+    ka, kb = i_a.shape[0], i_b.shape[0]
+    ids = jnp.concatenate([i_a, i_b])
+    rank = jnp.concatenate(
+        [jnp.arange(ka), jnp.arange(kb)]).astype(jnp.float32)
+    pos = jnp.arange(ka + kb)
+    valid = ids >= 0
+    raw = jnp.where(valid, 1.0 / (rrf_k + rank), 0.0)
+    same = (ids[:, None] == ids[None, :]) & valid[:, None] & valid[None, :]
+    first = ~jnp.any(same & (pos[None, :] < pos[:, None]), axis=1)
+    mass = jnp.sum(jnp.where(same, raw[None, :], 0.0), axis=1)
+    mass = jnp.where(first & valid, mass, 0.0)
+    ts, t = jax.lax.top_k(mass, k)
+    return jnp.where(ts > 0, ts, -jnp.inf), jnp.where(ts > 0, ids[t], -1)
+
+
+def _channel_merge(cfg: HasConfig):
+    """The configured two-channel merge, vmapped over the batch axis."""
+    if cfg.fusion == "rrf":
+        return jax.vmap(
+            lambda sa, ia, sb, ib: _rrf_merge(ia, ib, cfg.k, cfg.rrf_k))
+    if cfg.fusion == "score":
+        return jax.vmap(
+            lambda sa, ia, sb, ib: _dedup_merge(sa, ia, sb, ib, cfg.k))
+    raise ValueError(f"unknown fusion mode {cfg.fusion!r}")
+
+
 def _speculate_impl(cfg: HasConfig, state: HasState, index: IVFIndex,
                     q_emb: jax.Array):
     q = q_emb[None, :]                                       # [1, d]
@@ -195,14 +257,29 @@ def _speculate_impl(cfg: HasConfig, state: HasState, index: IVFIndex,
     s_f, i_f = s_f[0], i_f[0]
 
     # draft used for validation (V flag) and for output (E flag)
-    s_val, i_val = _dedup_merge(s_c, i_c, s_f, i_f, cfg.k) \
+    if cfg.fusion == "rrf":
+        def fuse(sa, ia, sb, ib):
+            return _rrf_merge(ia, ib, cfg.k, cfg.rrf_k)
+    else:
+        def fuse(sa, ia, sb, ib):
+            return _dedup_merge(sa, ia, sb, ib, cfg.k)
+    s_val, i_val = fuse(s_c, i_c, s_f, i_f) \
         if cfg.use_fuzzy_validation else (s_c, i_c)
-    s_out, i_out = _dedup_merge(s_c, i_c, s_f, i_f, cfg.k) \
+    s_out, i_out = fuse(s_c, i_c, s_f, i_f) \
         if cfg.use_fuzzy_enhancement else (s_c, i_c)
 
-    accept, best, slot = reidentify(
-        i_val, state.query_doc_ids, state.query_valid,
-        jnp.float32(cfg.tau))
+    if cfg.fusion == "rrf":
+        # fused-list validation: rank-weighted homology mass, scale-free
+        s = homology_scores_weighted(
+            i_val, state.query_doc_ids, state.query_valid,
+            rrf_draft_weights(i_val, cfg.rrf_k))
+        slot = jnp.argmax(s).astype(jnp.int32)
+        best = s[slot]
+        accept = best > jnp.float32(cfg.tau)
+    else:
+        accept, best, slot = reidentify(
+            i_val, state.query_doc_ids, state.query_valid,
+            jnp.float32(cfg.tau))
 
     return {"draft_ids": i_out, "draft_scores": s_out,
             "val_ids": i_val, "accept": accept,
@@ -271,16 +348,21 @@ def _speculate_batch_impl(cfg: HasConfig, state: HasState, index: IVFIndex,
     else:
         raise ValueError(f"unknown backend {backend!r}")
 
-    merge = jax.vmap(
-        lambda sa, ia, sb, ib: _dedup_merge(sa, ia, sb, ib, cfg.k))
+    merge = _channel_merge(cfg)
     s_val, i_val = merge(s_c, i_c, s_f, i_f) \
         if cfg.use_fuzzy_validation else (s_c, i_c)
     s_out, i_out = merge(s_c, i_c, s_f, i_f) \
         if cfg.use_fuzzy_enhancement else (s_c, i_c)
 
+    w_val = rrf_draft_weights(i_val, cfg.rrf_k) \
+        if cfg.fusion == "rrf" else None
     if backend == "pallas":
         scores = homology_score(i_val, state.query_doc_ids,
-                                state.query_valid, interpret=interpret)
+                                state.query_valid, draft_weights=w_val,
+                                interpret=interpret)
+    elif w_val is not None:
+        scores = homology_scores_weighted_batched(
+            i_val, state.query_doc_ids, state.query_valid, w_val)
     else:
         scores = homology_scores_batched(i_val, state.query_doc_ids,
                                          state.query_valid)
@@ -345,8 +427,7 @@ def _speculate_batch_tenant_impl(cfg: HasConfig, state: HasState,
     else:
         raise ValueError(f"unknown backend {backend!r}")
 
-    merge = jax.vmap(
-        lambda sa, ia, sb, ib: _dedup_merge(sa, ia, sb, ib, cfg.k))
+    merge = _channel_merge(cfg)
     s_val, i_val = merge(s_c, i_c, s_f, i_f) \
         if cfg.use_fuzzy_validation else (s_c, i_c)
     s_out, i_out = merge(s_c, i_c, s_f, i_f) \
@@ -355,14 +436,22 @@ def _speculate_batch_tenant_impl(cfg: HasConfig, state: HasState,
     qdi = state.query_doc_ids.reshape(t * h, cfg.k)
     qvalid = state.query_valid.reshape(t * h)
     row_tenant = jnp.repeat(jnp.arange(t, dtype=jnp.int32), h)
+    w_val = rrf_draft_weights(i_val, cfg.rrf_k) \
+        if cfg.fusion == "rrf" else None
     if backend == "pallas":
         scores = homology_score(i_val, qdi, qvalid, row_group=row_tenant,
-                                q_group=tenant_ids, interpret=interpret)
+                                q_group=tenant_ids, draft_weights=w_val,
+                                interpret=interpret)
     else:
         valid_b = qvalid[None, :] \
             & (row_tenant[None, :] == tenant_ids[:, None])   # [B, T*H]
-        scores = jax.vmap(homology_scores, in_axes=(0, None, 0))(
-            i_val, qdi, valid_b)
+        if w_val is not None:
+            scores = jax.vmap(
+                homology_scores_weighted, in_axes=(0, None, 0, 0))(
+                i_val, qdi, valid_b, w_val)
+        else:
+            scores = jax.vmap(homology_scores, in_axes=(0, None, 0))(
+                i_val, qdi, valid_b)
     # matched_slot is flat over [T*H]: tenant t's slot s is t*h_max + s
     slot = jnp.argmax(scores, axis=1).astype(jnp.int32)      # [B]
     best = jnp.take_along_axis(scores, slot[:, None], axis=1)[:, 0]

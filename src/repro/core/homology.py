@@ -41,6 +41,49 @@ def homology_scores_batched(draft_ids: jax.Array, cache_doc_ids: jax.Array,
         draft_ids)
 
 
+def rrf_draft_weights(ids: jax.Array, rrf_k: float) -> jax.Array:
+    """Per-slot normalized RRF mass of a fused draft: ids [..., k] ->
+    weights [..., k] f32 summing to 1 over the valid slots (0 if none).
+
+    Position j of a fused list carries mass ``1/(rrf_k + j)``; invalid
+    (-1) slots carry none.  Normalizing per draft makes the weighted
+    homology score lie in [0, 1] like the unweighted overlap ratio, so the
+    same ``tau`` threshold applies.
+    """
+    k = ids.shape[-1]
+    w = 1.0 / (rrf_k + jnp.arange(k, dtype=jnp.float32))
+    w = jnp.where(ids >= 0, w, 0.0)
+    norm = jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)
+    return w / norm
+
+
+def homology_scores_weighted(draft_ids: jax.Array, cache_doc_ids: jax.Array,
+                             cache_valid: jax.Array,
+                             draft_weights: jax.Array) -> jax.Array:
+    """Rank-weighted homology of one fused draft against the cache.
+
+    draft_ids [k], draft_weights [k] (pre-normalized, e.g.
+    :func:`rrf_draft_weights`), cache_doc_ids [H, k], cache_valid [H]
+    -> scores [H] f32: the matched fraction of the draft's RRF mass.
+    Rank-domain on both sides — invariant to any positive monotone
+    transform of either channel's raw scores.
+    """
+    eq = (draft_ids[None, :, None] == cache_doc_ids[:, None, :])  # [H,k,k]
+    eq &= (draft_ids[None, :, None] >= 0)
+    hit = jnp.any(eq, axis=2).astype(jnp.float32)                 # [H, k]
+    s = jnp.sum(hit * draft_weights[None, :], axis=1)
+    return jnp.where(cache_valid, s, 0.0)
+
+
+def homology_scores_weighted_batched(draft_ids: jax.Array,
+                                     cache_doc_ids: jax.Array,
+                                     cache_valid: jax.Array,
+                                     draft_weights: jax.Array) -> jax.Array:
+    """draft_ids/draft_weights [B, k] -> scores [B, H]."""
+    return jax.vmap(lambda d, w: homology_scores_weighted(
+        d, cache_doc_ids, cache_valid, w))(draft_ids, draft_weights)
+
+
 @functools.partial(jax.jit, static_argnames=())
 def reidentify(draft_ids: jax.Array, cache_doc_ids: jax.Array,
                cache_valid: jax.Array, tau: jax.Array):

@@ -100,6 +100,13 @@ class SyntheticWorld:
         self.entity_attrs = np.zeros((cfg.n_entities, cfg.attrs_per_entity), bool)
         np.logical_or.at(self.entity_attrs, self.doc_entity, self.doc_attr_mask)
 
+        # hashed-term postings for the lexical channel — pure hashing of the
+        # arrays above, zero rng draws, so every embedding/query stream stays
+        # bit-identical to worlds built before the hybrid backend existed
+        from repro.retrieval.lexical import build_doc_terms
+        self.doc_terms, self.doc_term_weights = build_doc_terms(
+            self.doc_entity, self.doc_attr_mask)
+
     # -- query construction ------------------------------------------------
 
     def encode_query(self, entity: int, attr: int,
@@ -149,6 +156,7 @@ class SyntheticWorld:
             entities = rng.integers(0, cfg.n_entities, n)
             rank_of = None
 
+        from repro.retrieval.lexical import query_terms
         out = []
         for e in entities:
             covered = np.flatnonzero(self.entity_attrs[e])
@@ -169,8 +177,10 @@ class SyntheticWorld:
             # token ids: template tokens + entity token + attr token
             tokens = np.array([1000 + tmpl * 7 + t for t in range(4)]
                               + [10_000 + int(e), 100_000 + a], np.int64)
+            terms, term_weights = query_terms(int(e), a)
             out.append({"entity": int(e), "attr": a, "emb": emb,
-                        "tokens": tokens})
+                        "tokens": tokens, "terms": terms,
+                        "term_weights": term_weights})
         return out
 
 

@@ -1,0 +1,140 @@
+"""Pallas TPU kernel: RRF fusion + diversification + rerank of a hybrid pool.
+
+One grid step per query fuses the dense and lexical channels' top-k lists
+entirely in rank domain:
+
+  1. RRF mass: slot j of either channel contributes ``1 / (rrf_k + rank_j)``;
+     duplicate doc ids across channels sum their mass onto the *first*
+     occurrence (later occurrences get mass 0, so they can never be
+     selected twice).  Rank-domain fusion is scale-free: any positive
+     monotone transform of either channel's raw scores leaves the fused
+     ordering unchanged.
+  2. Greedy near-duplicate diversification: candidates are visited in
+     descending RRF-mass order; a candidate survives only if its cosine
+     similarity to every already-selected doc stays below
+     ``diversify_sim`` (``None`` disables the pass — the ablation arm).
+  3. Rerank: the final order is fused mass descending — the rank-domain
+     fusion DECIDES — with the dense score ``pool_vec · q`` arbitrating
+     exact-mass ties (slots holding the same rank in different channels
+     carry identical mass; the dense model orders them instead of raw
+     pool position).  Dropped slots (invalid, duplicate occurrences,
+     diversity rejects) come back as ``-inf``.
+
+The per-query pool is small (kd + kl slots), so the whole fusion state lives
+in VMEM and the kernel is pure vector-unit work; the caller finishes with a
+single two-key sort over [B, P] (same split as ``topk_search``'s final sort).
+
+``_fuse_scores`` is shared with the XLA oracle
+(``kernels/ref.py::fused_rerank_ref`` runs it per query via ``lax.map``), so
+backends agree bit-for-bit on the fused output, invalid (-1) slots and
+cross-channel duplicates included.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fuse_scores(q, ids, vecs, *, kd: int, kl: int, rrf_k: float,
+                 diversify_sim: float | None):
+    """Fuse one query's pool: q [d], ids [P], vecs [P,d] -> ([P], [P]) f32.
+
+    Returns ``(mass, rscore)``: the fused RRF mass for selected docs
+    (``-inf`` for dropped ones — invalid slots, duplicate occurrences,
+    diversity rejects) and the dense rerank score used as the tie-break
+    key.  Shared by the kernel body and the XLA oracle.
+    """
+    p = kd + kl
+    rank = jnp.concatenate([jnp.arange(kd), jnp.arange(kl)]).astype(jnp.float32)
+    pos = jnp.arange(p, dtype=jnp.int32)
+    valid = ids >= 0
+    raw = jnp.where(valid, 1.0 / (rrf_k + rank), 0.0)
+    # combine duplicate ids: all of an id's mass lands on its first slot
+    same = (ids[:, None] == ids[None, :]) & valid[:, None] & valid[None, :]
+    first = ~jnp.any(same & (pos[None, :] < pos[:, None]), axis=1)
+    mass = jnp.sum(jnp.where(same, raw[None, :], 0.0), axis=1)
+    mass = jnp.where(first & valid, mass, 0.0)
+
+    rscore = vecs.astype(jnp.float32) @ q.astype(jnp.float32)
+    if diversify_sim is None:
+        selected = mass > 0.0
+    else:
+        norm = jnp.sqrt(jnp.sum(vecs * vecs, axis=1))
+        vn = vecs / jnp.maximum(norm, 1e-12)[:, None]
+        sims = vn @ vn.T                                   # [P, P] cosine
+
+        def body(i, carry):
+            selected, rem = carry
+            c = jnp.argmax(rem)                            # next-best mass
+            eligible = rem[c] > 0.0
+            msim = jnp.max(jnp.where(selected, sims[c], -jnp.inf))
+            keep = eligible & (msim < diversify_sim)
+            selected = selected | ((pos == c) & keep)
+            rem = jnp.where(pos == c, 0.0, rem)
+            return selected, rem
+
+        selected, _ = jax.lax.fori_loop(
+            0, p, body, (jnp.zeros((p,), bool), mass))
+    return jnp.where(selected, mass, -jnp.inf), rscore
+
+
+def _fused_kernel(q_ref, ids_ref, vecs_ref, mass_ref, rscore_ref, *,
+                  kd: int, kl: int, rrf_k: float,
+                  diversify_sim: float | None):
+    mass, rscore = _fuse_scores(q_ref[0], ids_ref[0], vecs_ref[0], kd=kd,
+                                kl=kl, rrf_k=rrf_k,
+                                diversify_sim=diversify_sim)
+    mass_ref[...] = mass[None, :]
+    rscore_ref[...] = rscore[None, :]
+
+
+def _final_topk(sel_mass, rscore, pool_ids, k: int):
+    """Two-key desc sort of the fused pool, then slice the top-k (outside
+    the kernel): primary key fused mass, secondary key dense rerank score
+    (both stable argsorts, so the composition is lexicographic and
+    deterministic across backends)."""
+    o2 = jnp.argsort(-rscore, axis=1, stable=True)
+    m2 = jnp.take_along_axis(sel_mass, o2, axis=1)
+    o1 = jnp.argsort(-m2, axis=1, stable=True)
+    order = jnp.take_along_axis(o2, o1, axis=1)[:, :k]
+    vals = jnp.take_along_axis(sel_mass, order, axis=1)
+    ids = jnp.take_along_axis(pool_ids, order, axis=1)
+    return vals, jnp.where(jnp.isfinite(vals), ids, -1)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kd", "k", "rrf_k", "diversify_sim", "interpret"))
+def fused_rerank(queries: jax.Array, pool_ids: jax.Array,
+                 pool_vecs: jax.Array, kd: int, k: int,
+                 rrf_k: float = 60.0, diversify_sim: float | None = None,
+                 interpret: bool = False):
+    """queries [B,d], pool_ids [B,P], pool_vecs [B,P,d] ->
+    (scores [B,k] desc-sorted fused RRF masses, ids [B,k]).
+
+    ``pool_ids[:, :kd]`` is the dense channel's list, the rest the lexical
+    channel's; ``-1`` marks invalid slots (their ``pool_vecs`` rows must be
+    zero).  Slots dropped by fusion come back as ``-inf`` / ``-1``.
+    """
+    b, p = pool_ids.shape
+    d = queries.shape[1]
+    kl = p - kd
+    mass, rscore = pl.pallas_call(
+        functools.partial(_fused_kernel, kd=kd, kl=kl, rrf_k=rrf_k,
+                          diversify_sim=diversify_sim),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),        # this query
+            pl.BlockSpec((1, p), lambda i: (i, 0)),        # its fused pool
+            pl.BlockSpec((1, p, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, p), lambda i: (i, 0)),
+                   pl.BlockSpec((1, p), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((b, p), jnp.float32),
+                   jax.ShapeDtypeStruct((b, p), jnp.float32)],
+        interpret=interpret,
+    )(queries.astype(jnp.float32), pool_ids.astype(jnp.int32),
+      pool_vecs.astype(jnp.float32))
+    return _final_topk(mass, rscore, pool_ids, k)

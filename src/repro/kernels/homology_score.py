@@ -15,7 +15,9 @@ from jax.experimental import pallas as pl
 
 
 def _homology_kernel(draft_ref, cache_ref, valid_ref, *rest, k: int,
-                     grouped: bool):
+                     grouped: bool, weighted: bool):
+    rest = list(rest)
+    w_ref = rest.pop(0) if weighted else None
     if grouped:
         row_group_ref, q_group_ref, out_ref = rest
     else:
@@ -26,8 +28,14 @@ def _homology_kernel(draft_ref, cache_ref, valid_ref, *rest, k: int,
     # [B, TILE_H, k_draft, k_cache] compare; any over cache slots; sum draft
     eq = (draft[:, None, :, None] == cache[None, :, None, :])
     eq &= (draft[:, None, :, None] >= 0)
-    overlap = jnp.sum(jnp.any(eq, axis=3).astype(jnp.float32), axis=2)
-    s = overlap / k
+    hit = jnp.any(eq, axis=3).astype(jnp.float32)          # [B, TILE_H, k]
+    if weighted:
+        # fused-list validation: each draft slot carries its (normalized)
+        # RRF mass instead of 1/k — rank-domain, score-scale free
+        s = jnp.sum(hit * w_ref[...][:, None, :], axis=2)
+    else:
+        overlap = jnp.sum(hit, axis=2)
+        s = overlap / k
     ok = valid[None, :]
     if grouped:
         # partitioned table: cached query row i only scores against drafts
@@ -41,6 +49,7 @@ def homology_score(draft_ids: jax.Array, cache_doc_ids: jax.Array,
                    cache_valid: jax.Array, tile_h: int = 512,
                    row_group: jax.Array | None = None,
                    q_group: jax.Array | None = None,
+                   draft_weights: jax.Array | None = None,
                    interpret: bool = False):
     """draft [B,k] int32, cache [H,k] int32, valid [H] -> scores [B,H] f32.
 
@@ -49,12 +58,19 @@ def homology_score(draft_ids: jax.Array, cache_doc_ids: jax.Array,
     for draft b only when ``row_group[i] == q_group[b]`` (multi-tenant
     validation — every tenant's query-cache slice scores in the same
     kernel launch without cross-tenant re-identification).
+
+    ``draft_weights`` ([B, k] f32, optional) switches the score from the
+    uniform overlap ratio (1/k per matched slot) to per-slot weighted mass
+    (the fused-list RRF validation of ``HasConfig.fusion == "rrf"``;
+    weights pre-normalized by :func:`~repro.core.homology.rrf_draft_weights`).
+    Absent, the program is byte-identical to the unweighted kernel.
     """
     b, k = draft_ids.shape
     h = cache_doc_ids.shape[0]
     if (row_group is None) != (q_group is None):
         raise ValueError("row_group and q_group must be passed together")
     grouped = row_group is not None
+    weighted = draft_weights is not None
     n_tiles = pl.cdiv(h, tile_h)
     pad = n_tiles * tile_h - h
     if pad:
@@ -72,6 +88,9 @@ def homology_score(draft_ids: jax.Array, cache_doc_ids: jax.Array,
         pl.BlockSpec((tile_h,), lambda i: (i,)),
     ]
     operands = [draft_ids, cache_doc_ids, cache_valid]
+    if weighted:
+        in_specs += [pl.BlockSpec((b, k), lambda i: (0, 0))]  # weights resident
+        operands += [draft_weights.astype(jnp.float32)]
     if grouped:
         in_specs += [
             pl.BlockSpec((tile_h,), lambda i: (i,)),       # row groups
@@ -80,7 +99,8 @@ def homology_score(draft_ids: jax.Array, cache_doc_ids: jax.Array,
         operands += [row_group.astype(jnp.int32), q_group.astype(jnp.int32)]
 
     out = pl.pallas_call(
-        functools.partial(_homology_kernel, k=k, grouped=grouped),
+        functools.partial(_homology_kernel, k=k, grouped=grouped,
+                          weighted=weighted),
         grid=(n_tiles,),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((b, tile_h), lambda i: (0, i)),

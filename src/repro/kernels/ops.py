@@ -11,8 +11,10 @@ import jax
 
 from repro.kernels.decode_attention import decode_attention as _decode_attention
 from repro.kernels.embedding_bag import embedding_bag as _embedding_bag
+from repro.kernels.fused_rerank import fused_rerank as _fused_rerank
 from repro.kernels.homology_score import homology_score as _homology_score
 from repro.kernels.ivf_scan import ivf_scan as _ivf_scan
+from repro.kernels.lexical_score import lexical_score as _lexical_score
 from repro.kernels.topk_search import topk_search as _topk_search
 
 
@@ -43,6 +45,22 @@ def ivf_scan(queries, probe, bucket_vecs, bucket_ids, k, interpret=None,
     return _ivf_scan(queries, probe, bucket_vecs, bucket_ids, k,
                      interpret=interpret, bucket_scales=bucket_scales,
                      probe_bias=probe_bias)
+
+
+def lexical_score(q_terms, q_weights, doc_terms, doc_weights, k,
+                  tile_n: int = 512, interpret=None):
+    if interpret is None:
+        interpret = auto_interpret()
+    return _lexical_score(q_terms, q_weights, doc_terms, doc_weights, k,
+                          tile_n=tile_n, interpret=interpret)
+
+
+def fused_rerank(queries, pool_ids, pool_vecs, kd, k, rrf_k: float = 60.0,
+                 diversify_sim=None, interpret=None):
+    if interpret is None:
+        interpret = auto_interpret()
+    return _fused_rerank(queries, pool_ids, pool_vecs, kd, k, rrf_k=rrf_k,
+                         diversify_sim=diversify_sim, interpret=interpret)
 
 
 def embedding_bag(table, ids, weights=None, mode="sum", interpret=None):

@@ -59,6 +59,58 @@ def ivf_scan_ref(queries: jax.Array, probe: jax.Array, bucket_vecs: jax.Array,
     return vals, jnp.take_along_axis(ids, pos, axis=1)
 
 
+def lexical_score_ref(q_terms: jax.Array, q_weights: jax.Array,
+                      doc_terms: jax.Array, doc_weights: jax.Array, k: int,
+                      tile_n: int = 512):
+    """Tiled hashed-term lexical top-k, scanning the SAME tiles through the
+    SAME merge as the Pallas kernel (shared helpers), so the two backends
+    agree bit-for-bit including tie order.  q_terms/q_weights [B,T],
+    doc_terms/doc_weights [N,L] -> (vals [B,k], row idx [B,k])."""
+    from repro.kernels.lexical_score import (
+        _final_sort, _merge_topk, _pad_postings, _tile_scores)
+    b = q_terms.shape[0]
+    q_terms = q_terms.astype(jnp.int32)
+    q_weights = q_weights.astype(jnp.float32)
+    doc_terms, doc_weights, n_tiles = _pad_postings(
+        doc_terms.astype(jnp.int32), doc_weights.astype(jnp.float32), tile_n)
+    l_w = doc_terms.shape[1]
+    dt = doc_terms.reshape(n_tiles, tile_n, l_w)
+    dw = doc_weights.reshape(n_tiles, tile_n, l_w)
+    bases = jnp.arange(n_tiles, dtype=jnp.int32) * tile_n
+
+    def body(carry, tile):
+        vals, idx = carry
+        dt_t, dw_t, base = tile
+        s = _tile_scores(q_terms, q_weights, dt_t, dw_t)
+        vals, idx = _merge_topk(s, vals, idx, base, k)
+        return (vals, idx), None
+
+    init = (jnp.full((b, k), -jnp.inf, jnp.float32),
+            jnp.full((b, k), -1, jnp.int32))
+    (vals, idx), _ = jax.lax.scan(body, init, (dt, dw, bases))
+    return _final_sort(vals, idx)
+
+
+def fused_rerank_ref(queries: jax.Array, pool_ids: jax.Array,
+                     pool_vecs: jax.Array, kd: int, k: int,
+                     rrf_k: float = 60.0,
+                     diversify_sim: float | None = None):
+    """RRF fusion + diversification + rerank, running the kernel's own
+    per-query ``_fuse_scores`` sequentially via ``lax.map`` — bit-identical
+    to the Pallas grid by construction."""
+    import functools
+
+    from repro.kernels.fused_rerank import _final_topk, _fuse_scores
+    kl = pool_ids.shape[1] - kd
+    fuse = functools.partial(_fuse_scores, kd=kd, kl=kl, rrf_k=rrf_k,
+                             diversify_sim=diversify_sim)
+    mass, rscore = jax.lax.map(
+        lambda x: fuse(x[0], x[1], x[2]),
+        (queries.astype(jnp.float32), pool_ids.astype(jnp.int32),
+         pool_vecs.astype(jnp.float32)))
+    return _final_topk(mass, rscore, pool_ids, k)
+
+
 def embedding_bag_ref(table: jax.Array, ids: jax.Array,
                       weights: jax.Array | None = None, mode: str = "sum"):
     """Fixed-arity EmbeddingBag. table [V,d], ids [B,n] -> [B,d]."""

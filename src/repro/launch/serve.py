@@ -57,11 +57,30 @@ def main(argv=None) -> None:
                     choices=["has", "full", "proximity", "saferadius",
                              "mincache", "crag", "ivf", "scann", "sched"])
     ap.add_argument("--retrieval-backend", default="flat",
-                    choices=["flat", "sharded", "replica", "ann"],
+                    choices=["flat", "sharded", "replica", "ann", "hybrid"],
                     help="full-retrieval backend (retrieval/service.py): "
                          "in-process flat scan, mesh-sharded concurrent "
-                         "scan, warm-standby replicas, or the IVF ANN "
-                         "index (approximate; nprobe-calibrated)")
+                         "scan, warm-standby replicas, the IVF ANN "
+                         "index (approximate; nprobe-calibrated), or the "
+                         "hybrid lexical+dense channel pair with fused "
+                         "RRF reranking (retrieval/fusion.py)")
+    ap.add_argument("--hybrid-dense", default="flat",
+                    choices=["flat", "sharded", "ann"],
+                    help="dense channel of --retrieval-backend hybrid")
+    ap.add_argument("--rrf-k", type=float, default=None,
+                    help="reciprocal-rank-fusion constant for "
+                         "--retrieval-backend hybrid: per-channel mass of "
+                         "rank r is 1/(rrf_k + r) (default 60)")
+    ap.add_argument("--diversify-sim", type=float, default=None,
+                    help="near-duplicate suppression threshold for "
+                         "--retrieval-backend hybrid: a fused candidate is "
+                         "dropped when its cosine similarity to an already-"
+                         "selected result is >= this (default 0.98; 1.0 "
+                         "disables in practice)")
+    ap.add_argument("--lexical-terms", type=int, default=None,
+                    help="postings-row width cap (terms kept per doc) for "
+                         "--retrieval-backend hybrid (default: the world's "
+                         "full term width)")
     ap.add_argument("--shards", type=int, default=4,
                     help="corpus shards for --retrieval-backend sharded")
     ap.add_argument("--workers", type=int, default=None,
@@ -147,9 +166,34 @@ def main(argv=None) -> None:
         ap.error(f"--nprobe ({args.nprobe}) must be <= --ann-clusters "
                  f"({args.ann_clusters}): a query cannot probe more "
                  "buckets than the index has")
-    if args.compressed_corpus and args.retrieval_backend != "ann":
-        ap.error("--compressed-corpus only applies to --retrieval-backend "
-                 "ann (the exact backends scan the f32 corpus)")
+    if args.compressed_corpus and not (
+            args.retrieval_backend == "ann"
+            or (args.retrieval_backend == "hybrid"
+                and args.hybrid_dense == "ann")):
+        ap.error("--compressed-corpus only applies to an ANN dense stage "
+                 "(--retrieval-backend ann, or hybrid with --hybrid-dense "
+                 "ann); the exact backends scan the f32 corpus")
+    if (args.hybrid_dense != "flat"
+            and args.retrieval_backend != "hybrid"):
+        ap.error("--hybrid-dense only applies to --retrieval-backend "
+                 "hybrid (it selects hybrid's dense channel)")
+    hybrid_flags = (("--rrf-k", args.rrf_k),
+                    ("--diversify-sim", args.diversify_sim),
+                    ("--lexical-terms", args.lexical_terms))
+    if args.retrieval_backend != "hybrid":
+        for name, val in hybrid_flags:
+            if val is not None:
+                ap.error(f"{name} only applies to --retrieval-backend "
+                         "hybrid (the single-channel backends have no "
+                         "fusion stage)")
+    if args.rrf_k is not None and args.rrf_k < 1:
+        ap.error(f"--rrf-k must be >= 1 (got {args.rrf_k}; rank 0 mass "
+                 "1/rrf_k must stay bounded)")
+    if args.diversify_sim is not None and not 0 < args.diversify_sim <= 1:
+        ap.error(f"--diversify-sim must be in (0, 1] "
+                 f"(got {args.diversify_sim}; cosine similarity range)")
+    if args.lexical_terms is not None and args.lexical_terms < 1:
+        ap.error(f"--lexical-terms must be >= 1 (got {args.lexical_terms})")
     if args.tenants < 1:
         ap.error(f"--tenants must be >= 1 (got {args.tenants})")
     if args.tenant_zipf < 0:
@@ -248,6 +292,22 @@ def main(argv=None) -> None:
                              nprobe=args.nprobe,
                              compressed=args.compressed_corpus,
                              n_workers=workers, seed=args.seed)
+    elif args.retrieval_backend == "hybrid":
+        from repro.retrieval.service import HybridBackend
+        backend = HybridBackend(
+            corpus, args.k, latency,
+            world.doc_terms, world.doc_term_weights,
+            dense=args.hybrid_dense,
+            rrf_k=60.0 if args.rrf_k is None else args.rrf_k,
+            diversify_sim=(0.98 if args.diversify_sim is None
+                           else args.diversify_sim),
+            lexical_terms=args.lexical_terms,
+            n_shards=args.shards, n_workers=workers,
+            ann_kwargs=(dict(n_clusters=args.ann_clusters,
+                             nprobe=args.nprobe,
+                             compressed=args.compressed_corpus,
+                             seed=args.seed)
+                        if args.hybrid_dense == "ann" else None))
     else:
         backend = None                       # RetrievalService default: flat
     svc = RetrievalService(world, latency, k=args.k, backend=backend)

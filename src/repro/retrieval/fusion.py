@@ -1,0 +1,137 @@
+"""Single-dispatch hybrid retrieval programs (dense + lexical + fused rerank).
+
+One jitted program per ``[B, d]`` batch runs the whole hybrid cloud stage:
+
+    dense channel scan (flat | sharded | IVF-ANN)      -> top-kd ids
+    lexical channel scan (hashed postings)             -> top-kl ids
+    RRF fusion + near-dup diversification + rerank     -> top-k ids
+
+The channel scans and the fusion kernel are all traceable (Pallas kernels or
+their XLA oracles behind the shared ``scan_backend`` switch), so XLA fuses
+the stage into ONE host->device dispatch regardless of batch width — the
+same dispatch-count discipline as ``speculate_batch`` and ``IVFBackend``,
+probed through ``core/dispatch.py`` by the benchmarks.
+
+Id contract: the hybrid doc store keeps postings row == global doc id
+(``HybridBackend`` rejects non-sequential ids at ingest), so the lexical
+channel's row indices are already ids and the fused pool gathers rerank
+vectors straight from the corpus; ``-1`` invalid slots gather zeros and can
+never be selected.
+
+``ivf_ann_body`` is the (un-jitted) ANN program body shared with
+``retrieval/service.py::_ivf_ann_search`` — the hybrid ANN mode inlines the
+exact same centroid -> probe -> bucket-scan -> residual-merge math as its
+dense channel, keeping the whole thing one program.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_rerank import fused_rerank
+from repro.kernels.ref import fused_rerank_ref
+from repro.retrieval.distributed import sharded_topk_reference
+from repro.retrieval.flat import chunked_flat_search
+from repro.retrieval.ivf import CompressedIVFIndex, ivf_probe_scan
+from repro.retrieval.lexical import lexical_topk
+
+
+def ivf_ann_body(index, res_vecs, res_ids, queries, *, nprobe: int, k: int,
+                 scan_backend: str, interpret: bool):
+    """ONE program per [B,d] batch: centroid matmul -> top-nprobe probe ->
+    bucket scan (Pallas kernel or XLA oracle) -> exact residual-buffer scan
+    -> merged top-k.  Everything fuses into a single host dispatch."""
+    from repro.kernels import ops
+    queries = queries.astype(jnp.float32)
+    nprobe = min(nprobe, index.n_buckets)
+    cscores = queries @ index.centroids.T                    # [B, C]
+    cvals, probe = jax.lax.top_k(cscores, nprobe)            # [B, nprobe]
+    if scan_backend == "pallas":
+        if isinstance(index, CompressedIVFIndex):
+            # residual codes: the probe scores double as the centroid bias
+            scales, bias = index.bucket_scales, cvals
+        else:
+            scales = bias = None
+        s, ids = ops.ivf_scan(queries, probe.astype(jnp.int32),
+                              index.bucket_vecs, index.bucket_ids, k,
+                              interpret=interpret, bucket_scales=scales,
+                              probe_bias=bias)
+    else:
+        s, ids = ivf_probe_scan(index, queries, probe, k)
+    # exact scan of the residual flat buffer (live-ingested bucket spill)
+    rs = queries @ res_vecs.T                                # [B, R]
+    rs = jnp.where(res_ids[None, :] >= 0, rs, -jnp.inf)
+    rk = min(k, res_vecs.shape[0])
+    r_s, r_pos = jax.lax.top_k(rs, rk)
+    r_ids = res_ids[r_pos]
+    s = jnp.concatenate([s, r_s], axis=1)
+    ids = jnp.concatenate([ids, r_ids], axis=1)
+    top_s, top_i = jax.lax.top_k(s, k)
+    return top_s, jnp.take_along_axis(ids, top_i, axis=1)
+
+
+def _fuse_tail(corpus, queries, i_d, q_terms, q_weights, doc_terms,
+               doc_weights, *, k: int, kl: int, rrf_k: float,
+               diversify_sim: float | None, scan_backend: str,
+               interpret: bool, tile_n: int):
+    """Lexical scan + RRF/diversify/rerank over the two channels' lists."""
+    _, i_l = lexical_topk(q_terms, q_weights, doc_terms, doc_weights, kl,
+                          backend=scan_backend, tile_n=tile_n,
+                          interpret=interpret)
+    pool_ids = jnp.concatenate([i_d, i_l], axis=1)           # [B, kd+kl]
+    pool_vecs = (corpus[jnp.maximum(pool_ids, 0)]
+                 * (pool_ids >= 0)[..., None].astype(corpus.dtype))
+    kd = i_d.shape[1]
+    if scan_backend == "pallas":
+        return fused_rerank(queries, pool_ids, pool_vecs, kd, k,
+                            rrf_k=rrf_k, diversify_sim=diversify_sim,
+                            interpret=interpret)
+    return fused_rerank_ref(queries, pool_ids, pool_vecs, kd, k,
+                            rrf_k=rrf_k, diversify_sim=diversify_sim)
+
+
+_HYBRID_STATIC = ("k", "kd", "kl", "rrf_k", "diversify_sim", "scan_backend",
+                  "interpret", "tile_n")
+
+
+@functools.partial(jax.jit, static_argnames=_HYBRID_STATIC + ("chunk",))
+def hybrid_flat_search(corpus, doc_terms, doc_weights, queries, q_terms,
+                       q_weights, *, k, kd, kl, rrf_k, diversify_sim,
+                       scan_backend, interpret, tile_n, chunk):
+    queries = queries.astype(jnp.float32)
+    _, i_d = chunked_flat_search(corpus, queries, kd, chunk=chunk)
+    return _fuse_tail(corpus, queries, i_d, q_terms, q_weights, doc_terms,
+                      doc_weights, k=k, kl=kl, rrf_k=rrf_k,
+                      diversify_sim=diversify_sim, scan_backend=scan_backend,
+                      interpret=interpret, tile_n=tile_n)
+
+
+@functools.partial(jax.jit, static_argnames=_HYBRID_STATIC + ("n_shards",
+                                                              "chunk"))
+def hybrid_sharded_search(corpus, doc_terms, doc_weights, queries, q_terms,
+                          q_weights, *, k, kd, kl, rrf_k, diversify_sim,
+                          scan_backend, interpret, tile_n, n_shards, chunk):
+    queries = queries.astype(jnp.float32)
+    _, i_d = sharded_topk_reference(corpus, queries, kd, n_shards=n_shards,
+                                    chunk=chunk)
+    return _fuse_tail(corpus, queries, i_d, q_terms, q_weights, doc_terms,
+                      doc_weights, k=k, kl=kl, rrf_k=rrf_k,
+                      diversify_sim=diversify_sim, scan_backend=scan_backend,
+                      interpret=interpret, tile_n=tile_n)
+
+
+@functools.partial(jax.jit, static_argnames=_HYBRID_STATIC + ("nprobe",))
+def hybrid_ann_search(index, res_vecs, res_ids, corpus, doc_terms,
+                      doc_weights, queries, q_terms, q_weights, *, k, kd, kl,
+                      rrf_k, diversify_sim, scan_backend, interpret, tile_n,
+                      nprobe):
+    queries = queries.astype(jnp.float32)
+    _, i_d = ivf_ann_body(index, res_vecs, res_ids, queries, nprobe=nprobe,
+                          k=kd, scan_backend=scan_backend,
+                          interpret=interpret)
+    return _fuse_tail(corpus, queries, i_d, q_terms, q_weights, doc_terms,
+                      doc_weights, k=k, kl=kl, rrf_k=rrf_k,
+                      diversify_sim=diversify_sim, scan_backend=scan_backend,
+                      interpret=interpret, tile_n=tile_n)

@@ -61,6 +61,8 @@ from repro.core import dispatch
 from repro.retrieval.distributed import (distributed_flat_search,
                                          sharded_topk_reference)
 from repro.retrieval.flat import chunked_flat_search
+from repro.retrieval.fusion import (hybrid_ann_search, hybrid_flat_search,
+                                    hybrid_sharded_search, ivf_ann_body)
 from repro.retrieval.ivf import (CompressedIVFIndex, IVFIndex, _assign_fn,
                                  _build_ivf_arrays, _quant_residual_halves,
                                  ivf_probe_scan)
@@ -172,40 +174,10 @@ class ShardedMeshBackend(_BackendBase):
         return self.lat.full_scan_time() * self.lat.shard_scale(self.n_shards)
 
 
-@functools.partial(jax.jit, static_argnames=("nprobe", "k", "scan_backend",
-                                             "interpret"))
-def _ivf_ann_search(index, res_vecs, res_ids, queries, *, nprobe: int, k: int,
-                    scan_backend: str, interpret: bool):
-    """ONE program per [B,d] batch: centroid matmul -> top-nprobe probe ->
-    bucket scan (Pallas kernel or XLA oracle) -> exact residual-buffer scan
-    -> merged top-k.  Everything fuses into a single host dispatch."""
-    from repro.kernels import ops
-    queries = queries.astype(jnp.float32)
-    nprobe = min(nprobe, index.n_buckets)
-    cscores = queries @ index.centroids.T                    # [B, C]
-    cvals, probe = jax.lax.top_k(cscores, nprobe)            # [B, nprobe]
-    if scan_backend == "pallas":
-        if isinstance(index, CompressedIVFIndex):
-            # residual codes: the probe scores double as the centroid bias
-            scales, bias = index.bucket_scales, cvals
-        else:
-            scales = bias = None
-        s, ids = ops.ivf_scan(queries, probe.astype(jnp.int32),
-                              index.bucket_vecs, index.bucket_ids, k,
-                              interpret=interpret, bucket_scales=scales,
-                              probe_bias=bias)
-    else:
-        s, ids = ivf_probe_scan(index, queries, probe, k)
-    # exact scan of the residual flat buffer (live-ingested bucket spill)
-    rs = queries @ res_vecs.T                                # [B, R]
-    rs = jnp.where(res_ids[None, :] >= 0, rs, -jnp.inf)
-    rk = min(k, res_vecs.shape[0])
-    r_s, r_pos = jax.lax.top_k(rs, rk)
-    r_ids = res_ids[r_pos]
-    s = jnp.concatenate([s, r_s], axis=1)
-    ids = jnp.concatenate([ids, r_ids], axis=1)
-    top_s, top_i = jax.lax.top_k(s, k)
-    return top_s, jnp.take_along_axis(ids, top_i, axis=1)
+# the ANN program body lives in retrieval/fusion.py so the hybrid backend
+# can inline the identical math as its dense channel inside ONE fused program
+_ivf_ann_search = functools.partial(jax.jit, static_argnames=(
+    "nprobe", "k", "scan_backend", "interpret"))(ivf_ann_body)
 
 
 class IVFBackend(_BackendBase):
@@ -387,6 +359,192 @@ class IVFBackend(_BackendBase):
         return ids
 
 
+class HybridBackend(_BackendBase):
+    """Hybrid lexical+dense cloud stage with single-dispatch fused reranking.
+
+    Composes a dense channel (``dense="flat" | "sharded" | "ann"``) with the
+    hashed-term lexical channel (``retrieval/lexical.py``) and fuses both
+    into ONE jitted program per ``[B, d]`` batch (``retrieval/fusion.py``):
+    channel scans -> rank-domain RRF (``1/(rrf_k + rank)``, cross-channel
+    duplicate mass combined onto the first occurrence) -> greedy
+    near-duplicate diversification (cosine >= ``diversify_sim`` against
+    already-selected docs is dropped; ``None`` disables) -> dense rerank of
+    the surviving pool.  ``search`` therefore costs exactly one host
+    dispatch regardless of batch width (``dispatch.record``-probed).
+
+    Queries without term arrays (warmup, engines that only carry
+    embeddings) run the same program with an all-invalid term batch: the
+    lexical channel contributes nothing and the result degrades gracefully
+    to diversified+reranked dense retrieval.
+
+    Id contract: postings row == global doc id, so ``ingest_docs`` REJECTS
+    non-sequential ids — both channels grow in lockstep (dense vectors via
+    the inner ``IVFBackend`` in ANN mode, plain corpus append otherwise;
+    postings rows always appended here, ``-1``-padded when the new doc has
+    no terms).  ``on_ingest`` stays the base no-op so ``ReplicaBackend``
+    and the fault-plan retry/hedge paths compose unchanged.
+    """
+
+    uses_lexical = True
+
+    def __init__(self, corpus: jax.Array, k: int, lat,
+                 doc_terms, doc_term_weights, dense: str = "flat",
+                 dense_k: int | None = None, lexical_k: int | None = None,
+                 rrf_k: float = 60.0, diversify_sim: float | None = 0.98,
+                 lexical_terms: int | None = None,
+                 backend: str | None = None, interpret: bool | None = None,
+                 chunk: int = 32768, n_shards: int = 4, n_workers: int = 1,
+                 tile_n: int = 512, q_term_width: int = 2,
+                 ann_kwargs: dict | None = None):
+        from repro.core.has import default_backend
+        from repro.kernels.ops import auto_interpret
+        if dense not in ("flat", "sharded", "ann"):
+            raise ValueError(f"unknown hybrid dense mode: {dense!r}")
+        if rrf_k < 1:
+            raise ValueError("rrf_k must be >= 1")
+        if diversify_sim is not None and not 0.0 < diversify_sim <= 1.0:
+            raise ValueError("diversify_sim must be in (0, 1]")
+        self.k = k
+        self.lat = lat
+        self.dense = dense
+        self.dense_k = int(dense_k) if dense_k else k
+        self.lexical_k = int(lexical_k) if lexical_k else k
+        self.rrf_k = float(rrf_k)
+        self.diversify_sim = (None if diversify_sim is None
+                              else float(diversify_sim))
+        self.scan_backend = backend if backend is not None else default_backend()
+        self._interpret = auto_interpret() if interpret is None else interpret
+        self.tile_n = int(tile_n)
+        self.q_term_width = max(1, int(q_term_width))
+        self.n_workers = max(1, int(n_workers))
+        self.n_shards = max(1, int(n_shards))
+        self._corpus_np = np.asarray(corpus, np.float32)
+        self.chunk = min(chunk, max(1, self._corpus_np.shape[0]))
+        terms = np.asarray(doc_terms, np.int32)
+        tw = np.asarray(doc_term_weights, np.float32)
+        if terms.shape != tw.shape or terms.shape[0] != self._corpus_np.shape[0]:
+            raise ValueError("postings arrays must be [n_docs, L] and match "
+                             "the corpus row count")
+        if lexical_terms is not None:
+            lw = max(1, int(lexical_terms))
+            terms, tw = terms[:, :lw], tw[:, :lw]
+        self.lexical_terms = terms.shape[1]
+        self._terms_np, self._tw_np = terms, tw
+        self._ivf = None
+        if dense == "ann":
+            kw = dict(backend=self.scan_backend, interpret=self._interpret)
+            kw.update(ann_kwargs or {})
+            self._ivf = IVFBackend(jnp.asarray(self._corpus_np),
+                                   self.dense_k, lat, **kw)
+        self._ingest_seen: dict = {}
+        self._dirty = True
+        self._upload()
+
+    def _upload(self) -> None:
+        if self._ivf is not None and self._ivf._dirty:
+            self._ivf._upload()
+        self.corpus = jnp.asarray(self._corpus_np)
+        self._terms = jnp.asarray(self._terms_np)
+        self._tw = jnp.asarray(self._tw_np)
+        self._dirty = False
+
+    # -- FullRetrievalBackend protocol ----------------------------------
+    def search(self, q_embs, q_terms=None, q_term_weights=None):
+        dispatch.record("hybrid_backend_search")
+        b = q_embs.shape[0]
+        if q_terms is None:
+            # term-less callers: inert terms, lexical channel matches nothing
+            q_terms = jnp.full((b, self.q_term_width), -1, jnp.int32)
+            q_term_weights = jnp.zeros((b, self.q_term_width), jnp.float32)
+        else:
+            q_terms = jnp.asarray(q_terms).astype(jnp.int32)
+            if q_term_weights is None:
+                q_term_weights = jnp.where(q_terms >= 0, 1.0, 0.0)
+            q_term_weights = jnp.asarray(q_term_weights).astype(jnp.float32)
+        if self._dirty or (self._ivf is not None and self._ivf._dirty):
+            self._upload()
+        common = dict(k=self.k, kd=self.dense_k, kl=self.lexical_k,
+                      rrf_k=self.rrf_k, diversify_sim=self.diversify_sim,
+                      scan_backend=self.scan_backend,
+                      interpret=self._interpret, tile_n=self.tile_n)
+        if self.dense == "flat":
+            return hybrid_flat_search(self.corpus, self._terms, self._tw,
+                                      q_embs, q_terms, q_term_weights,
+                                      chunk=self.chunk, **common)
+        if self.dense == "sharded":
+            return hybrid_sharded_search(self.corpus, self._terms, self._tw,
+                                         q_embs, q_terms, q_term_weights,
+                                         n_shards=self.n_shards,
+                                         chunk=self.chunk, **common)
+        return hybrid_ann_search(self._ivf.index, self._ivf._res_vecs,
+                                 self._ivf._res_ids, self.corpus,
+                                 self._terms, self._tw, q_embs, q_terms,
+                                 q_term_weights, nprobe=self._ivf.nprobe,
+                                 **common)
+
+    def _dense_scale(self) -> float:
+        if self.dense == "flat":
+            return 1.0
+        if self.dense == "sharded":
+            return self.lat.shard_scale(self.n_shards)
+        return self.lat.ann_scale(
+            self._ivf.index.n_buckets, self._ivf.nprobe,
+            capacity_factor=self._ivf.capacity_factor,
+            bytes_per_dim=1 if self._ivf.compressed else 4,
+            residual_rows=self._ivf._res_count)
+
+    def latency(self, batch: int) -> float:
+        return self.lat.full_scan_time() * self.lat.hybrid_scale(
+            self._dense_scale(), self.lexical_terms,
+            self.dense_k + self.lexical_k)
+
+    # -- live-corpus ingest (both channels in lockstep) ------------------
+    def ingest_docs(self, vecs, ids=None, *, terms=None, term_weights=None,
+                    ingest_key=None) -> np.ndarray:
+        if ingest_key is not None and ingest_key in self._ingest_seen:
+            return self._ingest_seen[ingest_key]
+        vecs = np.asarray(vecs, np.float32)
+        if vecs.ndim == 1:
+            vecs = vecs[None]
+        n_new = vecs.shape[0]
+        start = self._corpus_np.shape[0]
+        want = (start + np.arange(n_new)).astype(np.int32)
+        if ids is not None and not np.array_equal(
+                np.asarray(ids, np.int32), want):
+            raise ValueError(
+                "HybridBackend requires sequential doc ids (postings row == "
+                f"global id): expected {start}..{start + n_new - 1}")
+        t_rows = np.full((n_new, self.lexical_terms), -1, np.int32)
+        w_rows = np.zeros((n_new, self.lexical_terms), np.float32)
+        if terms is not None:
+            terms = np.asarray(terms, np.int32)
+            if terms.ndim == 1:
+                terms = terms[None]
+            if term_weights is None:
+                tw = np.where(terms >= 0, 1.0, 0.0).astype(np.float32)
+            else:
+                tw = np.asarray(term_weights, np.float32)
+                if tw.ndim == 1:
+                    tw = tw[None]
+            m = min(self.lexical_terms, terms.shape[1])
+            t_rows[:, :m] = terms[:, :m]
+            w_rows[:, :m] = np.where(terms[:, :m] >= 0, tw[:, :m], 0.0)
+        if self._ivf is not None:
+            got = np.asarray(
+                self._ivf.ingest_docs(vecs, want, ingest_key=ingest_key),
+                np.int32)
+            self._corpus_np = self._ivf._corpus_np
+        else:
+            got = want
+            self._corpus_np = np.concatenate([self._corpus_np, vecs])
+        self._terms_np = np.concatenate([self._terms_np, t_rows])
+        self._tw_np = np.concatenate([self._tw_np, w_rows])
+        self._dirty = True
+        if ingest_key is not None:
+            self._ingest_seen[ingest_key] = got
+        return got
+
+
 class ReplicaBackend(_BackendBase):
     """Warm-standby replica routing + cache-ingest reconciliation.
 
@@ -415,8 +573,18 @@ class ReplicaBackend(_BackendBase):
         self._corpus_np = np.asarray(corpus)    # one host copy, reused
         self.n_workers = max(1, len(self.standbys))
 
-    def search(self, q_embs):
-        return self.inner.search(q_embs)
+    def search(self, q_embs, **kw):
+        # kwargs pass through untouched (e.g. a HybridBackend inner's
+        # q_terms/q_term_weights)
+        return self.inner.search(q_embs, **kw)
+
+    @property
+    def uses_lexical(self) -> bool:
+        return bool(getattr(self.inner, "uses_lexical", False))
+
+    @property
+    def q_term_width(self) -> int:
+        return int(getattr(self.inner, "q_term_width", 0))
 
     def latency(self, batch: int) -> float:
         return self.inner.latency(batch)
@@ -431,15 +599,17 @@ class ReplicaBackend(_BackendBase):
             sb.record_batch(q_embs, full_ids, vecs, state,
                             tenant_ids=tenant_ids, ingest_key=ingest_key)
 
-    def ingest_docs(self, vecs, ids=None, *, ingest_key=None):
-        """Live-corpus ingest passthrough (an ``IVFBackend`` inner): the
-        inner index reconciles, and this wrapper refreshes its host corpus
-        mirror so later ``on_ingest`` gathers see the new rows."""
+    def ingest_docs(self, vecs, ids=None, *, ingest_key=None, **kw):
+        """Live-corpus ingest passthrough (an ``IVFBackend`` or
+        ``HybridBackend`` inner): the inner index reconciles, and this
+        wrapper refreshes its host corpus mirror so later ``on_ingest``
+        gathers see the new rows.  Extra kwargs (e.g. the hybrid backend's
+        ``terms``/``term_weights``) pass through untouched."""
         inner_ingest = getattr(self.inner, "ingest_docs", None)
         if inner_ingest is None:
             raise AttributeError(
                 f"{type(self.inner).__name__} has no ingest_docs")
-        out = inner_ingest(vecs, ids, ingest_key=ingest_key)
+        out = inner_ingest(vecs, ids, ingest_key=ingest_key, **kw)
         inner_np = getattr(self.inner, "_corpus_np", None)
         if inner_np is not None:
             self._corpus_np = inner_np
@@ -497,14 +667,29 @@ class RetrievalService:
             self.latency.calibrate((time.perf_counter() - t0) / 3,
                                    world.cfg.n_docs)
 
-    def full_search(self, q_emb: np.ndarray):
+    def _term_kw(self, q_terms, q_term_weights) -> dict:
+        """Forward query terms only to backends that score them."""
+        if q_terms is None or not getattr(self.backend, "uses_lexical", False):
+            return {}
+        return dict(q_terms=jnp.asarray(q_terms),
+                    q_term_weights=(None if q_term_weights is None
+                                    else jnp.asarray(q_term_weights)))
+
+    def full_search(self, q_emb: np.ndarray, q_terms=None,
+                    q_term_weights=None):
         """Exact full-database search; returns (ids [k], vecs [k,d], t_comp)."""
-        s, ids = self.backend.search(jnp.asarray(q_emb)[None])
+        kw = self._term_kw(None if q_terms is None else
+                           np.asarray(q_terms)[None],
+                           None if q_term_weights is None else
+                           np.asarray(q_term_weights)[None])
+        s, ids = self.backend.search(jnp.asarray(q_emb)[None], **kw)
         ids = np.asarray(ids[0])
         t = self.backend.latency(1)
         return ids, np.asarray(self.corpus[ids]), t
 
-    def full_search_batch(self, q_embs) -> tuple[np.ndarray, float]:
+    def full_search_batch(self, q_embs, q_terms=None,
+                          q_term_weights=None) -> tuple[np.ndarray, float]:
         """Coalesced exact search for [B, d]; returns (ids [B,k], t_comp)."""
-        _, ids = self.backend.search(jnp.asarray(q_embs))
+        kw = self._term_kw(q_terms, q_term_weights)
+        _, ids = self.backend.search(jnp.asarray(q_embs), **kw)
         return np.asarray(ids), self.backend.latency(len(q_embs))

@@ -166,7 +166,8 @@ class FullRetrievalEngine(ServeLoop):
     """Baseline: always full-database retrieval on the cloud."""
 
     def _step(self, q, rng, dataset):
-        ids, _, t = self.s.full_search(q["emb"])
+        ids, _, t = self.s.full_search(q["emb"], q.get("terms"),
+                                       q.get("term_weights"))
         return ids, False, self.s.latency.sample_cloud() + t
 
 
@@ -268,7 +269,8 @@ class HasEngine(ServeLoop):
         return lat.scan_time(lat.target_corpus * self.fuzzy_scope * 2.0
                              + self.cfg.n_buckets)
 
-    def step(self, q_emb: np.ndarray, tenant: int = 0):
+    def step(self, q_emb: np.ndarray, tenant: int = 0, q_terms=None,
+             q_term_weights=None):
         """Returns (ids, accept, latency_s, homology)."""
         lat = self.s.latency.sample_edge()
         t0 = time.perf_counter()
@@ -289,7 +291,8 @@ class HasEngine(ServeLoop):
             vecs = np.asarray(self.s.corpus[ids])
             lat += self.s.latency.sample_cloud() + t
         else:
-            ids, vecs, t = self.s.full_search(q_emb)
+            ids, vecs, t = self.s.full_search(q_emb, q_terms,
+                                              q_term_weights)
             lat += self.s.latency.sample_cloud() + t
         t0 = time.perf_counter()
         self.state = cache_update(self.cfg, self.state, jnp.asarray(q_emb),
@@ -308,7 +311,9 @@ class HasEngine(ServeLoop):
 
     def _step(self, q, rng, dataset):
         ids, accept, lat, _ = self.step(q["emb"],
-                                        tenant=int(q.get("tenant", 0)))
+                                        tenant=int(q.get("tenant", 0)),
+                                        q_terms=q.get("terms"),
+                                        q_term_weights=q.get("term_weights"))
         return ids, accept, lat
 
 
@@ -346,7 +351,8 @@ class ReuseEngine(ServeLoop):
         if ok:
             ids = np.asarray(self.state.doc_ids[int(slot)])
         else:
-            ids, vecs, t = self.s.full_search(q["emb"])
+            ids, vecs, t = self.s.full_search(q["emb"], q.get("terms"),
+                                              q.get("term_weights"))
             lat += self.s.latency.sample_cloud() + t
             scores = np.asarray(self.s.corpus[ids] @ q["emb"])
             self.state = reuse_insert(
@@ -382,7 +388,8 @@ class CRAGEngine(HasEngine):
         accept = self.evaluator.evaluate(rng, golden, dataset == "popqa")
         if accept:
             return draft, True, lat
-        ids, vecs, t = self.s.full_search(q["emb"])
+        ids, vecs, t = self.s.full_search(q["emb"], q.get("terms"),
+                                          q.get("term_weights"))
         lat += self.s.latency.sample_cloud() + t
         self.state = cache_update(
             self.cfg, self.state, jnp.asarray(q["emb"]),

@@ -102,6 +102,23 @@ class LatencyModel:
         s = max(1, int(n_shards))
         return 1.0 / s + self.shard_merge_overhead * (s - 1)
 
+    def hybrid_scale(self, dense_scale: float, lexical_terms: int,
+                     pool: int) -> float:
+        """Multiplier on ``full_scan_time()`` for the hybrid cloud stage
+        (``HybridBackend``): the dense channel at its own multiplier
+        (1.0 flat, ``shard_scale`` sharded, ``ann_scale`` ANN), PLUS the
+        lexical postings stream — ``lexical_terms`` slots of (int32 term id
+        + f32 weight) = 8 bytes per doc, charged relative to the 4·d-byte
+        dense row the full scan streams — PLUS the fused rerank of the
+        ``pool`` (= kd + kl) surviving candidates per query: a pool-sized
+        pairwise-similarity pass and one pool x d rerank matmul, tiny next
+        to either channel but charged so the fusion stage is never
+        modeled as free."""
+        lex = lexical_terms * 8.0 / (self.d * 4.0)
+        p = max(1, int(pool))
+        fuse = p * (p + self.d) / float(self.target_corpus)
+        return float(dense_scale) + lex + fuse
+
     def calibrate(self, measured_s: float, n_vectors: int,
                   bytes_per_dim: int = 4) -> None:
         """Set effective bandwidth from one measured reference scan."""

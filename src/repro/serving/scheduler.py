@@ -1201,7 +1201,23 @@ class ContinuousBatchingScheduler:
                 r.spans["cloud_queue"] += t - r.t_rejected
             # one coalesced backend dispatch retrieves every leader; the
             # pool slot stays busy for the modeled service time
-            _, ids_full = self.s.backend.search(jnp.asarray(embs))
+            term_kw = {}
+            if getattr(self.s.backend, "uses_lexical", False):
+                # hybrid cloud stage: thread each leader's query terms into
+                # the same dispatch (fixed width keeps the jit cache warm;
+                # empty slots stay -1/0 and the lexical channel ignores them)
+                tw_w = self.s.backend.q_term_width
+                terms = np.full((sc.full_batch, tw_w), -1, np.int32)
+                tws = np.zeros((sc.full_batch, tw_w), np.float32)
+                for j, r in enumerate(batch):
+                    qt = np.asarray(r.q.get("terms", ()), np.int32)[:tw_w]
+                    qw = np.asarray(
+                        r.q.get("term_weights", ()), np.float32)[:tw_w]
+                    terms[j, :qt.shape[0]] = qt
+                    tws[j, :qw.shape[0]] = qw
+                term_kw = dict(q_terms=jnp.asarray(terms),
+                               q_term_weights=jnp.asarray(tws))
+            _, ids_full = self.s.backend.search(jnp.asarray(embs), **term_kw)
             ids_full = np.asarray(ids_full)
             if not fault_mode:
                 cloud = rtt_rng.uniform(*lat.cloud_rtt) + self._full_time(b)

@@ -1,0 +1,441 @@
+"""Hybrid lexical+dense retrieval with single-dispatch fused RRF reranking.
+
+Covers the lexical-score and fused-rerank kernels against their XLA oracles
+(bit-parity, including adversarial empty postings rows, all-invalid pools
+and cross-channel duplicate ids), the ``HybridBackend`` one-dispatch-per-
+batch probe on both scan backends, the rank-domain monotone-invariance
+property of RRF fusion and of the fused-list homology validation
+(``HasConfig.fusion == "rrf"``), live ingest threading both channels,
+``ReplicaBackend`` composition, the serve-CLI knob validation, and the
+scheduler end-to-end doc-hit lift on a corrupted-dense-embedding corpus.
+
+The CI `hybrid-fusion` job runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` alongside the
+``benchmarks/sched_throughput.py --sweep-fusion`` verdicts.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import dispatch
+from repro.core.has import HasConfig, _rrf_merge
+from repro.core.homology import (homology_scores_weighted, rrf_draft_weights)
+from repro.data.synthetic import DATASETS, SyntheticWorld, WorldConfig
+from repro.kernels import ops, ref
+from repro.retrieval.lexical import (attr_term, build_doc_terms, entity_term,
+                                     lexical_topk, query_terms)
+from repro.retrieval.service import (HybridBackend, LocalFlatBackend,
+                                     ReplicaBackend, RetrievalService)
+from repro.serving.latency import LatencyModel
+
+
+@functools.lru_cache(maxsize=1)
+def _world():
+    return SyntheticWorld(WorldConfig(n_entities=240, seed=0))
+
+
+def _query_batch(world, n, seed=3):
+    qs = world.sample_queries(n, seed=seed)
+    embs = jnp.asarray(np.stack([q["emb"] for q in qs]))
+    terms = jnp.asarray(np.stack([q["terms"] for q in qs]).astype(np.int32))
+    tws = jnp.asarray(np.stack([q["term_weights"]
+                                for q in qs]).astype(np.float32))
+    return qs, embs, terms, tws
+
+
+# -- lexical-score kernel <-> oracle parity --------------------------------
+
+def test_lexical_kernel_parity_adversarial():
+    """Bit-parity on postings with empty (-1) rows, docs with no matching
+    term, and an odd tail tile; no-match rows surface as -inf / -1."""
+    rng = np.random.default_rng(0)
+    n, l_w, b, t, k = 700, 3, 6, 2, 8       # n not a tile multiple
+    doc_terms = rng.integers(0, 50, size=(n, l_w)).astype(np.int32)
+    doc_w = rng.uniform(0.1, 1.0, size=(n, l_w)).astype(np.float32)
+    doc_terms[::7] = -1                      # empty postings rows
+    doc_w[doc_terms < 0] = 0.0
+    q_terms = rng.integers(0, 50, size=(b, t)).astype(np.int32)
+    q_w = rng.uniform(0.1, 1.0, size=(b, t)).astype(np.float32)
+    q_terms[0] = -1                          # term-less query row
+    vk, ik = ops.lexical_score(jnp.asarray(q_terms), jnp.asarray(q_w),
+                               jnp.asarray(doc_terms), jnp.asarray(doc_w),
+                               k, tile_n=256, interpret=True)
+    vr, ir = ref.lexical_score_ref(jnp.asarray(q_terms), jnp.asarray(q_w),
+                                   jnp.asarray(doc_terms),
+                                   jnp.asarray(doc_w), k, tile_n=256)
+    assert np.array_equal(np.asarray(vk), np.asarray(vr))
+    assert np.array_equal(np.asarray(ik), np.asarray(ir))
+    assert np.all(np.asarray(ik)[0] == -1)   # term-less query matches nothing
+    assert not np.isin(np.arange(0, n, 7), np.asarray(ik)).any()
+
+
+def test_lexical_channel_ranks_golden_docs_first():
+    """A query's (entity, attr) terms rank that entity's attr-covering docs
+    above its other docs — scores 1.49 vs 1.0 (module docstring)."""
+    w = _world()
+    e = int(w.doc_entity[0])
+    attr = int(np.flatnonzero(w.entity_attrs[e])[0])
+    qt, qw = query_terms(e, attr)
+    vals, idx = lexical_topk(jnp.asarray(qt)[None], jnp.asarray(qw)[None],
+                             jnp.asarray(w.doc_terms),
+                             jnp.asarray(w.doc_term_weights), 5,
+                             backend="xla")
+    idx = np.asarray(idx)[0]
+    assert (w.doc_entity[idx] == e).all()
+    top = idx[np.asarray(vals)[0] >= 1.4]
+    assert len(top) and w.doc_attr_mask[top, attr].all()
+
+
+def test_lexical_hash_disperses():
+    """Entity and pair terms must not collide trivially (same entity's
+    attr terms differ from its entity term and from each other)."""
+    e = np.arange(64)
+    assert len(set(entity_term(e).tolist())) == 64
+    a0, a1 = attr_term(e, 0), attr_term(e, 1)
+    assert not np.any(a0 == a1)
+    assert not np.any(entity_term(e) == a0)
+
+
+# -- fused-rerank kernel <-> oracle parity ---------------------------------
+
+@pytest.mark.parametrize("dsim", [None, 0.9])
+def test_fused_rerank_parity_adversarial(dsim):
+    """Bit-parity incl. an all-invalid pool and cross-channel dup ids."""
+    rng = np.random.default_rng(1)
+    b, d, kd, kl, k = 8, 16, 6, 6, 5
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    ids = rng.integers(0, 30, size=(b, kd + kl)).astype(np.int32)
+    ids[0, :] = -1                           # nothing retrieved at all
+    ids[1, kd:] = ids[1, :kl]                # lexical repeats dense exactly
+    vecs = rng.normal(size=(b, kd + kl, d)).astype(np.float32)
+    vecs[ids < 0] = 0.0
+    vk, ik = ops.fused_rerank(q, jnp.asarray(ids), jnp.asarray(vecs),
+                              kd=kd, k=k, rrf_k=60.0, diversify_sim=dsim,
+                              interpret=True)
+    vr, ir = ref.fused_rerank_ref(q, jnp.asarray(ids), jnp.asarray(vecs),
+                                  kd=kd, k=k, rrf_k=60.0,
+                                  diversify_sim=dsim)
+    assert np.array_equal(np.asarray(vk), np.asarray(vr))
+    assert np.array_equal(np.asarray(ik), np.asarray(ir))
+    assert np.all(np.asarray(ik)[0] == -1)   # empty pool -> empty result
+    out1 = np.asarray(ik)[1]
+    ids1 = out1[out1 >= 0]
+    assert len(ids1) == len(set(ids1.tolist()))   # dups served at most once
+
+
+def test_fused_rerank_duplicate_mass_wins():
+    """A doc in BOTH channels outranks same-rank single-channel docs: its
+    RRF mass is the sum of both occurrences."""
+    d, kd, kl = 8, 3, 3
+    q = jnp.zeros((1, d))
+    # dense [10, 11, 12], lexical [20, 10, 21]: doc 10 holds rank 0 dense +
+    # rank 1 lexical -> mass 1/60 + 1/61, beating every single occurrence
+    ids = jnp.asarray(np.array([[10, 11, 12, 20, 10, 21]], np.int32))
+    vecs = jnp.asarray(np.eye(kd + kl, d, dtype=np.float32))[None]
+    vals, out = ref.fused_rerank_ref(q, ids, vecs, kd=kd, k=4, rrf_k=60.0)
+    out, vals = np.asarray(out)[0], np.asarray(vals)[0]
+    assert out[0] == 10
+    assert np.isclose(vals[0], 1 / 60.0 + 1 / 61.0)
+
+
+def test_fused_rerank_mass_ordering_monotone_invariant():
+    """The fused ordering is pure rank domain: replacing either channel's
+    raw scores with any positive monotone transform leaves the channel
+    top-k ids — and therefore the fused output — bit-identical."""
+    rng = np.random.default_rng(2)
+    n, d, k = 120, 12, 6
+    dense_raw = rng.normal(size=n)
+    lex_raw = rng.uniform(0.1, 5.0, size=n)
+    corpus = rng.normal(size=(n, d)).astype(np.float32)
+    q = jnp.asarray(rng.normal(size=(1, d)).astype(np.float32))
+
+    def fused(ds, ls):
+        i_d = np.argsort(-ds, kind="stable")[:k].astype(np.int32)
+        i_l = np.argsort(-ls, kind="stable")[:k].astype(np.int32)
+        ids = np.concatenate([i_d, i_l])[None]
+        vecs = corpus[ids[0]][None]
+        _, out = ref.fused_rerank_ref(q, jnp.asarray(ids),
+                                      jnp.asarray(vecs), kd=k, k=k,
+                                      rrf_k=60.0, diversify_sim=0.95)
+        return np.asarray(out)
+
+    base = fused(dense_raw, lex_raw)
+    for f_d, f_l in ((np.exp, np.tanh),
+                     (lambda x: 3.0 * x + 7.0, np.exp),
+                     (np.tanh, lambda x: x ** 3)):
+        assert np.array_equal(base, fused(f_d(dense_raw), f_l(lex_raw)))
+
+
+# -- HybridBackend: parity, dispatch discipline, degradation ---------------
+
+@pytest.mark.parametrize("dense", ["flat", "sharded", "ann"])
+def test_hybrid_backend_pallas_xla_bit_parity(dense):
+    w = _world()
+    corpus = jnp.asarray(w.doc_emb)
+    lat = LatencyModel()
+    _, embs, terms, tws = _query_batch(w, 16)
+    outs = {}
+    for be in ("pallas", "xla"):
+        hb = HybridBackend(corpus, 10, lat, w.doc_terms,
+                           w.doc_term_weights, dense=dense, backend=be,
+                           n_shards=2)
+        s, i = hb.search(embs, q_terms=terms, q_term_weights=tws)
+        outs[be] = (np.asarray(s), np.asarray(i))
+    assert np.array_equal(outs["pallas"][0], outs["xla"][0])
+    assert np.array_equal(outs["pallas"][1], outs["xla"][1])
+
+
+@pytest.mark.parametrize("be", ["pallas", "xla"])
+@pytest.mark.parametrize("dense", ["flat", "ann"])
+def test_hybrid_single_dispatch_per_batch(be, dense):
+    """Channel scans + RRF fusion + diversification + rerank cost exactly
+    ONE host dispatch per warm [B, d] batch at B=32."""
+    w = _world()
+    lat = LatencyModel()
+    hb = HybridBackend(jnp.asarray(w.doc_emb), 10, lat, w.doc_terms,
+                       w.doc_term_weights, dense=dense, backend=be)
+    _, embs, terms, tws = _query_batch(w, 32)
+    hb.search(embs, q_terms=terms,
+              q_term_weights=tws)[1].block_until_ready()        # warm jit
+    with dispatch.capture() as cpt:
+        hb.search(embs, q_terms=terms,
+                  q_term_weights=tws)[1].block_until_ready()
+    assert cpt.total() == 1, dict(cpt.counts())
+
+
+def test_hybrid_termless_degrades_to_dense():
+    """Queries without term arrays (warmup, embedding-only engines) run
+    the same program with an inert lexical channel: with diversification
+    off the fused list is exactly the dense top-k."""
+    w = _world()
+    lat = LatencyModel()
+    corpus = jnp.asarray(w.doc_emb)
+    _, embs, _, _ = _query_batch(w, 8)
+    hb = HybridBackend(corpus, 10, lat, w.doc_terms, w.doc_term_weights,
+                       diversify_sim=None, backend="xla")
+    _, ids_h = hb.search(embs)
+    _, ids_d = LocalFlatBackend(corpus, 10, lat).search(embs)
+    assert np.array_equal(np.asarray(ids_h), np.asarray(ids_d))
+
+
+def test_hybrid_latency_model_and_knob_validation():
+    w = _world()
+    lat = LatencyModel()
+    corpus = jnp.asarray(w.doc_emb)
+    hb = HybridBackend(corpus, 10, lat, w.doc_terms, w.doc_term_weights)
+    # hybrid = dense channel + postings stream + fusion: strictly more
+    # expensive than the flat dense-only scan, but within the bench budget
+    flat = LocalFlatBackend(corpus, 10, lat)
+    assert flat.latency(1) < hb.latency(1) <= 1.25 * flat.latency(1)
+    # narrower postings cost less
+    hb1 = HybridBackend(corpus, 10, lat, w.doc_terms, w.doc_term_weights,
+                        lexical_terms=1)
+    assert hb1.latency(1) < hb.latency(1)
+    with pytest.raises(ValueError):
+        HybridBackend(corpus, 10, lat, w.doc_terms, w.doc_term_weights,
+                      rrf_k=0.5)
+    with pytest.raises(ValueError):
+        HybridBackend(corpus, 10, lat, w.doc_terms, w.doc_term_weights,
+                      diversify_sim=1.5)
+    with pytest.raises(ValueError):
+        HybridBackend(corpus, 10, lat, w.doc_terms, w.doc_term_weights,
+                      dense="faiss")
+    with pytest.raises(ValueError):
+        HybridBackend(corpus, 10, lat, w.doc_terms[:10],
+                      w.doc_term_weights[:10])
+
+
+# -- live ingest & composition ---------------------------------------------
+
+def test_hybrid_ingest_threads_both_channels():
+    w = _world()
+    lat = LatencyModel()
+    rng = np.random.default_rng(5)
+    hb = HybridBackend(jnp.asarray(w.doc_emb), 10, lat, w.doc_terms,
+                       w.doc_term_weights, backend="xla")
+    n0 = hb._corpus_np.shape[0]
+    new_vec = rng.normal(size=(1, w.cfg.d)).astype(np.float32)
+    new_term = np.array([[999_983]], np.int32)     # unique hashed term
+    got = hb.ingest_docs(new_vec, terms=new_term, ingest_key="k0")
+    assert got.tolist() == [n0]
+    # idempotent on the same ingest key
+    assert hb.ingest_docs(new_vec, terms=new_term,
+                          ingest_key="k0").tolist() == [n0]
+    assert hb._corpus_np.shape[0] == hb._terms_np.shape[0] == n0 + 1
+    # a query carrying ONLY the new term finds the new doc lexically
+    q = jnp.asarray(rng.normal(size=(1, w.cfg.d)).astype(np.float32))
+    _, ids = hb.search(q, q_terms=jnp.asarray(new_term))
+    assert n0 in np.asarray(ids)[0].tolist()
+    # non-sequential ids violate the postings-row == doc-id contract
+    with pytest.raises(ValueError):
+        hb.ingest_docs(new_vec, ids=np.array([n0 + 5], np.int32))
+
+
+def test_replica_composition_and_service_forwarding():
+    w = _world()
+    lat = LatencyModel()
+    corpus = jnp.asarray(w.doc_emb)
+    hb = HybridBackend(corpus, 10, lat, w.doc_terms, w.doc_term_weights,
+                       backend="xla")
+    rb = ReplicaBackend(hb, [], corpus)
+    assert rb.uses_lexical and rb.q_term_width == hb.q_term_width
+    qs, embs, terms, tws = _query_batch(w, 4)
+    _, want = hb.search(embs, q_terms=terms, q_term_weights=tws)
+    _, got = rb.search(embs, q_terms=terms, q_term_weights=tws)
+    assert np.array_equal(np.asarray(want), np.asarray(got))
+    # RetrievalService forwards terms only to lexical-aware backends
+    svc = RetrievalService(w, lat, k=10, backend=hb)
+    ids, vecs, t = svc.full_search(qs[0]["emb"], qs[0]["terms"],
+                                   qs[0]["term_weights"])
+    assert np.array_equal(ids, np.asarray(want)[0])
+    assert t == hb.latency(1)
+    flat = RetrievalService(w, lat, k=10)
+    ids_f, _, _ = flat.full_search(qs[0]["emb"], qs[0]["terms"],
+                                   qs[0]["term_weights"])  # silently dropped
+    assert ids_f.shape == (10,)
+
+
+# -- fused-list speculation (HasConfig.fusion == "rrf") --------------------
+
+def test_hasconfig_fusion_default_is_score():
+    """The default keeps every pre-hybrid HaS program byte-identical."""
+    cfg = HasConfig()
+    assert cfg.fusion == "score" and cfg.rrf_k == 60.0
+
+
+def test_rrf_merge_and_weighted_homology_monotone_invariant():
+    """Fused-list speculation is rank-domain end to end: any positive
+    monotone transform of either channel's raw scores leaves the merged
+    draft ids AND the weighted homology accept decision unchanged."""
+    rng = np.random.default_rng(7)
+    n, k, h = 80, 8, 16
+    dense_raw = rng.normal(size=n)
+    lex_raw = rng.uniform(0.0, 3.0, size=n)
+    cache = rng.integers(0, n, size=(h, k)).astype(np.int32)
+    valid = jnp.asarray(np.ones(h, bool))
+
+    def decide(ds, ls):
+        i_a = jnp.asarray(np.argsort(-ds, kind="stable")[:k].astype(np.int32))
+        i_b = jnp.asarray(np.argsort(-ls, kind="stable")[:k].astype(np.int32))
+        _, ids = _rrf_merge(i_a, i_b, k, 60.0)
+        s = homology_scores_weighted(ids, jnp.asarray(cache), valid,
+                                     rrf_draft_weights(ids, 60.0))
+        return np.asarray(ids), float(np.max(np.asarray(s)))
+
+    ids0, best0 = decide(dense_raw, lex_raw)
+    for f_d, f_l in ((np.exp, lambda x: 2.0 * x + 1.0),
+                     (np.tanh, np.exp),
+                     (lambda x: x ** 3, np.tanh)):
+        ids1, best1 = decide(f_d(dense_raw), f_l(lex_raw))
+        assert np.array_equal(ids0, ids1)
+        assert best0 == best1
+
+
+def test_rrf_merge_drops_nothing_and_dedups():
+    """_rrf_merge: cross-list duplicates keep ONE slot (summed mass), -1
+    padding stays inert, empty merge -> all -1."""
+    i_a = jnp.asarray(np.array([3, 5, 9, -1], np.int32))
+    i_b = jnp.asarray(np.array([5, 2, 3, 7], np.int32))
+    vals, ids = _rrf_merge(i_a, i_b, 4, 60.0)
+    ids = np.asarray(ids)
+    assert len(set(ids.tolist())) == 4 and -1 not in ids
+    assert ids[0] == 5 and ids[1] == 3      # double-mass docs lead
+    assert np.all(np.diff(np.asarray(vals)) <= 0)
+    _, empty = _rrf_merge(jnp.full((4,), -1, jnp.int32),
+                          jnp.full((4,), -1, jnp.int32), 4, 60.0)
+    assert np.all(np.asarray(empty) == -1)
+
+
+@pytest.mark.parametrize("be", ["pallas", "xla"])
+def test_speculate_batch_rrf_mode_backend_parity(be):
+    from repro.core.has import (cache_update, init_has_state,
+                                speculate_batch)
+    from repro.retrieval.ivf import build_ivf
+    w = _world()
+    corpus = jnp.asarray(w.doc_emb)
+    idx = build_ivf(corpus, 32, seed=0)
+    cfg = HasConfig(k=10, h_max=64, doc_capacity=640, n_buckets=32,
+                    nprobe=8, fusion="rrf")
+    st = init_has_state(cfg)
+    _, embs, _, _ = _query_batch(w, 12, seed=9)
+    ids = jnp.asarray(np.arange(10, dtype=np.int32))
+    st = cache_update(cfg, st, embs[0], ids, corpus[np.arange(10)])
+    out = speculate_batch(cfg, st, idx, embs, backend=be)
+    oracle = speculate_batch(cfg, st, idx, embs, backend="xla")
+    assert np.array_equal(np.asarray(out["accept"]),
+                          np.asarray(oracle["accept"]))
+    assert np.allclose(np.asarray(out["homology"]),
+                       np.asarray(oracle["homology"]), atol=1e-6)
+    # weighted validation stays in [0, 1] so the score-mode tau applies
+    assert float(np.max(np.asarray(out["homology"]))) <= 1.0 + 1e-6
+
+
+# -- scheduler end-to-end: the reason the second channel exists ------------
+
+def test_scheduler_hybrid_beats_dense_on_corrupted_corpus():
+    """With a third of the entities' dense embeddings replaced by noise
+    (postings intact), the scheduler serving through HybridBackend must
+    recover doc-hit the dense-only backend cannot."""
+    from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                         SchedulerConfig)
+    w = _world()
+    lat = LatencyModel()
+    rng = np.random.default_rng(11)
+    bad_entities = rng.choice(w.cfg.n_entities, size=w.cfg.n_entities // 3,
+                              replace=False)
+    bad = np.isin(w.doc_entity, bad_entities)
+    corrupted = w.doc_emb.copy()
+    noise = rng.normal(size=(int(bad.sum()), w.cfg.d)).astype(np.float32)
+    corrupted[bad] = noise / np.maximum(
+        np.linalg.norm(noise, axis=1, keepdims=True), 1e-8)
+    corrupted = jnp.asarray(corrupted)
+    ds = DATASETS["granola"]
+    qs = w.sample_queries(96, pattern=ds["pattern"], zipf_a=ds["zipf_a"],
+                          p_uncovered=ds["p_uncovered"], seed=13)
+    cfg = HasConfig(k=10, tau=0.2, h_max=96, nprobe=4, n_buckets=64, d=64)
+    hits = {}
+    for name, be in (
+            ("dense", LocalFlatBackend(corrupted, 10, lat)),
+            ("hybrid", HybridBackend(corrupted, 10, lat, w.doc_terms,
+                                     w.doc_term_weights, backend="xla"))):
+        svc = RetrievalService(w, lat, k=10, backend=be)
+        sched = ContinuousBatchingScheduler(
+            svc, cfg, SchedulerConfig(max_spec_batch=16, full_batch=8,
+                                      full_max_wait_s=0.05))
+        r = sched.serve(qs, None, seed=0)
+        hits[name] = float(np.mean(r.doc_hits))
+    assert hits["hybrid"] >= hits["dense"] + 0.05, hits
+
+
+# -- launch/serve.py knob validation (satellite) ---------------------------
+
+@pytest.mark.parametrize("argv", [
+    ["--retrieval-backend", "hybrid", "--rrf-k", "0.5"],
+    ["--retrieval-backend", "hybrid", "--diversify-sim", "0"],
+    ["--retrieval-backend", "hybrid", "--diversify-sim", "1.5"],
+    ["--retrieval-backend", "hybrid", "--lexical-terms", "0"],
+    ["--rrf-k", "60"],                                 # flat backend
+    ["--diversify-sim", "0.9", "--retrieval-backend", "ann"],
+    ["--lexical-terms", "2", "--retrieval-backend", "sharded"],
+    ["--hybrid-dense", "ann"],                         # without hybrid
+    ["--compressed-corpus", "--retrieval-backend", "hybrid"],  # flat dense
+])
+def test_serve_cli_rejects_invalid_hybrid_args(argv):
+    from repro.launch.serve import main
+    with pytest.raises(SystemExit) as e:
+        main(argv)
+    assert e.value.code == 2                  # argparse usage error
+
+
+def test_serve_cli_accepts_hybrid_combo():
+    """The documented hybrid invocation must run end-to-end on a tiny
+    world (ANN dense channel + scheduler engine + all three knobs)."""
+    from repro.launch.serve import main
+    main(["--queries", "24", "--entities", "120", "--h-max", "60",
+          "--engine", "sched", "--retrieval-backend", "hybrid",
+          "--hybrid-dense", "ann", "--ann-clusters", "8", "--nprobe", "4",
+          "--rrf-k", "30", "--diversify-sim", "0.95",
+          "--lexical-terms", "2", "--workers", "2"])
