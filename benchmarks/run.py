@@ -12,10 +12,10 @@ import time
 
 def main() -> None:
     from benchmarks import (fig11_k_sweep, fig13_agentic, retrieval_roofline,
-                            sched_throughput, table2_anns, table3_reuse,
-                            table5_scattered, table6_fuzzy_ablation,
-                            table7_compression, table8_tau_encoders,
-                            table9_cache_size)
+                            sched_agentic, sched_throughput, table2_anns,
+                            table3_reuse, table5_scattered,
+                            table6_fuzzy_ablation, table7_compression,
+                            table8_tau_encoders, table9_cache_size)
     from benchmarks.common import fmt_rows
 
     modules = [
@@ -30,6 +30,7 @@ def main() -> None:
         ("fig13_agentic (Fig 13)", fig13_agentic),
         ("retrieval_roofline (Fig 1)", retrieval_roofline),
         ("sched_throughput (serving scheduler)", sched_throughput),
+        ("sched_agentic (agentic multi-hop serving)", sched_agentic),
     ]
     all_rows = []
     for name, mod in modules:

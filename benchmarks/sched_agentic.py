@@ -1,0 +1,249 @@
+"""Agentic multi-hop serving: hop graphs inside the scheduler, with verdicts.
+
+Four arms over the same complex-query population (serving/agentic.py):
+
+``seq/full``
+    The paper's Auto-RAG baseline — every hop a sequential full (cloud)
+    retrieval, reasoning charged per hop from
+    ``LatencyModel.reason_scale``.
+``seq/has``
+    HaS plugged into the same sequential pipeline (the paper's Fig-13
+    arm): per-hop speculation against the cache, full retrieval only on
+    rejects.  Measured at steady state — the engine first serves a
+    DISJOINT complex-query sample to warm the cache, as the paper's
+    deployed edge cache is warm when agentic traffic arrives; the
+    cold-start pass is reported as its own row.
+``sched/sequential``
+    The complex queries served through the continuous-batching scheduler
+    with cross-hop pre-speculation OFF (``speculate_hops=False``): hop
+    graphs resolve strictly serially on the virtual clock, but hops of
+    DIFFERENT complex queries still batch and share.
+``sched/pipelined``
+    Pre-speculation ON: hop h+1 launches from hop h's rejected draft's
+    bridge entity, racing hop h's validation / full retrieval;
+    mis-speculations cancel deterministically and re-enqueue corrected.
+
+Verdicts (written to ``BENCH_agentic.json``):
+
+``sequential_cut``
+    ``seq/has`` reproduces the paper's Fig-13 sequential cut over
+    ``seq/full``.  The magnitude tracks the workload's sub-query
+    redundancy, which a zipf draw over a synthetic entity set only
+    brackets: the disjoint-warm arm must cut at least ``SEQ_CUT_BOUND``
+    (same sign-level convention ``benchmarks/paper_compare.py`` applies
+    to the fig13 row), and the high-redundancy steady-state arm
+    (``seq/has_steady``, every sub-query seen before — the regime of
+    the paper's −69.4%) must cut PAST the paper's number, so the two
+    arms bracket it.
+``pipelining``
+    ``sched/pipelined`` complex-query e2e latency is STRICTLY below
+    ``sched/sequential`` at equal DAR/accuracy (within ``DAR_TOL`` /
+    ``ACC_TOL``) — the cross-hop head start is a real win, not a
+    quality trade — with the pre-speculation hit rate reported.
+``empty_trace``
+    A trace with no agentic requests is BIT-IDENTICAL to the pre-PR
+    golden hashes (tests/test_edge_pool.py fixture): the hop-graph
+    machinery adds zero rng draws, heap events and span charges when
+    nothing carries a ``hop_plan``.
+``conservation``
+    Per-stage span conservation stays exact (residual <= 1e-9) through
+    the new ``reason`` and ``cancelled`` paths of the pipelined run.
+
+Run standalone:  PYTHONPATH=src python -m benchmarks.sched_agentic
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+
+import numpy as np
+
+from benchmarks.common import FAST, get_service, has_config, row
+from repro.core.has import HasConfig
+from repro.data.synthetic import DATASETS, SyntheticWorld, WorldConfig
+from repro.serving.agentic import AutoRagPipeline, TwoHopDataset
+from repro.serving.engine import HasEngine, RetrievalService
+from repro.serving.latency import LatencyModel
+from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                     SchedulerConfig, poisson_arrivals)
+
+#: disjoint-warm seq/has must cut sequential retrieval latency at least
+#: this much (sign-level, matching paper_compare's fig13 convention);
+#: the steady-state arm must reach the paper's cut
+SEQ_CUT_BOUND = -0.2
+PAPER_FIG13_CUT = -0.694
+#: pipelined vs sequential DAR / answer-accuracy equality tolerances
+DAR_TOL = 0.08
+ACC_TOL = 0.08
+#: pre-PR golden trace hashes (tests/test_edge_pool.py, charged
+#: accounting) the empty-agentic run must reproduce bit-exactly
+GOLDEN_POISSON = ("ee529472ed19175fb3b357b75a2348a1",
+                  "ce77d205b924b6639b8b0e61f3e6f769",
+                  "bde019df4c7b6738d1b80507a91574ce")
+GOLDEN_SATURATED = ("818904a0aba858b52dc05f954ac76e94",
+                    "58946f966a201cd50552d6eb2613e47d",
+                    "3806ef068db5ea2db34da56effc252bd")
+
+
+def _hashes(r):
+    return (hashlib.md5(",".join(r.channels).encode()).hexdigest(),
+            hashlib.md5(np.round(r.t_done, 9).tobytes()).hexdigest(),
+            hashlib.md5(r.served_ids.tobytes()).hexdigest())
+
+
+def run(out_path: str = "BENCH_agentic.json"):
+    rows = []
+    svc = get_service()
+    ds = TwoHopDataset(svc.world, seed=0)
+    n = 300 if FAST else 900
+    cqs = ds.sample(n, seed=2)
+    cfg = has_config()
+
+    # ---- sequential arms (the paper's Fig-13 shape) ----------------------
+    base = AutoRagPipeline(ds, None, svc).run(cqs)
+    rows.append(row("agentic/seq/full", base["retrieval_latency"],
+                    f"acc={base['accuracy']:.4f};"
+                    f"e2e={base['e2e_latency']:.3f}s"))
+    has_pipe = AutoRagPipeline(ds, HasEngine(svc, cfg), svc)
+    cold = has_pipe.run(ds.sample(n, seed=9))  # disjoint warm-up sample
+    rows.append(row("agentic/seq/has_coldstart", cold["retrieval_latency"],
+                    f"acc={cold['accuracy']:.4f};dar={cold['dar']:.4f}"))
+    plug = has_pipe.run(cqs)
+    cut = (plug["retrieval_latency"] - base["retrieval_latency"]) \
+        / base["retrieval_latency"]
+    rows.append(row("agentic/seq/has", plug["retrieval_latency"],
+                    f"acc={plug['accuracy']:.4f};dar={plug['dar']:.4f};"
+                    f"dLat={cut:+.2%};e2e={plug['e2e_latency']:.3f}s"))
+    steady = has_pipe.run(cqs)
+    steady_cut = (steady["retrieval_latency"] - base["retrieval_latency"]) \
+        / base["retrieval_latency"]
+    rows.append(row("agentic/seq/has_steady", steady["retrieval_latency"],
+                    f"dar={steady['dar']:.4f};dLat={steady_cut:+.2%}"))
+    cut_ok = cut <= SEQ_CUT_BOUND and steady_cut <= PAPER_FIG13_CUT
+    rows.append(row(
+        "agentic/verdict_sequential_cut", 0.0,
+        f"{'PASS' if cut_ok else 'FAIL'}"
+        f"(dLat={cut:+.2%};bound={SEQ_CUT_BOUND:+.0%};"
+        f"steady={steady_cut:+.2%};paper={PAPER_FIG13_CUT:+.1%})"))
+
+    # ---- scheduler arms: same plans, open-loop arrivals ------------------
+    # moderate load relative to the edge's drain rate — every complex
+    # query spawns ~hops sub-queries, so the admitted rate is about
+    # hops x the hop-1 rate
+    probe = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig())
+    edge_rate = probe.sched.max_spec_batch / probe._spec_time(
+        probe.sched.max_spec_batch)
+    qps = 0.35 * edge_rate
+    arrivals = poisson_arrivals(n, qps=qps, seed=11)
+
+    def sched_arm(speculate: bool):
+        eng = ContinuousBatchingScheduler(
+            svc, cfg, SchedulerConfig(speculate_hops=speculate),
+            index=probe.index)
+        return AutoRagPipeline(ds, eng, svc).run(cqs, arrivals=arrivals)
+
+    seq = sched_arm(False)
+    pip = sched_arm(True)
+    s_seq = seq["sched_result"].summary()
+    s_pip = pip["sched_result"].summary()
+    rows.append(row(
+        "agentic/sched/sequential", seq["e2e_latency"],
+        f"acc={seq['accuracy']:.4f};dar={seq['dar']:.4f};"
+        f"retr={seq['retrieval_latency']:.3f}s;"
+        f"p95={s_seq['complex_e2e_p95_s']:.3f}s"))
+    rows.append(row(
+        "agentic/sched/pipelined", pip["e2e_latency"],
+        f"acc={pip['accuracy']:.4f};dar={pip['dar']:.4f};"
+        f"retr={pip['retrieval_latency']:.3f}s;"
+        f"p95={s_pip['complex_e2e_p95_s']:.3f}s;"
+        f"prespec={pip['hop2_prespec_rate']:.3f};"
+        f"prespec_hit={pip['hop2_prespec_hit_rate']:.3f};"
+        f"cancelled={s_pip['cancelled']}"))
+
+    # (b) pipelining: strictly faster at equal DAR/accuracy
+    speedup = 1.0 - pip["e2e_latency"] / seq["e2e_latency"]
+    pipe_ok = (pip["e2e_latency"] < seq["e2e_latency"]
+               and abs(pip["dar"] - seq["dar"]) <= DAR_TOL
+               and abs(pip["accuracy"] - seq["accuracy"]) <= ACC_TOL)
+    rows.append(row(
+        "agentic/verdict_pipelining", 0.0,
+        f"{'PASS' if pipe_ok else 'FAIL'}"
+        f"(e2e={pip['e2e_latency']:.3f}s<{seq['e2e_latency']:.3f}s;"
+        f"speedup={speedup:+.2%};"
+        f"dDAR={pip['dar'] - seq['dar']:+.4f};"
+        f"dAcc={pip['accuracy'] - seq['accuracy']:+.4f};"
+        f"prespec_hit={pip['hop2_prespec_hit_rate']:.3f})"))
+
+    # (d) conservation through reason + cancelled paths (hard invariant)
+    tr = pip["sched_result"].trace
+    resid = float(np.abs(tr.conservation_residual()).max())
+    cons_ok = resid <= 1e-9
+    assert cons_ok, f"span conservation violated on the agentic path: {resid}"
+    rows.append(row(
+        "agentic/verdict_conservation", 0.0,
+        f"{'PASS' if cons_ok else 'FAIL'}(residual={resid:.2e};"
+        f"reason={tr.spans['reason'].sum():.2f}s;"
+        f"cancelled={int(np.sum(pip['sched_result'].channels == 'cancelled'))})"))
+
+    # (c) zero-cost when unused: a plain trace reproduces the pre-PR
+    # golden hashes on the pinned fixture (small and FIXED — independent
+    # of BENCH_FAST, matching tests/test_edge_pool.py)
+    gworld = SyntheticWorld(WorldConfig(n_entities=400, seed=0))
+    gsvc = RetrievalService(gworld, LatencyModel(), k=10, chunk=2048)
+    gds = DATASETS["granola"]
+    gqs = gworld.sample_queries(160, pattern=gds["pattern"],
+                                zipf_a=gds["zipf_a"],
+                                p_uncovered=gds["p_uncovered"], seed=1)
+    gcfg = HasConfig(k=10, tau=0.2, h_max=400, nprobe=4, n_buckets=256,
+                     d=64)
+    gsched = ContinuousBatchingScheduler(gsvc, gcfg, SchedulerConfig(
+        max_spec_batch=16, full_batch=8, full_max_wait_s=0.1))
+    garr = poisson_arrivals(160, qps=30.0, seed=5)
+    h_poi = _hashes(gsched.serve(gqs, garr, seed=3))
+    h_sat = _hashes(gsched.serve(gqs, None, seed=3))
+    empty_ok = h_poi == GOLDEN_POISSON and h_sat == GOLDEN_SATURATED
+    rows.append(row(
+        "agentic/verdict_empty_trace", 0.0,
+        f"{'PASS' if empty_ok else 'FAIL'}"
+        f"(poisson={'==' if h_poi == GOLDEN_POISSON else '!='}golden;"
+        f"saturated={'==' if h_sat == GOLDEN_SATURATED else '!='}golden)"))
+
+    with open(out_path, "w") as f:
+        json.dump({
+            "n_complex": n,
+            "hops": 2,
+            "arrival_qps": qps,
+            "seq_full": base,
+            "seq_has_coldstart": cold,
+            "seq_has": plug,
+            "seq_has_steady": steady,
+            "seq_cut": cut,
+            "seq_cut_steady": steady_cut,
+            "sched_sequential": {k: v for k, v in seq.items()
+                                 if k != "sched_result"},
+            "sched_pipelined": {k: v for k, v in pip.items()
+                                if k != "sched_result"},
+            "pipelined_summary": {
+                k: (None if isinstance(v, float) and not np.isfinite(v)
+                    else v)
+                for k, v in s_pip.items()},
+            "speedup": speedup,
+            "conservation_residual": resid,
+            "verdicts": {"sequential_cut": bool(cut_ok),
+                         "pipelining": bool(pipe_ok),
+                         "empty_trace": bool(empty_ok),
+                         "conservation": bool(cons_ok)},
+        }, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import fmt_rows
+    ap = argparse.ArgumentParser(
+        description="Agentic multi-hop serving benchmark: sequential "
+                    "Fig-13 arms vs scheduler hop graphs with cross-hop "
+                    "pre-speculation; writes BENCH_agentic.json")
+    ap.add_argument("--out", default="BENCH_agentic.json")
+    args = ap.parse_args()
+    print(fmt_rows(run(out_path=args.out)))

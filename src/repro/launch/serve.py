@@ -34,6 +34,17 @@ drafts.  The result's per-stage virtual-clock breakdown (queue wait /
 replay / spec / edge RTT / reval / cloud queue / cloud / ingest / lost /
 retry backoff) is printed after the summary.
 
+Agentic multi-hop serving (``--engine sched`` only): ``--agentic-frac F``
+replaces a deterministic fraction F of the stream with COMPLEX multi-hop
+queries (``--hops H`` chain length, serving/agentic.py) that enter
+admission as their hop-1 sub-query; the scheduler resolves the hop graph
+on the virtual clock — reasoning charged to the ``reason`` span, the next
+hop pre-speculated from rejected drafts, mis-speculations cancelled
+deterministically — and the summary grows per-complex-query aggregates
+(chain e2e latency, DAR/accuracy, pre-speculation hit rates).
+``--agentic-frac 0`` leaves the stream bit-identical to a build without
+the hop-graph machinery.
+
 Chaos serving (``--engine sched`` only): ``--fault-plan SPEC`` injects a
 deterministic fault schedule on the virtual clock (serving/faults.py) —
 ``kind@t[,key=val]*`` events separated by ``;``, e.g.
@@ -116,6 +127,14 @@ def main(argv=None) -> None:
     ap.add_argument("--qps", type=float, default=None,
                     help="open-loop Poisson arrival rate for --engine "
                          "sched (omit for fully saturated admission)")
+    ap.add_argument("--agentic-frac", type=float, default=0.0,
+                    help="fraction of the stream served as complex "
+                         "multi-hop (Auto-RAG) queries for --engine sched "
+                         "(serving/agentic.py hop graphs inside the "
+                         "scheduler); 0 disables agentic traffic entirely")
+    ap.add_argument("--hops", type=int, default=2,
+                    help="chain length of the complex queries injected by "
+                         "--agentic-frac (2 == the paper's Fig-13 shape)")
     ap.add_argument("--slo-deadline", type=float, default=None,
                     help="end-to-end latency SLO in seconds for --engine "
                          "sched (reports goodput; required by "
@@ -218,6 +237,17 @@ def main(argv=None) -> None:
     if args.qps is not None and args.engine != "sched":
         ap.error("--qps only applies to --engine sched (the other engines "
                  "serve a closed loop)")
+    if not 0.0 <= args.agentic_frac <= 1.0:
+        ap.error(f"--agentic-frac must be in [0, 1] "
+                 f"(got {args.agentic_frac})")
+    if args.hops < 1:
+        ap.error(f"--hops must be >= 1 (got {args.hops}; a complex query "
+                 "is a chain of at least one hop)")
+    if args.agentic_frac > 0 and args.engine != "sched":
+        ap.error("--agentic-frac only applies to --engine sched (the "
+                 "hop-graph executor lives in the continuous-batching "
+                 "scheduler; use benchmarks/fig13_agentic.py for the "
+                 "sequential Auto-RAG pipeline)")
     if args.slo_deadline is not None and args.slo_deadline <= 0:
         ap.error(f"--slo-deadline must be > 0 (got {args.slo_deadline})")
     if ((args.slo_deadline is not None or args.overload_policy != "none")
@@ -326,6 +356,27 @@ def main(argv=None) -> None:
         for q, t in zip(queries, tenant_of):
             q["tenant"] = int(t)
 
+    n_agentic = 0
+    if args.engine == "sched" and args.agentic_frac > 0:
+        # deterministic mixed trace: a seeded draw picks which arrival
+        # slots become complex queries; each keeps its slot's tenant tag
+        # and enters admission as its hop-1 sub-query carrying the
+        # HopPlan continuation
+        from repro.serving.agentic import TwoHopDataset, build_hop_trace
+        n_agentic = int(round(args.agentic_frac * len(queries)))
+        if n_agentic:
+            ag_ds = TwoHopDataset(world, seed=args.seed)
+            cqs = ag_ds.sample(n_agentic, seed=args.seed + 4,
+                               hops=args.hops)
+            arng = np.random.default_rng(args.seed + 5)
+            slots = np.sort(arng.choice(len(queries), n_agentic,
+                                        replace=False))
+            hop1 = build_hop_trace(
+                ag_ds, cqs, seed=args.seed,
+                tenants=[int(queries[i].get("tenant", 0)) for i in slots])
+            for i, q in zip(slots, hop1):
+                queries[int(i)] = q
+
     if args.engine == "has":
         engine = HasEngine(svc, HasConfig(
             k=args.k, tau=args.tau, h_max=args.h_max,
@@ -382,7 +433,9 @@ def main(argv=None) -> None:
           f"(n_workers={svc.backend.n_workers}) tenants={args.tenants}"
           + (f" edge-replicas={args.edge_replicas}"
              f" sync-every={engine.sched.edge_sync_every}"
-             if args.engine == "sched" else ""))
+             if args.engine == "sched" else "")
+          + (f" agentic={n_agentic}/{args.queries} hops={args.hops}"
+             if n_agentic else ""))
     for k, v in result.summary().items():
         print(f"  {k:20s} {v:.4f}")
     trace = getattr(result, "trace", None)
@@ -395,6 +448,11 @@ def main(argv=None) -> None:
         tids = np.array([q["tenant"] for q in queries])
         print(f"  tenant histogram     "
               f"{np.bincount(tids, minlength=args.tenants).tolist()}")
+        # per-request slices must cover spawned hop sub-queries too (the
+        # sched result's population can exceed the input trace)
+        rtids = getattr(result, "tenant_ids", None)
+        if rtids is not None and len(rtids) == len(result.accepts):
+            tids = rtids
         for t in range(args.tenants):
             m = tids == t
             if m.any():

@@ -42,6 +42,13 @@ class LatencyModel:
     # over-sharding inflection (where adding shards stops helping) at
     # s ≈ sqrt(1/0.002) ≈ 22 shards.
     shard_merge_overhead: float = 0.002
+    # Agent reasoning time per hop of a multi-hop (Auto-RAG) query: the LLM
+    # call that turns one hop's retrieval into the next hop's sub-query (or
+    # the final answer).  The paper's Fig-13 pipeline charges one such step
+    # after every hop; both the sequential AutoRagPipeline baseline and the
+    # scheduler's hop-graph path draw it from HERE so the two arms are
+    # charged identically (serving/agentic.py).
+    reason_scale: float = 0.35
     seed: int = 0
 
     def __post_init__(self):
@@ -123,6 +130,13 @@ class LatencyModel:
                   bytes_per_dim: int = 4) -> None:
         """Set effective bandwidth from one measured reference scan."""
         self.bandwidth = n_vectors * self.d * bytes_per_dim / max(measured_s, 1e-9)
+
+    def reason_time(self) -> float:
+        """Per-hop agent reasoning (sub-query / answer synthesis) time.
+
+        Deterministic — no rng draw — so agentic traffic never perturbs the
+        RTT sample stream shared with non-agentic requests."""
+        return self.reason_scale
 
     def sample_cloud(self) -> float:
         return float(self._rng.uniform(*self.cloud_rtt))

@@ -134,6 +134,26 @@ conservation stays EXACT through every recovery path, and an empty/absent
 plan leaves the fault-free schedule bit-identical to the pre-PR goldens
 (no extra heap events, same rng draw order) — the zero-cost verdict
 ``benchmarks/sched_chaos.py`` pins.
+
+Agentic multi-hop serving (serving/agentic.py): a query carrying a
+``hop_plan`` continuation is the hop-1 sub-query of a COMPLEX multi-hop
+request.  When a hop resolves, the scheduler reasons out the bridge entity
+(``LatencyModel.reason_time()`` on the clock — the new ``reason`` span) and
+enqueues the next hop as a fresh tenant-tagged arrival; when a hop's DRAFT
+is rejected, the next hop is PRE-SPECULATED from the drafted bridge
+immediately (``SchedulerConfig.speculate_hops``), racing the hop's late
+re-validation / full retrieval, so cross-hop latency pipelines instead of
+serializing.  A mis-speculation (the validated bridge contradicts the
+drafted one) cancels the in-flight child deterministically wherever it
+lives — queued states settle at the cancel instant, dispatched cloud work
+settles on its completion path — on the new ``cancelled`` channel
+(sentinel ids, never ingested, spans conserved exactly), and the corrected
+hop re-enqueues.  ``SchedResult.complex_records`` / ``summary()`` /
+``per_tenant()`` report per-chain end-to-end latency, DAR/accuracy and
+pre-speculation hit rates.  A trace with no ``hop_plan`` queries takes
+none of these paths: zero extra rng draws, heap events and span charges —
+bit-identical to the pre-hop-graph goldens (the empty-trace verdict
+``benchmarks/sched_agentic.py`` pins).
 """
 from __future__ import annotations
 
@@ -257,6 +277,16 @@ class SchedulerConfig:
     #                                the shared D_full reranked by their
     #                                OWN query-doc scores; False keeps the
     #                                historical leader-ordered list
+    # -- agentic hop graphs (serving/agentic.py) ---------------------------
+    speculate_hops: bool = True    # cross-hop pre-speculation: launch hop
+    #                                h+1 from hop h's REJECTED draft's
+    #                                bridge entity, racing hop h's
+    #                                validation / full retrieval; False
+    #                                resolves hop graphs strictly
+    #                                sequentially (the scheduler-sequential
+    #                                baseline arm of benchmarks/
+    #                                sched_agentic.py).  Inert on traces
+    #                                with no hop_plan queries.
 
 
 def _safe_mean(a) -> float:
@@ -307,6 +337,21 @@ class SchedResult(ServeResult):
     worker_deaths: int = 0         # cloud-worker crash events handled
     replica_rebuilds: int = 0      # edge replicas rebuilt (crash recovery +
     #                                delta-gap full resyncs)
+    # -- agentic hop graphs (serving/agentic.py; all None/zeros when the
+    #    trace carried no hop_plan queries) -------------------------------
+    hop: np.ndarray | None = None          # hop index per request (0: plain
+    #                                        single-hop; spawned hop-h
+    #                                        sub-queries appended after the
+    #                                        input trace)
+    parent_root: np.ndarray | None = None  # owning complex query's hop-1
+    #                                        request index (-1: plain)
+    speculative: np.ndarray | None = None  # launched from an unconfirmed
+    #                                        drafted bridge AND never
+    #                                        confirmed authoritative
+    complex_records: list | None = None    # one record per complex query
+    #                                        (root_idx, e2e_s, dar,
+    #                                        accuracy, prespec[_hit],
+    #                                        cancelled, hop_idx, ...)
 
     def per_tenant(self) -> dict[int, dict[str, float]]:
         """Per-tenant metric slices (empty when served without tenants).
@@ -327,6 +372,18 @@ class SchedResult(ServeResult):
                 "full_retrievals": int(np.sum((self.channels == "full") & m)),
                 "shared_accepts": int(np.sum((self.channels == "shared") & m)),
             }
+            if self.complex_records is not None:
+                sel = [c for c in self.complex_records
+                       if c["tenant"] == int(t) and c["served"]]
+                out[int(t)].update({
+                    "hop_requests": int(np.sum((self.hop > 0) & m)),
+                    "complex_n": len(sel),
+                    "complex_e2e_avg_s": _safe_mean(
+                        [c["e2e_s"] for c in sel]),
+                    "complex_dar": _safe_mean([c["dar"] for c in sel]),
+                    "complex_accuracy": _safe_mean(
+                        [c["accuracy"] for c in sel]),
+                })
         return out
 
     def summary(self) -> dict[str, float]:
@@ -374,10 +431,50 @@ class SchedResult(ServeResult):
             out["goodput_qps"] = (int(good.sum()) / max(makespan, 1e-9)
                                   if len(lat) else 0.0)
             out["slo_attainment"] = _safe_mean(good[admitted])
+        if self.complex_records is not None:
+            # per-complex-query aggregation: end-to-end latency of the hop
+            # CHAIN (hop-1 arrival -> final answer, reasoning included),
+            # chain-level DAR/accuracy, and cross-hop pre-speculation
+            # telemetry (rate = complex queries whose next hop launched
+            # from a draft bridge; hit rate = drafted bridges the
+            # validated resolution confirmed)
+            recs = self.complex_records
+            fin = [c for c in recs if c["served"]]
+            e2e = np.array([c["e2e_s"] for c in fin])
+            multi = [c for c in fin if c["hops"] > 1]
+            pres = [c for c in multi if c["prespec"]]
+            out.update({
+                "cancelled": int(np.sum(self.channels == "cancelled")),
+                "complex_n": len(recs),
+                "complex_served": len(fin),
+                "complex_e2e_avg_s": _safe_mean(e2e),
+                "complex_e2e_p95_s": _safe_pct(e2e, 95),
+                "complex_retrieval_avg_s": _safe_mean(
+                    e2e - np.array([c["reason_s"] for c in fin])),
+                "complex_dar": _safe_mean([c["dar"] for c in fin]),
+                "complex_accuracy": _safe_mean(
+                    [c["accuracy"] for c in fin]),
+                "hop_prespec_rate": _safe_mean(
+                    [c["prespec"] for c in multi]),
+                "hop_prespec_hit_rate": _safe_mean(
+                    [bool(c["prespec_hit"]) for c in pres]),
+                "hops_cancelled": int(sum(c["cancelled"] for c in recs)),
+            })
+            # per-hop aggregation over the sub-request population
+            done = self.channels != "cancelled"
+            for h in range(1, int(self.hop.max()) + 1):
+                mh = (self.hop == h) & done
+                out[f"hop{h}_n"] = int(mh.sum())
+                out[f"hop{h}_avg_latency_s"] = _safe_mean(
+                    self.latencies[mh])
+                out[f"hop{h}_dar"] = _safe_mean(self.accepts[mh])
         return out
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)      # identity semantics: requests live in
+#                                       deques/registries and carry numpy
+#                                       fields a field-wise __eq__ would
+#                                       choke on
 class _Request:
     idx: int
     q: dict
@@ -406,6 +503,52 @@ class _Request:
     #                                        per-stage latency breakdown
     #                                        (serving/tracing.py STAGES);
     #                                        sums to t_done - t_arrive
+    # -- agentic hop graphs (serving/agentic.py) ---------------------------
+    hop: int = 0                           # hop index in a complex query's
+    #                                        chain (0: plain single-hop)
+    cq: Any = None                         # owning _HopGraph (hop requests)
+    speculative: bool = False              # launched from a DRAFT bridge,
+    #                                        not yet confirmed by the
+    #                                        parent hop's resolution
+    cancelled: bool = False                # mis-speculation cancel landed
+    t_cancel: float = -1.0                 # virtual time it landed
+    stage: str = "new"                     # lifecycle position (new/admit/
+    #                                        spec/cloudq/follower/cloud/
+    #                                        done) — how a cancel finds the
+    #                                        container holding the request
+    lead: Any = None                       # leader _Request (followers)
+    t_sdone: float = -1.0                  # in-flight speculation batch's
+    #                                        completion time (mid-spec
+    #                                        cancel claws back the tail)
+
+
+class _HopGraph:
+    """Serve-time state of ONE complex query's hop chain (the scheduler
+    side of a :class:`~repro.serving.agentic.HopPlan` continuation).
+
+    Tracks the authoritative per-hop results (accepts/hits), the one
+    in-flight speculative next-hop child (if cross-hop pre-speculation
+    launched it), and the chain's completion."""
+
+    __slots__ = ("plan", "root_idx", "tenant", "t_start", "hits", "accepts",
+                 "hop_idx", "spec_child", "prespec", "prespec_hit",
+                 "cancelled", "done", "t_done", "served")
+
+    def __init__(self, plan, root_idx: int, tenant: int, t_start: float):
+        self.plan = plan
+        self.root_idx = root_idx
+        self.tenant = tenant
+        self.t_start = t_start
+        self.hits: list[bool] = []
+        self.accepts: list[bool] = []
+        self.hop_idx: list[int] = []
+        self.spec_child = None          # in-flight speculative _Request
+        self.prespec = False            # a hop was launched pre-validation
+        self.prespec_hit: bool | None = None
+        self.cancelled = 0              # hops cancelled on mis-speculation
+        self.done = False
+        self.t_done = -1.0
+        self.served = False             # final hop delivered a result
 
 
 # event-kind priorities at equal timestamps: full results ingest before a
@@ -678,9 +821,12 @@ class ContinuousBatchingScheduler:
         instead of silently diverging — see ``serving/faults.py``)."""
         rows = []
         for r in batch:
-            rows.append(r)
+            if not r.cancelled:            # a cancelled hop's row (sentinel
+                rows.append(r)             # ids) never folds into the cache
             if self.sched.ingest_followers:
-                rows.extend(r.followers)
+                rows.extend(f for f in r.followers if not f.cancelled)
+        if not rows:
+            return
         q_embs = np.stack([r.q["emb"] for r in rows])
         full_ids = np.stack([r.ids for r in rows])
         tids = (None if self.n_tenants == 1
@@ -759,6 +905,26 @@ class ContinuousBatchingScheduler:
         for r in reqs:
             heapq.heappush(heap, (r.t_arrive, _ARRIVE, seq, r))
             seq += 1
+
+        # -- agentic hop graphs (serving/agentic.py) -----------------------
+        # A query carrying a HopPlan continuation ("hop_plan") is the hop-1
+        # sub-query of a complex multi-hop request: when a hop resolves, the
+        # graph reasons out the bridge entity (reason_s on the clock, the
+        # "reason" span) and enqueues the next hop; rejected drafts
+        # PRE-SPECULATE the next hop ahead of validation (speculate_hops),
+        # and mis-speculations cancel deterministically ("cancelled"
+        # channel).  Everything below is gated so a trace with no hop_plan
+        # queries adds zero rng draws, heap events and span charges — bit-
+        # identical to the pre-hop-graph goldens.
+        reason_s = lat.reason_time()
+        graphs: list[_HopGraph] = []
+        for r in reqs:
+            plan = r.q.get("hop_plan")
+            if plan is not None:
+                r.hop = 1
+                r.cq = _HopGraph(plan, r.idx, r.tenant, r.t_arrive)
+                graphs.append(r.cq)
+        agentic = bool(graphs)
 
         # -- fault injection + self-healing (serving/faults.py) ------------
         # Everything below is gated on fault_mode: an empty/absent plan
@@ -923,10 +1089,12 @@ class ContinuousBatchingScheduler:
                 if is_leader[row]:
                     leaders[r.tenant].append(r)
                     registry_add(r)
+                    r.stage = "cloudq"
                 else:
                     li = leader_of[row]
                     lead = reg_req[li] if li < cap else group[li - cap]
                     lead.followers.append(r)
+                    r.lead, r.stage = lead, "follower"
 
         def admit_rejects(group: list[_Request]):
             """Share-or-lead election for newly rejected requests against the
@@ -935,6 +1103,7 @@ class ContinuousBatchingScheduler:
                 for r in group:
                     leaders[r.tenant].append(r)
                     registry_add(r)
+                    r.stage = "cloudq"
                 return
             for i in range(0, len(group), sc.max_spec_batch):
                 _admit_chunk(group[i:i + sc.max_spec_batch])
@@ -994,16 +1163,20 @@ class ContinuousBatchingScheduler:
             drafts = np.asarray(out["draft_ids"])
             val_ids = np.asarray(out["val_ids"])
             spec_s = self._spec_time(len(batch))
+            t_done = t + replay_s + spec_s
             for j, r in enumerate(batch):
                 r.replica, r.cache_version = r_id, version
-                r.spans["queue_wait"] += t - r.t_arrive
+                # hop sub-queries pre-charge their synthesis reasoning to
+                # the reason span; the wait starts when it ends (exact
+                # no-op for plain requests: x - 0.0 == x)
+                r.spans["queue_wait"] += t - r.t_arrive - r.spans["reason"]
                 r.spans["replay"] += replay_s
                 r.spans["spec"] += spec_s
+                r.stage, r.t_sdone = "spec", t_done
                 if accepts[j]:
                     r.ids, r.channel = drafts[j], "draft"
                 else:
                     r.val_ids, r.draft_ids = val_ids[j], drafts[j]
-            t_done = t + replay_s + spec_s
             heapq.heappush(heap, (t_done, _SPEC_DONE, seq,
                                   (batch, r_id, spec_epoch[r_id])))
             seq += 1
@@ -1066,15 +1239,46 @@ class ContinuousBatchingScheduler:
             g["done"] = True
             retries += 1
             for r in reversed(g["batch"]):
+                if r.cancelled and r.t_done < 0:
+                    # cancelled while the attempt was in flight: the crash
+                    # settles it now — nothing requeues, the whole attempt
+                    # was waste; live followers re-enter the election
+                    r.spans["lost"] += max(0.0, r.t_cancel - g["t_first"])
+                    fin_cancel(r, r.t_cancel)
+                    registry_remove(r)
+                    readmit, r.followers = r.followers, []
+                    live = []
+                    for f in readmit:
+                        cq = max(0.0, g["t_first"] - f.t_rejected)
+                        f.spans["cloud_queue"] += cq
+                        if f.cancelled and f.t_done < 0:
+                            f.spans["lost"] += max(
+                                0.0, (f.t_cancel - f.t_rejected) - cq)
+                            fin_cancel(f, f.t_cancel)
+                            continue
+                        f.spans["lost"] += max(0.0, (t - f.t_rejected) - cq)
+                        f.t_rejected = t
+                        live.append(f)
+                    admit_rejects(live)
+                    continue
                 r.spans["retry_backoff"] += g["backoff_s"]
                 r.spans["lost"] += max(0.0,
                                        (t - g["t_first"]) - g["backoff_s"])
+                kept = []
                 for f in r.followers:
                     cq = max(0.0, g["t_first"] - f.t_rejected)
                     f.spans["cloud_queue"] += cq
+                    if f.cancelled and f.t_done < 0:
+                        f.spans["lost"] += max(
+                            0.0, (f.t_cancel - f.t_rejected) - cq)
+                        fin_cancel(f, f.t_cancel)
+                        continue
                     f.spans["lost"] += max(0.0, (t - f.t_rejected) - cq)
                     f.t_rejected = t
+                    kept.append(f)
+                r.followers = kept
                 r.t_rejected = t
+                r.stage = "cloudq"
                 leaders[r.tenant].appendleft(r)
 
         def fail_group(g, t):
@@ -1084,20 +1288,40 @@ class ContinuousBatchingScheduler:
             nothing; they still need results)."""
             g["done"] = True
             for r in g["batch"]:
-                r.spans["retry_backoff"] += g["backoff_s"]
-                r.spans["lost"] += max(0.0,
-                                       (t - g["t_first"]) - g["backoff_s"])
-                r.ids = np.full(self.cfg.k, -1, np.int32)
-                r.channel = "failed"
-                r.t_done = t
-                registry_remove(r)
+                if r.cancelled and r.t_done < 0:
+                    # cancelled mid-flight: it finalizes as cancelled, not
+                    # failed — the chain already moved on without it
+                    r.spans["lost"] += max(0.0, r.t_cancel - g["t_first"])
+                    fin_cancel(r, r.t_cancel)
+                    registry_remove(r)
+                else:
+                    r.spans["retry_backoff"] += g["backoff_s"]
+                    r.spans["lost"] += max(0.0,
+                                           (t - g["t_first"])
+                                           - g["backoff_s"])
+                    r.ids = np.full(self.cfg.k, -1, np.int32)
+                    r.channel = "failed"
+                    r.t_done = t
+                    r.stage = "done"
+                    registry_remove(r)
                 readmit, r.followers = r.followers, []
+                live = []
                 for f in readmit:
                     cq = max(0.0, g["t_first"] - f.t_rejected)
                     f.spans["cloud_queue"] += cq
+                    if f.cancelled and f.t_done < 0:
+                        f.spans["lost"] += max(
+                            0.0, (f.t_cancel - f.t_rejected) - cq)
+                        fin_cancel(f, f.t_cancel)
+                        continue
                     f.spans["lost"] += max(0.0, (t - f.t_rejected) - cq)
                     f.t_rejected = t
-                admit_rejects(readmit)
+                    live.append(f)
+                admit_rejects(live)
+                # a failed hop still resolves: the chain proceeds on the
+                # guessed bridge (hit False) instead of hanging forever
+                if agentic and r.cq is not None and not r.cancelled:
+                    resolve(r, r.t_done)
 
         def complete_group(t, winner):
             """First live completion wins the group: racing dispatches are
@@ -1113,28 +1337,48 @@ class ContinuousBatchingScheduler:
                     free_worker(d["w"])
             detector.observe(full_batches, t - winner["t_disp"])
             batch, ids_full = g["batch"], g["ids_full"]
-            n_rows = len(batch)
+            n_rows = sum(not r.cancelled for r in batch)
             if sc.ingest_followers:
-                n_rows += sum(len(r.followers) for r in batch)
+                n_rows += sum(sum(not f.cancelled for f in r.followers)
+                              for r in batch)
             ingest_s = (0.0 if sc.free_ingest_replay else
                         lat.ingest_time(n_rows, self.cfg.doc_cap,
                                         self.cfg.k))
             winner_cloud = t - winner["t_disp"]
             for j, r in enumerate(batch):
-                r.ids = ids_full[j].astype(np.int32)
-                r.channel = "full"
-                r.cloud_s = winner_cloud
-                r.spans["cloud"] += winner_cloud
-                r.spans["retry_backoff"] += g["backoff_s"]
-                r.spans["lost"] += max(0.0, (t - g["t_first"]) - winner_cloud
-                                       - g["backoff_s"])
-                r.spans["ingest"] += ingest_s
-                r.spans["edge_rtt"] += r.edge_rtt
-                r.t_done = t + ingest_s + r.edge_rtt
-                registry_remove(r)
+                lead_ids = ids_full[j].astype(np.int32)
+                if r.cancelled:
+                    # cancelled while the group raced faults: everything
+                    # it paid for past its first dispatch was waste
+                    r.spans["lost"] += max(0.0, r.t_cancel - g["t_first"])
+                    fin_cancel(r, r.t_cancel)
+                    registry_remove(r)
+                else:
+                    r.ids = lead_ids
+                    r.channel = "full"
+                    r.cloud_s = winner_cloud
+                    r.spans["cloud"] += winner_cloud
+                    r.spans["retry_backoff"] += g["backoff_s"]
+                    r.spans["lost"] += max(0.0,
+                                           (t - g["t_first"]) - winner_cloud
+                                           - g["backoff_s"])
+                    r.spans["ingest"] += ingest_s
+                    r.spans["edge_rtt"] += r.edge_rtt
+                    r.t_done = t + ingest_s + r.edge_rtt
+                    r.stage = "done"
+                    registry_remove(r)
                 for f in r.followers:
-                    f.ids = (follower_rerank(f, r.ids)
-                             if sc.follower_score_weighted else r.ids)
+                    if f.cancelled:
+                        cq = max(0.0, min(g["t_first"], f.t_cancel)
+                                 - f.t_rejected)
+                        f.spans["cloud_queue"] += cq
+                        f.spans["lost"] += max(
+                            0.0, (f.t_cancel - f.t_rejected) - cq)
+                        fin_cancel(f, f.t_cancel)
+                        f.leader_idx = r.idx
+                        continue
+                    f.ids = (follower_rerank(f, lead_ids)
+                             if sc.follower_score_weighted else lead_ids)
                     f.channel = "shared"
                     f.cloud_s = winner_cloud
                     # the follower waited through whatever mix of queue /
@@ -1152,7 +1396,14 @@ class ContinuousBatchingScheduler:
                     f.spans["ingest"] += ingest_s
                     f.spans["edge_rtt"] += f.edge_rtt
                     f.t_done = t + ingest_s + f.edge_rtt
+                    f.stage = "done"
                     f.leader_idx = r.idx
+                if agentic:
+                    if r.cq is not None and not r.cancelled:
+                        resolve(r, r.t_done)
+                    for f in r.followers:
+                        if f.cq is not None and not f.cancelled:
+                            resolve(f, f.t_done)
             self._ingest(batch, ingest_key=ingest_seq)
             ingest_seq += 1
 
@@ -1160,6 +1411,12 @@ class ContinuousBatchingScheduler:
             nonlocal inflight_full, max_inflight, seq, full_batches, \
                 full_retrievals
             batch = fair_pick(leaders, full_served, sc.full_batch)
+            if agentic:
+                # popped from the queues: a resolve-triggered cancel fired
+                # by the re-validation below must DEFER (stage "cloud"),
+                # not search the deques these rows just left
+                for r in batch:
+                    r.stage = "cloud"
             # late re-validation: results ingested while these leaders
             # queued may re-identify them now — no cloud work needed
             if sc.revalidate:
@@ -1185,13 +1442,29 @@ class ContinuousBatchingScheduler:
                         r.spans["reval_wait"] += t - r.t_rejected
                         r.spans["edge_rtt"] += r.edge_rtt
                         r.t_done = t + r.edge_rtt
+                        r.stage = "done"
                         registry_remove(r)
                         # orphaned followers re-enter the election
-                        readmit, r.followers = r.followers, []
-                        admit_rejects(readmit)
+                        readmit_followers(r)
+                        if agentic and r.cq is not None:
+                            resolve(r, r.t_done)
                     else:
                         survivors.append(r)
                 batch = survivors
+            if agentic:
+                # settle members the re-validation resolves cancelled:
+                # they were never dispatched — their wait ends at the
+                # cancel instant, their followers re-enter the election
+                live = []
+                for r in batch:
+                    if r.cancelled and r.t_done < 0:
+                        r.spans["cloud_queue"] += r.t_cancel - r.t_rejected
+                        fin_cancel(r, r.t_cancel)
+                        registry_remove(r)
+                        readmit_followers(r)
+                    else:
+                        live.append(r)
+                batch = live
             b = len(batch)
             if not b:
                 return
@@ -1270,9 +1543,168 @@ class ContinuousBatchingScheduler:
                               -np.inf)
             return ids[np.argsort(-scores, kind="stable")]
 
+        # -- agentic hop-graph machinery (inert on plain traces) -----------
+        # The continuation protocol: every site that finalizes a request
+        # (sets t_done + channel) calls resolve(); resolution reasons out
+        # the next hop's bridge entity and spawns it, confirms or cancels
+        # the pre-speculated child, and closes the chain on the final hop.
+        # All rng the graph consumes lives in per-(query, hop) HopPlan
+        # substreams — never the scheduler's rtt_rng — so agentic traffic
+        # cannot perturb the plain requests sharing the stream.
+
+        def spawn_hop(cx, h: int, entity: int, t: float,
+                      speculative: bool) -> _Request:
+            """Synthesize hop ``h``'s sub-query from the (resolved or
+            drafted) bridge entity: the reasoning step runs t -> t +
+            reason_s on the clock (pre-charged to the new request's
+            ``reason`` span), then the sub-query enters admission like any
+            arrival, tenant-tagged with its chain's tenant."""
+            nonlocal seq
+            r = _Request(idx=len(reqs), q=cx.plan.query(h, entity),
+                         t_arrive=t, tenant=cx.tenant, hop=h, cq=cx,
+                         speculative=speculative, stage="reason")
+            r.spans["reason"] = reason_s
+            reqs.append(r)
+            heapq.heappush(heap, (t + reason_s, _ARRIVE, seq, r))
+            seq += 1
+            return r
+
+        def fin_cancel(r: _Request, t: float):
+            """Finalize a cancelled hop: ``cancelled`` channel, sentinel
+            ids (its row NEVER ingests), t_done at the settle instant —
+            the caller has already balanced the spans to that instant."""
+            r.channel = "cancelled"
+            r.ids = np.full(self.cfg.k, -1, np.int32)
+            r.t_done = t
+            r.stage = "done"
+            r.cq.cancelled += 1
+
+        def cancel(r: _Request, t: float) -> bool:
+            """Deterministically cancel a mis-speculated hop wherever it
+            currently lives.  Queued states settle NOW (spans charged to
+            ``t`` exactly — conservation stays bit-exact); in-flight cloud
+            work cannot be unsent, so those flag and settle on their
+            completion path at this cancel instant.  Returns False when
+            the request already finalized (superseded wasted work)."""
+            if r.t_done >= 0 or r.cancelled:
+                return False
+            r.cancelled = True
+            r.t_cancel = t
+            if r.stage == "reason":        # still synthesizing its query
+                r.spans["reason"] = t - r.t_arrive
+                fin_cancel(r, t)
+            elif r.stage == "admit":
+                admission[r.tenant].remove(r)
+                r.spans["queue_wait"] += t - r.t_arrive - r.spans["reason"]
+                fin_cancel(r, t)
+            elif r.stage == "spec":        # mid-speculation: claw back the
+                over = r.t_sdone - t       # not-yet-run tail of the batch
+                cut = min(over, r.spans["spec"])
+                r.spans["spec"] -= cut
+                r.spans["replay"] -= over - cut
+                fin_cancel(r, t)
+            elif r.stage == "cloudq":      # queued leader
+                leaders[r.tenant].remove(r)
+                registry_remove(r)
+                r.spans["cloud_queue"] += t - r.t_rejected
+                fin_cancel(r, t)
+                readmit_followers(r)       # orphans re-enter the election
+            elif r.stage == "follower":
+                if r.lead.stage == "cloud":
+                    pass                   # leader's batch is in flight:
+                    #                        its completion settles the
+                    #                        follower at t_cancel
+                else:
+                    r.lead.followers.remove(r)
+                    r.spans["cloud_queue"] += t - r.t_rejected
+                    fin_cancel(r, t)
+            elif r.stage == "cloud":
+                # dispatched: drop the result on completion; deregister
+                # NOW so no new follower attaches to a doomed leader
+                registry_remove(r)
+            return True
+
+        def readmit_followers(r: _Request):
+            """Detach ``r``'s followers for re-election, settling any that
+            were cancelled while attached (their wait ends at t_cancel)."""
+            readmit, r.followers = r.followers, []
+            if agentic:
+                live = []
+                for f in readmit:
+                    if f.cancelled and f.t_done < 0:
+                        f.spans["cloud_queue"] += f.t_cancel - f.t_rejected
+                        fin_cancel(f, f.t_cancel)
+                    else:
+                        live.append(f)
+                readmit = live
+            admit_rejects(readmit)
+
+        def finish(cx, r: _Request, t: float):
+            """Final hop resolved: the trailing answer-synthesis reasoning
+            closes the chain.  Charged on the closing request's own clock
+            when its completion IS the chain's last event; a pre-speculated
+            final hop that landed before its bridge confirmed charges the
+            complex query alone (the request's interval already ended)."""
+            if t <= r.t_done:
+                r.spans["reason"] += reason_s
+                r.t_done += reason_s
+                cx.t_done = r.t_done
+            else:
+                cx.t_done = t + reason_s
+            cx.done = True
+            cx.served = r.channel in ("draft", "reval", "shared", "full",
+                                      "degraded")
+
+        def resolve(r: _Request, t: float):
+            """A hop request finalized at virtual time ``t`` (when its
+            result reaches the agent): advance the owning hop graph."""
+            cx = r.cq
+            if cx is None or cx.done or r.cancelled:
+                return
+            if r.speculative:
+                return      # parked: the parent hop's resolution decides
+            h = r.hop
+            if r.channel == "shed":
+                # the chain lost a hop at admission: no bridge, no
+                # downstream — the complex query aborts
+                cx.done, cx.t_done, cx.served = True, t, False
+                if cx.spec_child is not None:
+                    cancel(cx.spec_child, t)
+                    cx.spec_child = None
+                return
+            cx.accepts.append(r.channel in ("draft", "reval", "shared"))
+            cx.hits.append(False if r.channel == "failed"
+                           else cx.plan.hit(h, r.ids))
+            cx.hop_idx.append(r.idx)
+            if h == cx.plan.hops:
+                finish(cx, r, t)
+                return
+            nxt = cx.plan.bridge(h, cx.hits[-1])
+            child, cx.spec_child = cx.spec_child, None
+            if child is not None:
+                if not child.cancelled and child.q["entity"] == nxt:
+                    # pre-speculation CONFIRMED: the drafted bridge matches
+                    # the validated one — the in-flight (or finished)
+                    # speculative hop becomes the authoritative
+                    # continuation, keeping its head start
+                    cx.prespec_hit = True
+                    child.speculative = False
+                    if child.t_done >= 0:
+                        resolve(child, max(t, child.t_done))
+                    return
+                # MIS-SPECULATION: the validated bridge contradicts the
+                # drafted one — cancel whatever is still cancellable and
+                # re-enqueue the corrected hop (sequential timing from
+                # here; a finished child is just superseded wasted work)
+                cx.prespec_hit = False
+                cancel(child, t)
+            spawn_hop(cx, h + 1, nxt, t, speculative=False)
+
         while heap:
             t, kind, _, payload = heapq.heappop(heap)
             if kind == _ARRIVE:
+                if payload.cancelled:
+                    continue       # hop cancelled mid-reason: settled there
                 if policy == "shed":
                     # admission control: reject NOW when the fluid model
                     # predicts a queue wait past the deadline — zero
@@ -1281,8 +1713,18 @@ class ContinuousBatchingScheduler:
                     if overloaded:
                         payload.channel = "shed"
                         payload.ids = np.full(self.cfg.k, -1, np.int32)
-                        payload.t_done = payload.t_arrive
+                        # a shed hop still paid its synthesis reasoning
+                        # (exact no-op for plain requests: x + 0.0 == x)
+                        payload.t_done = (payload.t_arrive
+                                          + payload.spans["reason"])
+                        payload.stage = "done"
+                        if agentic and payload.cq is not None:
+                            resolve(payload, payload.t_done)
+                            try_full(t)   # an abort-cancel may have drained
+                            #               a queued leader and readmitted
+                            #               its followers
                         continue
+                payload.stage = "admit"
                 admission[payload.tenant].append(payload)
                 try_spec(t)
             elif kind == _SPEC_DONE:
@@ -1299,9 +1741,14 @@ class ContinuousBatchingScheduler:
                     update_overload()
                 rejected = []
                 for r in payload:
+                    if r.cancelled:
+                        continue   # cancelled mid-spec: settled at cancel
                     if r.channel == "draft":
                         r.spans["edge_rtt"] += r.edge_rtt
                         r.t_done = t + r.edge_rtt
+                        r.stage = "done"
+                        if agentic and r.cq is not None:
+                            resolve(r, r.t_done)
                     elif policy == "degrade" and overloaded:
                         # speculation-only under overload: the reject's
                         # draft returns immediately, unvalidated
@@ -1309,9 +1756,31 @@ class ContinuousBatchingScheduler:
                         r.ids, r.channel = r.draft_ids, "degraded"
                         r.spans["edge_rtt"] += r.edge_rtt
                         r.t_done = t + r.edge_rtt
+                        r.stage = "done"
+                        if agentic and r.cq is not None:
+                            resolve(r, r.t_done)
                     else:
                         r.t_rejected = t
                         rejected.append(r)
+                        # cross-hop pre-speculation: this hop's DRAFT was
+                        # rejected, but its drafted bridge entity is
+                        # available NOW — launch the next hop from it,
+                        # racing this hop's late re-validation / full
+                        # retrieval; the authoritative resolution later
+                        # confirms the child or cancels it (the plan's
+                        # per-hop bridge draws are frozen, so agreeing
+                        # hits imply agreeing bridges)
+                        if (agentic and sc.speculate_hops
+                                and r.cq is not None and not r.speculative
+                                and not r.cq.done
+                                and 0 < r.hop < r.cq.plan.hops
+                                and r.cq.spec_child is None):
+                            cx = r.cq
+                            ent = cx.plan.bridge(
+                                r.hop, cx.plan.hit(r.hop, r.draft_ids))
+                            cx.spec_child = spawn_hop(
+                                cx, r.hop + 1, ent, t, speculative=True)
+                            cx.prespec = True
                 admit_rejects(rejected)
                 try_full(t)
                 try_spec(t)
@@ -1351,9 +1820,10 @@ class ContinuousBatchingScheduler:
                 inflight_full -= 1               # ingest is EDGE work: the
                 #                                  cloud worker frees at t
                 batch, ids_full, cloud = payload
-                n_rows = len(batch)
+                n_rows = sum(not r.cancelled for r in batch)
                 if sc.ingest_followers:
-                    n_rows += sum(len(r.followers) for r in batch)
+                    n_rows += sum(sum(not f.cancelled for f in r.followers)
+                                  for r in batch)
                 # the cache fold + replication fan-out of the whole batch,
                 # charged to every request returning from it (the state
                 # update itself lands at t: results are visible to the next
@@ -1363,17 +1833,38 @@ class ContinuousBatchingScheduler:
                                             self.cfg.k))
                 t_d = t - cloud                  # this batch's dispatch time
                 for j, r in enumerate(batch):
-                    r.ids = ids_full[j].astype(np.int32)
-                    r.channel = "full"
-                    r.cloud_s = cloud
-                    r.spans["cloud"] += cloud
-                    r.spans["ingest"] += ingest_s
-                    r.spans["edge_rtt"] += r.edge_rtt
-                    r.t_done = t + ingest_s + r.edge_rtt
-                    registry_remove(r)
+                    lead_ids = ids_full[j].astype(np.int32)
+                    if r.cancelled:
+                        # cancelled while in flight: the dispatch could not
+                        # be unsent — service runs to the cancel instant,
+                        # the result is dropped (never served, never
+                        # ingested)
+                        r.spans["cloud"] += max(0.0, r.t_cancel - t_d)
+                        fin_cancel(r, r.t_cancel)
+                        registry_remove(r)
+                    else:
+                        r.ids = lead_ids
+                        r.channel = "full"
+                        r.cloud_s = cloud
+                        r.spans["cloud"] += cloud
+                        r.spans["ingest"] += ingest_s
+                        r.spans["edge_rtt"] += r.edge_rtt
+                        r.t_done = t + ingest_s + r.edge_rtt
+                        r.stage = "done"
+                        registry_remove(r)
                     for f in r.followers:
-                        f.ids = (follower_rerank(f, r.ids)
-                                 if sc.follower_score_weighted else r.ids)
+                        if f.cancelled:
+                            # its wait ends at ITS cancel instant
+                            cq = max(0.0, min(t_d, f.t_cancel)
+                                     - f.t_rejected)
+                            f.spans["cloud_queue"] += cq
+                            f.spans["cloud"] += max(
+                                0.0, (f.t_cancel - f.t_rejected) - cq)
+                            fin_cancel(f, f.t_cancel)
+                            f.leader_idx = r.idx
+                            continue
+                        f.ids = (follower_rerank(f, lead_ids)
+                                 if sc.follower_score_weighted else lead_ids)
                         f.channel = "shared"
                         f.cloud_s = cloud
                         # a follower may have attached AFTER its leader
@@ -1385,7 +1876,14 @@ class ContinuousBatchingScheduler:
                         f.spans["ingest"] += ingest_s
                         f.spans["edge_rtt"] += f.edge_rtt
                         f.t_done = t + ingest_s + f.edge_rtt
+                        f.stage = "done"
                         f.leader_idx = r.idx
+                    if agentic:
+                        if r.cq is not None and not r.cancelled:
+                            resolve(r, r.t_done)
+                        for f in r.followers:
+                            if f.cq is not None and not f.cancelled:
+                                resolve(f, f.t_done)
                 self._ingest(batch, ingest_key=ingest_seq)
                 ingest_seq += 1
                 try_full(t)
@@ -1436,6 +1934,8 @@ class ContinuousBatchingScheduler:
                             # degraded latency, correct results
                             sbatch, t_disp, replay_s, spec_s = info
                             for r in sbatch:
+                                if r.cancelled:
+                                    continue   # settled at its cancel
                                 r.spans["replay"] -= replay_s
                                 r.spans["spec"] -= spec_s
                                 r.spans["lost"] += t - t_disp
@@ -1447,8 +1947,10 @@ class ContinuousBatchingScheduler:
                                                       np.int32)
                                 r.reroute = True
                                 r.t_rejected = t
+                                r.stage = "cloudq"
                             for r in reversed(sbatch):
-                                leaders[r.tenant].appendleft(r)
+                                if not r.cancelled:
+                                    leaders[r.tenant].appendleft(r)
                     # background rebuild: install a primary snapshot (a
                     # full cache fold on the clock), then rejoin the pool
                     rb_s = lat.ingest_time(
@@ -1509,9 +2011,10 @@ class ContinuousBatchingScheduler:
                 replica_rebuilds += 1
                 try_spec(t)
 
-        # -- metrics (request-index order, shared substrate) ---------------
+        # -- metrics (request-index order, shared substrate; spawned hop
+        #    sub-queries appended after the input trace) -------------------
         rng = np.random.default_rng(seed)
-        m = _metrics_init(n, llms)
+        m = _metrics_init(len(reqs), llms)
         for r in reqs:
             accept = r.channel in ("draft", "reval", "shared")
             _record(m, r.idx, self.s.world, r.q, r.ids,
@@ -1519,6 +2022,41 @@ class ContinuousBatchingScheduler:
         t_arrive = np.array([r.t_arrive for r in reqs])
         t_done = np.array([r.t_done for r in reqs])
         channels = np.array([r.channel for r in reqs], dtype="U16")
+        # -- complex-query (hop chain) records -----------------------------
+        complex_records = hop_arr = parent_arr = spec_arr = None
+        if agentic:
+            complex_records = []
+            for cx in graphs:
+                H = cx.plan.hops
+                full_chain = cx.done and len(cx.hits) == H
+                complex_records.append({
+                    "root_idx": cx.root_idx,
+                    "tenant": cx.tenant,
+                    "hops": H,
+                    "t_start": cx.t_start,
+                    "t_done": cx.t_done,
+                    "e2e_s": (cx.t_done - cx.t_start if cx.done
+                              else float("nan")),
+                    # one reasoning step per hop: H-1 sub-query syntheses
+                    # + the trailing answer synthesis
+                    "reason_s": H * reason_s,
+                    "served": bool(cx.served and full_chain),
+                    "dar": (float(np.mean(cx.accepts)) if cx.accepts
+                            else 0.0),
+                    "accuracy": cx.plan.accuracy(
+                        full_chain and all(cx.hits), dataset),
+                    "prespec": cx.prespec,
+                    "prespec_hit": cx.prespec_hit,
+                    "cancelled": cx.cancelled,
+                    "hop_idx": list(cx.hop_idx),
+                })
+            hop_arr = np.array([r.hop for r in reqs], np.int32)
+            parent_arr = np.array(
+                [r.cq.root_idx if r.cq is not None else -1 for r in reqs],
+                np.int32)
+            spec_arr = np.array([r.speculative for r in reqs], bool)
+            if len(reqs) != n:
+                tids = np.array([r.tenant for r in reqs], np.int32)
         return SchedResult(
             latencies=m["latencies"], accepts=m["accepts"],
             doc_hits=m["doc_hits"], correct_accepts=m["correct"], ra=m["ra"],
@@ -1542,7 +2080,9 @@ class ContinuousBatchingScheduler:
             tenant_ids=tids,
             leader_idx=np.array([r.leader_idx for r in reqs], np.int32),
             served_ids=np.stack([np.asarray(r.ids, np.int32)
-                                 for r in reqs]) if reqs else None)
+                                 for r in reqs]) if reqs else None,
+            hop=hop_arr, parent_root=parent_arr, speculative=spec_arr,
+            complex_records=complex_records)
 
 
 # canonical name for the continuous-batching HaS scheduler

@@ -32,11 +32,18 @@ tests/test_overload.py asserts for every channel):
                    that produced nothing
   ``retry_backoff`` exponential-backoff wait between a failed cloud
                    attempt and its retry dispatch
+  ``reason``       agent reasoning time of a hop sub-query
+                   (serving/agentic.py): the LLM synthesis step that turned
+                   the previous hop's result into this hop's sub-query
+                   (charged before the request enters admission), plus —
+                   on a complex query's final hop — the trailing
+                   answer-synthesis step after the last retrieval lands
 
 Stages a request never enters stay 0 (e.g. a ``draft`` accept has only
 ``queue_wait``/``replay``/``spec``/``edge_rtt``; a ``shed`` rejection has
 all-zero spans and ``t_done == t_arrive``; ``lost``/``retry_backoff``
-stay 0 in any fault-free run).
+stay 0 in any fault-free run; ``reason`` stays 0 for every non-agentic
+request).
 
 :class:`Trace` is the result-side container: per-request span arrays plus
 ``stage_breakdown()`` (aggregate seconds/fraction per stage) and
@@ -54,7 +61,8 @@ import numpy as np
 
 #: span keys, in pipeline order (see module docstring)
 STAGES = ("queue_wait", "replay", "spec", "edge_rtt", "reval_wait",
-          "cloud_queue", "cloud", "ingest", "lost", "retry_backoff")
+          "cloud_queue", "cloud", "ingest", "lost", "retry_backoff",
+          "reason")
 
 
 def empty_spans() -> dict[str, float]:

@@ -1,0 +1,326 @@
+"""Agentic multi-hop serving inside the scheduler (serving/agentic.py +
+the hop-graph machinery of serving/scheduler.py).
+
+Covers the PR's tentpole contracts:
+
+  * decomposition determinism: datasets, hop plans and their per-(uid,
+    hop) rng substreams are pure functions of their seeds — the drafted
+    and validated bridges agree whenever their doc-hits agree;
+  * the terms-forwarding regression: sequential hops thread lexical
+    terms through BOTH the plug-in engine and the full path (a hybrid
+    cloud stage must never silently degrade to dense-only);
+  * reasoning time comes from ``LatencyModel.reason_scale`` and is
+    charged identically to the sequential baseline and the scheduler's
+    ``reason`` trace stage;
+  * hop graphs complete through the scheduler with span conservation
+    exact through the new reason/cancelled paths;
+  * cross-hop pre-speculation pipelines hop-2 under hop-1 (strictly
+    lower complex e2e than ``speculate_hops=False``) and mis-speculated
+    hops cancel deterministically without ever ingesting;
+  * a trace with NO agentic requests is bit-identical to the pre-PR
+    golden hashes — the hop-graph machinery is zero-cost when unused;
+  * chaos: a mixed agentic+plain trace under the full fault cocktail
+    replays bit-exactly and still conserves spans;
+  * CLI validation: ``launch/serve.py`` rejects bad ``--agentic-frac``
+    / ``--hops`` combinations with exit code 2.
+"""
+import hashlib
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.has import HasConfig
+from repro.data.synthetic import DATASETS, SyntheticWorld, WorldConfig
+from repro.serving.agentic import (AutoRagPipeline, HopPlan, TwoHopDataset,
+                                   build_hop_trace, decompose)
+from repro.serving.engine import HasEngine, RetrievalService
+from repro.serving.faults import FaultEvent, FaultPlan
+from repro.serving.latency import LatencyModel
+from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                     SchedulerConfig, poisson_arrivals)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    world = SyntheticWorld(WorldConfig(n_entities=400, seed=0))
+    svc = RetrievalService(world, LatencyModel(), k=10, chunk=2048)
+    cfg = HasConfig(k=10, tau=0.2, h_max=400, nprobe=4, n_buckets=256, d=64)
+    sched = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(
+        max_spec_batch=16, full_batch=8, full_max_wait_s=0.1))
+    ds = TwoHopDataset(world, seed=0)
+    return world, svc, cfg, sched, ds
+
+
+# ---------------------------------------------------------------------------
+# Decomposition layer
+# ---------------------------------------------------------------------------
+
+def test_dataset_deterministic_and_chain_consistent(setup):
+    world, _, _, _, ds = setup
+    a = ds.sample(40, seed=7, hops=3)
+    b = TwoHopDataset(world, seed=0).sample(40, seed=7, hops=3)
+    assert a == b
+    for cq in a:
+        assert len(cq["entities"]) == 3 and len(cq["rels"]) == 2
+        for h, r in enumerate(cq["rels"]):
+            # each chain link follows the dataset's relation map
+            assert cq["entities"][h + 1] == int(
+                ds.relations[r][cq["entities"][h]])
+    # legacy 2-hop keys preserved
+    two = ds.sample(5, seed=7)
+    assert all(q["e2"] == q["entities"][1] for q in two)
+    with pytest.raises(ValueError, match="hops"):
+        ds.sample(3, hops=0)
+
+
+def test_hop_plan_bridge_frozen_and_hit_grounded(setup):
+    world, _, _, _, ds = setup
+    plan = decompose(ds, ds.sample(1, seed=3, hops=3), seed=5)[0]
+    # grounded hop -> true next entity, every call
+    assert plan.bridge(1, True) == plan.entities[1]
+    assert plan.bridge(1, True) == plan.entities[1]
+    # the lucky/guess draws are FROZEN per hop: a draft-derived and a
+    # validated bridge with the same hit agree (pre-speculation's
+    # confirmability), and an independent copy of the plan agrees too
+    copy = HopPlan(world, ds.rel_attr, plan.entities, plan.rels, plan.attr,
+                   uid=plan.uid, seed=5)
+    for h in (1, 2):
+        assert plan.bridge(h, False) == plan.bridge(h, False)
+        assert plan.bridge(h, False) == copy.bridge(h, False)
+    # sub-query encodings are pure functions of (uid, hop, entity)
+    q1, q2 = plan.query(2, 17), copy.query(2, 17)
+    np.testing.assert_array_equal(q1["emb"], q2["emb"])
+    np.testing.assert_array_equal(q1["terms"], q2["terms"])
+    with pytest.raises(ValueError, match="relations"):
+        HopPlan(world, ds.rel_attr, [1, 2, 3], [0], 0, uid=0)
+
+
+def test_sequential_hops_forward_lexical_terms(setup, monkeypatch):
+    """Regression (satellite): ``AutoRagPipeline._retrieve`` must thread
+    query terms into BOTH the full path and the plug-in engine — it used
+    to drop them on the floor for ``full_search``."""
+    _, svc, cfg, _, ds = setup
+    cqs = ds.sample(3, seed=2)
+
+    seen_full, seen_step = [], []
+    real_full = svc.full_search
+
+    def spy_full(emb, terms=None, weights=None, **kw):
+        seen_full.append(terms)
+        return real_full(emb, terms, weights, **kw)
+
+    monkeypatch.setattr(svc, "full_search", spy_full)
+    AutoRagPipeline(ds, None, svc).run(cqs)
+    assert seen_full and all(t is not None and len(t) for t in seen_full)
+
+    eng = HasEngine(svc, cfg)
+    real_step = eng.step
+
+    def spy_step(emb, **kw):
+        seen_step.append(kw.get("q_terms"))
+        return real_step(emb, **kw)
+
+    monkeypatch.setattr(eng, "step", spy_step)
+    AutoRagPipeline(ds, eng, svc).run(cqs)
+    assert seen_step and all(t is not None and len(t) for t in seen_step)
+
+
+def test_reasoning_time_comes_from_latency_model(setup):
+    _, svc, _, _, ds = setup
+    assert svc.latency.reason_time() == svc.latency.reason_scale
+    p = AutoRagPipeline(ds, None, svc)
+    assert p.reasoning_latency == svc.latency.reason_scale
+    assert AutoRagPipeline(ds, None, svc,
+                           reasoning_latency=0.7).reasoning_latency == 0.7
+    r = p.run(ds.sample(8, seed=2))
+    # e2e == retrieval + hops x reason, exactly, on the sequential arm
+    assert r["e2e_latency"] == pytest.approx(
+        r["retrieval_latency"] + 2 * svc.latency.reason_scale)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler substrate
+# ---------------------------------------------------------------------------
+
+def _agentic_serve(svc, cfg, index, ds, n=48, hops=2, speculate=True,
+                   qps=20.0, **sched_kw):
+    sched = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(
+        max_spec_batch=16, full_batch=8, full_max_wait_s=0.1,
+        speculate_hops=speculate, **sched_kw), index=index)
+    qs = build_hop_trace(ds, ds.sample(n, seed=2, hops=hops), seed=0)
+    arr = poisson_arrivals(n, qps=qps, seed=5)
+    return sched.serve(qs, arr, seed=3)
+
+
+def test_hop_graphs_complete_and_conserve(setup):
+    _, svc, cfg, sched, ds = setup
+    r = _agentic_serve(svc, cfg, sched.index, ds, n=48, hops=3)
+    recs = r.complex_records
+    assert recs is not None and len(recs) == 48
+    assert all(np.isfinite(c["e2e_s"]) for c in recs)
+    # every complex query charged exactly hops x reason_s of thinking
+    reason = svc.latency.reason_scale
+    assert all(c["reason_s"] == pytest.approx(3 * reason) for c in recs)
+    assert all(c["e2e_s"] > c["reason_s"] for c in recs)
+    # span conservation exact through reason + cancelled paths
+    assert np.abs(r.trace.conservation_residual()).max() <= 1e-9
+    assert r.trace.spans["reason"].sum() > 0
+    # per-hop identity threaded into the result arrays: each chain
+    # resolves exactly one NON-speculative request per hop (mis-spec
+    # orphans that outran their parent stay live but flagged
+    # speculative; mis-specs caught in flight land on ``cancelled``)
+    assert r.hop.max() == 3 and (r.hop >= 1).all()
+    resolved = (r.channels != "cancelled") & ~r.speculative
+    for h in (1, 2, 3):
+        assert np.sum((r.hop == h) & resolved) == 48
+    s = r.summary()
+    for k in ("complex_n", "complex_e2e_avg_s", "complex_dar",
+              "complex_accuracy", "hop_prespec_rate",
+              "hop_prespec_hit_rate", "cancelled", "hop1_n", "hop3_dar"):
+        assert k in s, k
+    assert s["complex_n"] == 48 and s["hop1_n"] == 48
+
+
+def test_prespec_pipelines_and_cancels_cleanly(setup):
+    # moderate load: saturation would queue the pre-speculated hops
+    # behind everything else and drown the head start they buy
+    _, svc, cfg, sched, ds = setup
+    r_on = _agentic_serve(svc, cfg, sched.index, ds, speculate=True,
+                          qps=10.0)
+    r_off = _agentic_serve(svc, cfg, sched.index, ds, speculate=False,
+                           qps=10.0)
+    s_on, s_off = r_on.summary(), r_off.summary()
+    # same work, equal quality, strictly faster with the head start
+    assert s_on["complex_n"] == s_off["complex_n"] == 48
+    assert s_on["complex_e2e_avg_s"] < s_off["complex_e2e_avg_s"]
+    assert s_on["hop_prespec_rate"] > 0
+    assert s_off["hop_prespec_rate"] == 0 and s_off["cancelled"] == 0
+    assert (r_off.channels != "cancelled").all()
+    # mis-speculations happen and settle on the cancelled channel
+    cancelled = r_on.channels == "cancelled"
+    assert s_on["cancelled"] == cancelled.sum() > 0
+    assert r_on.speculative is not None
+    # cancelled rows never ingest and carry sentinel ids
+    assert not r_on.trace.spans["ingest"][cancelled].any()
+    assert (r_on.served_ids[cancelled] == -1).all()
+    # every cancelled row is a pre-speculated follow-up hop, never hop 1
+    assert (r_on.hop[cancelled] > 1).all()
+    # conservation holds on both arms
+    for r in (r_on, r_off):
+        assert np.abs(r.trace.conservation_residual()).max() <= 1e-9
+
+
+def test_agentic_trace_replays_bit_exactly(setup):
+    _, svc, cfg, sched, ds = setup
+    a = _agentic_serve(svc, cfg, sched.index, ds)
+    b = _agentic_serve(svc, cfg, sched.index, ds)
+    assert list(a.channels) == list(b.channels)
+    assert np.array_equal(a.t_done, b.t_done)
+    assert np.array_equal(a.served_ids, b.served_ids)
+    assert np.array_equal(a.hop, b.hop)
+
+
+# golden hashes shared with tests/test_edge_pool.py (charged accounting):
+# the agentic machinery must not move a single bit of a plain trace
+_GOLDEN_POISSON = ("ee529472ed19175fb3b357b75a2348a1",
+                   "ce77d205b924b6639b8b0e61f3e6f769",
+                   "bde019df4c7b6738d1b80507a91574ce")
+_GOLDEN_SATURATED = ("818904a0aba858b52dc05f954ac76e94",
+                     "58946f966a201cd50552d6eb2613e47d",
+                     "3806ef068db5ea2db34da56effc252bd")
+
+
+def _trace_hashes(r):
+    return (hashlib.md5(",".join(r.channels).encode()).hexdigest(),
+            hashlib.md5(np.round(r.t_done, 9).tobytes()).hexdigest(),
+            hashlib.md5(r.served_ids.tobytes()).hexdigest())
+
+
+def test_plain_trace_bit_identical_to_pre_pr_goldens(setup):
+    world, svc, cfg, sched, _ = setup
+    gds = DATASETS["granola"]
+    qs = world.sample_queries(160, pattern=gds["pattern"],
+                              zipf_a=gds["zipf_a"],
+                              p_uncovered=gds["p_uncovered"], seed=1)
+    arr = poisson_arrivals(160, qps=30.0, seed=5)
+    r = sched.serve(qs, arr, seed=3)
+    assert _trace_hashes(r) == _GOLDEN_POISSON
+    assert _trace_hashes(sched.serve(qs, None, seed=3)) == _GOLDEN_SATURATED
+    # and the agentic surfaces stay inert: no hop identity, no records
+    assert r.complex_records is None
+    assert not r.trace.spans["reason"].any()
+
+
+# ---------------------------------------------------------------------------
+# Chaos smoke: hop graphs under the full fault cocktail
+# ---------------------------------------------------------------------------
+
+def test_chaos_smoke_mixed_agentic_trace():
+    import jax.numpy as jnp
+
+    from repro.retrieval.service import ShardedMeshBackend
+    world = SyntheticWorld(WorldConfig(n_entities=400, seed=0))
+    lat = LatencyModel()
+    backend = ShardedMeshBackend(jnp.asarray(world.doc_emb), 10, lat,
+                                 n_shards=4, n_workers=4)
+    svc = RetrievalService(world, lat, k=10, chunk=2048, backend=backend)
+    cfg = HasConfig(k=10, tau=0.2, h_max=400, nprobe=4, n_buckets=256, d=64)
+    gds = DATASETS["granola"]
+    qs = world.sample_queries(96, pattern=gds["pattern"],
+                              zipf_a=gds["zipf_a"],
+                              p_uncovered=gds["p_uncovered"], seed=1)
+    ds = TwoHopDataset(world, seed=0)
+    hop1 = build_hop_trace(ds, ds.sample(24, seed=2), seed=0)
+    slots = np.sort(np.random.default_rng(8).choice(96, 24, replace=False))
+    for i, q in zip(slots, hop1):
+        qs[int(i)] = q
+    plan = FaultPlan(events=(
+        FaultEvent(t=0.3, kind="straggler", target=1, duration_s=2.0,
+                   factor=6.0),
+        FaultEvent(t=0.5, kind="worker_crash", target=0, down_s=1.0),
+        FaultEvent(t=0.8, kind="search_fail", target=2, duration_s=1.0),
+        FaultEvent(t=0.6, kind="delta_drop", count=2),
+    ))
+
+    def serve():
+        sched = ContinuousBatchingScheduler(svc, cfg, SchedulerConfig(
+            max_spec_batch=16, full_batch=8, full_max_wait_s=0.1,
+            edge_replicas=2, fault_plan=plan), seed=0)
+        return sched.serve(qs, poisson_arrivals(96, qps=40.0, seed=5),
+                           seed=3)
+
+    a, b = serve(), serve()
+    assert list(a.channels) == list(b.channels)
+    assert np.array_equal(a.t_done, b.t_done)
+    assert np.array_equal(a.served_ids, b.served_ids)
+    # every request reached a terminal channel and spans conserve
+    assert (a.t_done >= 0).all()
+    assert np.abs(a.trace.conservation_residual()).max() <= 1e-9
+    # the agentic slice actually exercised the fault window
+    assert a.complex_records is not None and len(a.complex_records) == 24
+    done = [c for c in a.complex_records if np.isfinite(c["e2e_s"])]
+    assert len(done) > 0
+
+
+# ---------------------------------------------------------------------------
+# CLI validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("flags", [
+    ["--engine", "sched", "--agentic-frac", "1.5"],
+    ["--engine", "sched", "--agentic-frac", "0.3", "--hops", "0"],
+    ["--engine", "has", "--agentic-frac", "0.3"],
+])
+def test_serve_cli_rejects_bad_agentic_flags(flags):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--queries", "8"]
+        + flags,
+        capture_output=True, text=True, env=env, timeout=120, cwd=REPO)
+    assert p.returncode == 2, p.stderr
+    assert "agentic" in p.stderr or "hops" in p.stderr
